@@ -1,0 +1,88 @@
+"""Generate the §Dry-run and §Roofline markdown tables from the sweep JSON.
+
+    PYTHONPATH=src:. python -m benchmarks.make_experiments_tables > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../experiments/dryrun_results.json")
+ARCHS = [
+    "granite-20b", "stablelm-1.6b", "qwen1.5-32b", "llama3-8b",
+    "recurrentgemma-2b", "dbrx-132b", "grok-1-314b", "whisper-large-v3",
+    "xlstm-350m", "phi-3-vision-4.2b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+EXTRA = [("deformable-detr", "detr_1k")]
+HBM_PER_CHIP = 16e9
+
+
+def gb(x):
+    return f"{x/1e9:.2f}" if x is not None else "-"
+
+
+def main() -> None:
+    with open(os.path.abspath(RESULTS)) as f:
+        r = json.load(f)
+
+    print("### Dry-run (both meshes)\n")
+    print("| arch | shape | mesh | status | compile_s | bytes/dev (arg+temp) GB | fits 16GB | collectives (count) | wire GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("single", "multi"):
+                c = r.get(f"{a}|{s}|{m}")
+                if c is None:
+                    continue
+                if c["status"] == "skip":
+                    if m == "single":
+                        print(f"| {a} | {s} | both | skip — {c['reason']} | | | | | |")
+                    continue
+                mem = c["memory"]
+                args_b = mem.get("argument_size_in_bytes") or 0
+                temp_b = mem.get("temp_size_in_bytes") or 0
+                alias = mem.get("alias_size_in_bytes") or 0
+                per_dev = args_b + temp_b - alias
+                fits = "YES" if per_dev <= HBM_PER_CHIP else f"**NO ({per_dev/1e9:.1f}GB)**"
+                coll = c["collectives"]
+                per_t = ", ".join(f"{k.split('-')[-1][:6]}:{gb(v)}G" for k, v in
+                                  sorted(coll["per_type"].items()))
+                print(f"| {a} | {s} | {m} | ok | {c['t_compile']:.1f} | "
+                      f"{per_dev/1e9:.2f} | {fits} | {coll['count']} | "
+                      f"{coll['wire_bytes']/1e9:.2f} |")
+    for a, sh in EXTRA:
+        for m in ("single", "multi"):
+            c = r.get(f"{a}|{sh}|{m}")
+            if not c or c["status"] != "ok":
+                continue
+            mem = c["memory"]
+            per_dev = (mem.get("argument_size_in_bytes") or 0) + (mem.get("temp_size_in_bytes") or 0) - (mem.get("alias_size_in_bytes") or 0)
+            fits = "YES" if per_dev <= HBM_PER_CHIP else f"**NO ({per_dev/1e9:.1f}GB)**"
+            coll = c["collectives"]
+            print(f"| {a} | {sh} | {m} | ok | {c['t_compile']:.1f} | "
+                  f"{per_dev/1e9:.2f} | {fits} | {coll['count']} | "
+                  f"{coll['wire_bytes']/1e9:.2f} |")
+    print()
+    print("### Roofline (single-pod, 256 chips; per-chip terms, seconds)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck | MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS + ["deformable-detr"]:
+        shp = SHAPES if a != "deformable-detr" else ["detr_1k"]
+        for s in shp:
+            c = r.get(f"{a}|{s}|single")
+            if c is None:
+                continue
+            if c["status"] == "skip":
+                print(f"| {a} | {s} | — | — | — | skip ({c['reason'].split('—')[0].strip()}) | | | |")
+                continue
+            ro = c["roofline"]
+            tmax = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+            frac = ro["compute_s"] / tmax if tmax else 0
+            print(f"| {a} | {s} | {ro['compute_s']:.3e} | {ro['memory_s']:.3e} | "
+                  f"{ro['collective_s']:.3e} | {ro['bottleneck']} | "
+                  f"{c['model_flops_global']:.2e} | {c['useful_flops_ratio']:.2f} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

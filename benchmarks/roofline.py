@@ -1,0 +1,79 @@
+"""Roofline table: reads the dry-run results and prints §Roofline rows.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+
+Per (arch x shape): the three terms (compute / memory / collective, in
+seconds), the dominant bottleneck, MODEL_FLOPS = 6·N(_active)·D, the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs x chips), and the roofline
+fraction = max-term utilisation of the ideal (compute-only) time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../experiments/dryrun_results.json")
+
+ARCH_ORDER = [
+    "granite-20b", "stablelm-1.6b", "qwen1.5-32b", "llama3-8b",
+    "recurrentgemma-2b", "dbrx-132b", "grok-1-314b", "whisper-large-v3",
+    "xlstm-350m", "phi-3-vision-4.2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load() -> Dict[str, dict]:
+    with open(os.path.abspath(RESULTS)) as f:
+        return json.load(f)
+
+
+def fmt_row(cell: dict) -> str:
+    r = cell["roofline"]
+    tc, tm, tl = r["compute_s"], r["memory_s"], r["collective_s"]
+    tmax = max(tc, tm, tl)
+    frac = tc / tmax if tmax > 0 else 0.0
+    return (
+        f"{cell['arch']:>18s} {cell['shape']:>11s} | "
+        f"{tc:10.3e} {tm:10.3e} {tl:10.3e} | {r['bottleneck']:>10s} | "
+        f"model_flops {cell['model_flops_global']:9.3e} | "
+        f"useful {cell['useful_flops_ratio']:5.2f} | roofline_frac {frac:5.2f}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    results = load()
+    print(f"# Roofline ({args.mesh}-pod): compute_s   memory_s   collective_s"
+          "  | bottleneck | model_flops | useful | frac")
+    worst, coll = None, None
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            cell = results.get(f"{arch}|{shape}|{args.mesh}")
+            if cell is None:
+                continue
+            if cell["status"] == "skip":
+                print(f"{arch:>18s} {shape:>11s} | skip: {cell['reason']}")
+                continue
+            if cell["status"] != "ok":
+                print(f"{arch:>18s} {shape:>11s} | ERROR")
+                continue
+            print(fmt_row(cell))
+            r = cell["roofline"]
+            tmax = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / tmax if tmax else 0
+            if worst is None or frac < worst[0]:
+                worst = (frac, f"{arch}|{shape}")
+            cfrac = r["collective_s"] / tmax if tmax else 0
+            if coll is None or cfrac > coll[0]:
+                coll = (cfrac, f"{arch}|{shape}")
+    if worst:
+        print(f"\nworst roofline fraction: {worst[1]} ({worst[0]:.3f})")
+        print(f"most collective-bound:   {coll[1]} ({coll[0]:.3f} of step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the xMSDA op in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import msda, plan_blocks
+from repro.kernels.ref import msda_grid_sample_baseline, msda_ref
+
+# a small multi-scale feature pyramid: 3 levels, 2 heads x 16 dims
+levels = ((32, 32), (16, 16), (8, 8))
+B, Q, H, D, P = 2, 500, 2, 16, 4
+S = sum(h * w for h, w in levels)
+
+key = jax.random.PRNGKey(0)
+kv, kl, ka = jax.random.split(key, 3)
+value = jax.random.normal(kv, (B, S, H, D))                      # (B, S, H, D)
+loc = jax.random.uniform(kl, (B, Q, H, len(levels), P, 2))       # in [0, 1]
+attn = jax.nn.softmax(
+    jax.random.normal(ka, (B, Q, H, len(levels), P)).reshape(B, Q, H, -1)
+).reshape(B, Q, H, len(levels), P)
+
+# three implementations of the same op
+out_base = msda_grid_sample_baseline(value, levels, loc, attn)  # paper "Baseline"
+out_ref = msda_ref(value, levels, loc, attn)                    # fused oracle
+out_pal = msda(value, levels, loc, attn, backend="pallas")      # xMSDA kernels
+print("baseline vs ref  max err:", float(jnp.abs(out_base - out_ref).max()))
+print("pallas   vs ref  max err:", float(jnp.abs(out_pal - out_ref).max()))
+
+# it differentiates (custom VJP: fused bwd kernels with scatter-add)
+grads = jax.grad(
+    lambda v, l, a: jnp.sum(msda(v, levels, l, a, backend="pallas", train=True) ** 2),
+    argnums=(0, 1, 2),
+)(value, loc, attn)
+print("grad shapes:", [g.shape for g in grads])
+
+# the adaptive block plan (paper Fig. 7): bigger levels -> smaller blocks
+print("block plan:", plan_blocks(levels, P, D, Q))
+
+# CPU timing: fused vs materialising baseline
+f_ref = jax.jit(lambda v, l, a: msda_ref(v, levels, l, a))
+f_base = jax.jit(lambda v, l, a: msda_grid_sample_baseline(v, levels, l, a))
+for name, f in (("fused", f_ref), ("baseline", f_base)):
+    jax.block_until_ready(f(value, loc, attn))
+    t = time.perf_counter()
+    for _ in range(20):
+        jax.block_until_ready(f(value, loc, attn))
+    print(f"{name:9s}: {(time.perf_counter() - t) / 20 * 1e3:.2f} ms/call")

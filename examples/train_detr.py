@@ -1,0 +1,80 @@
+"""End-to-end: train a deformable-DETR detector with MSDA encoders.
+
+The paper's host workload: every encoder layer runs multi-scale
+deformable attention over the feature pyramid.  Synthetic detection
+data (boxes whose pyramid features carry a planted signature) — the
+loss drops as MSDA learns to pool the right locations.
+
+    PYTHONPATH=src python examples/train_detr.py --steps 150
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import get_config, reduced
+from repro.core import deformable_transformer as dt
+from repro.optim import adamw, schedule
+from repro.train import state as train_state
+
+
+def synth_batch(cfg, key, B=4, T=3):
+    """Boxes + labels; the pyramid gets a bump at each object's center."""
+    mc = cfg.msda
+    kb, kl, kf = jax.random.split(key, 3)
+    boxes = jax.random.uniform(kb, (B, T, 4), minval=0.2, maxval=0.8)
+    labels = jax.random.randint(kl, (B, T), 1, cfg.vocab_size)
+    sp = sum(h * w for h, w in mc.levels)
+    pyr = jax.random.normal(kf, (B, sp, cfg.d_model)) * 0.05
+    # plant a label-dependent signature at each object's center pixel
+    offset = 0
+    for (h, w) in mc.levels:
+        cx = jnp.clip((boxes[..., 0] * w).astype(int), 0, w - 1)
+        cy = jnp.clip((boxes[..., 1] * h).astype(int), 0, h - 1)
+        flat = offset + cy * w + cx  # (B,T)
+        sig = jax.nn.one_hot(labels % cfg.d_model, cfg.d_model) * 2.0
+        pyr = pyr.at[jnp.arange(B)[:, None], flat].add(sig)
+        offset += h * w
+    return {"pyramid": pyr, "labels": labels, "boxes": boxes}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("deformable-detr"))
+    params = dt.init_detr(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_adamw(params)
+
+    @jax.jit
+    def step(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: dt.detr_loss(p, cfg, batch, remat=False)
+        )(params)
+        params, opt, gnorm = adamw.adamw_update(grads, opt, params, lr=lr)
+        return params, opt, loss, gnorm
+
+    t0 = time.time()
+    first = None
+    for s in range(args.steps):
+        batch = synth_batch(cfg, jax.random.PRNGKey(1000 + s))
+        lr = schedule.warmup_cosine(jnp.asarray(s), peak_lr=args.lr,
+                                    warmup_steps=10, total_steps=args.steps)
+        params, opt, loss, gnorm = step(params, opt, batch, lr)
+        first = first if first is not None else float(loss)
+        if s % 10 == 0 or s == args.steps - 1:
+            print(f"step {s:4d}  loss {float(loss):7.4f}  gnorm {float(gnorm):6.2f}"
+                  f"  ({(time.time()-t0)/(s+1):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (s + 1) % 50 == 0:
+            ckpt.save({"params": params, "step": jnp.asarray(s)}, args.ckpt_dir, s + 1)
+    print(f"loss {first:.3f} -> {float(loss):.3f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""granite-20b: dense llama-arch code model, 52L, MQA (kv=1).
+
+[arXiv:2405.04324; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,   # MQA
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    gated_mlp=False,   # GPT-BigCode-style dense MLP
+    act="gelu",
+    norm_type="layernorm",
+    source="arXiv:2405.04324 (Granite Code Models); hf",
+))

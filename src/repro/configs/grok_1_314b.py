@@ -1,0 +1,21 @@
+"""grok-1-314b: MoE 8 experts top-2, GQA kv=8.
+
+[hf:xai-org/grok-1; unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    head_dim=128,
+    moe=MoEConfig(num_experts=8, top_k=2),
+    gated_mlp=True,
+    act="gelu",
+    source="hf:xai-org/grok-1; unverified",
+))

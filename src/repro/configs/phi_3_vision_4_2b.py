@@ -1,0 +1,32 @@
+"""phi-3-vision-4.2b: phi3-mini backbone + CLIP stub frontend.
+
+The vision tower is a STUB (input_specs provides precomputed multi-scale
+patch-feature maps); this repo wires the paper's MSDA op as the
+multi-scale visual resampler pooling the pyramid into visual tokens —
+the one assigned arch where the paper's technique applies natively.
+
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+"""
+from repro.configs.base import ModelConfig, VisionConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    head_dim=96,
+    gated_mlp=True,
+    act="silu",
+    vision=VisionConfig(
+        num_visual_tokens=144,
+        vision_dim=1024,
+        levels=((32, 32), (16, 16), (8, 8)),
+        msda_points=4,
+        msda_heads=8,
+    ),
+    source="hf:microsoft/Phi-3-vision-128k-instruct; hf",
+))

@@ -1,0 +1,21 @@
+"""qwen1.5-32b: dense with QKV bias, 64L.
+
+[hf:Qwen/Qwen1.5-0.5B (family); hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    gated_mlp=True,
+    act="silu",
+    source="hf:Qwen/Qwen1.5-32B; hf",
+))

@@ -1,0 +1,27 @@
+"""recurrentgemma-2b: Griffin-style hybrid — RG-LRU + local attention, 1:2.
+
+26 layers, repeating (rglru, rglru, local-attn); MQA kv=1; window 2048.
+Sub-quadratic: runs long_500k.
+
+[arXiv:2402.19427 (Griffin); hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256000,
+    head_dim=256,
+    gated_mlp=True,
+    act="gelu",
+    block_pattern=("rglru", "rglru", "local"),
+    window=2048,
+    lru_width=2560,
+    tie_embeddings=True,
+    source="arXiv:2402.19427; hf:google/recurrentgemma-2b",
+))

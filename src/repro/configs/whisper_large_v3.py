@@ -1,0 +1,26 @@
+"""whisper-large-v3: encoder-decoder audio backbone; conv frontend STUB.
+
+32 decoder layers (per spec); encoder 32L over 1500 precomputed frame
+embeddings supplied by input_specs() (the mel+conv frontend is a stub per
+the assignment).
+
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import EncoderConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    head_dim=64,
+    gated_mlp=False,
+    act="gelu",
+    norm_type="layernorm",
+    encoder=EncoderConfig(num_layers=32, num_frames=1500),
+    source="arXiv:2212.04356 (Whisper); unverified",
+))

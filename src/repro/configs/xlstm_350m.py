@@ -1,0 +1,25 @@
+"""xlstm-350m: alternating sLSTM + mLSTM blocks, attention-free.
+
+d_ff=0 per spec — xLSTM blocks carry their own up/down projections.
+Sub-quadratic (constant recurrent state): runs long_500k.
+
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=256,
+    gated_mlp=False,
+    act="gelu",
+    block_pattern=("mlstm", "slstm"),
+    tie_embeddings=True,
+    source="arXiv:2405.04517 (xLSTM); unverified",
+))

@@ -1,0 +1,103 @@
+"""Deterministic, restart-safe data pipeline.
+
+Batches are a pure function of ``(seed, step)`` so a job restored from a
+checkpoint at step k regenerates exactly the batches it would have seen
+— the data side of fault tolerance.  Two sources:
+
+* synthetic token streams (structured, learnable: repeated n-gram
+  processes, not uniform noise — loss actually decreases);
+* a byte-tokenised text file (for the end-to-end examples).
+
+A background prefetcher overlaps host-side batch synthesis with device
+compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.data import tokenizer
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    source: str = "synthetic"  # 'synthetic' | 'file'
+    path: Optional[str] = None
+
+
+def _synthetic_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Markov stream: next token = fixed affine rule(prev) + noise.
+
+    The rule is a function of the SEED only (not the step/sequence), so
+    it is learnable; loss decreases from ln(V) toward the noise floor.
+    """
+    rule_rng = np.random.default_rng(cfg.seed)
+    V = cfg.vocab_size
+    a = int(rule_rng.integers(1, 97))
+    b = int(rule_rng.integers(0, V))
+    rng = np.random.default_rng((cfg.seed, step))
+    B, S = cfg.global_batch, cfg.seq_len
+    x0 = rng.integers(0, V, size=(B, 1))
+    toks = np.zeros((B, S + 1), np.int64)
+    toks[:, :1] = x0
+    for t in range(1, S + 1):
+        nxt = (a * toks[:, t - 1 : t] + b) % V
+        noise = rng.integers(0, V, size=(B, 1))
+        use_noise = rng.random((B, 1)) < 0.05
+        toks[:, t : t + 1] = np.where(use_noise, noise, nxt)
+    return {"tokens": toks[:, :-1].astype(np.int32), "targets": toks[:, 1:].astype(np.int32)}
+
+
+class FileSource:
+    def __init__(self, path: str):
+        with open(path, "rb") as f:
+            raw = f.read().decode("utf-8", errors="replace")
+        self.ids = np.asarray(tokenizer.encode(raw, add_bos=False), np.int32)
+
+    def batch(self, cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S = cfg.global_batch, cfg.seq_len
+        n = len(self.ids) - (S + 1)
+        starts = rng.integers(0, max(n, 1), size=(B,))
+        rows = np.stack([self.ids[s : s + S + 1] for s in starts])
+        return {"tokens": rows[:, :-1], "targets": rows[:, 1:]}
+
+
+class Pipeline:
+    """step -> batch, with deterministic regeneration and prefetch."""
+
+    def __init__(self, cfg: DataConfig, prefetch: int = 2):
+        self.cfg = cfg
+        self._file = FileSource(cfg.path) if cfg.source == "file" else None
+        self._prefetch = prefetch
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        if self._file is not None:
+            return self._file.batch(self.cfg, step)
+        return _synthetic_batch(self.cfg, step)
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        q: queue.Queue = queue.Queue(maxsize=self._prefetch)
+        stop = threading.Event()
+
+        def producer():
+            s = start_step
+            while not stop.is_set():
+                q.put(self.batch(s))
+                s += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,29 @@
+"""Byte-level tokenizer with a small reserved-special-token header.
+
+Good enough for end-to-end training examples without external vocab
+files: token = byte + N_SPECIAL, ids < N_SPECIAL are specials.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 16
+
+
+def encode(text: str, *, add_bos: bool = True, add_eos: bool = False) -> List[int]:
+    ids = [b + N_SPECIAL for b in text.encode("utf-8")]
+    if add_bos:
+        ids = [BOS] + ids
+    if add_eos:
+        ids = ids + [EOS]
+    return ids
+
+
+def decode(ids) -> str:
+    data = bytes(i - N_SPECIAL for i in ids if i >= N_SPECIAL)
+    return data.decode("utf-8", errors="replace")
+
+
+def vocab_size() -> int:
+    return 256 + N_SPECIAL

@@ -1,0 +1,208 @@
+"""Pallas-TPU backward kernel for multi-scale deformable attention.
+
+Paper mapping (xMSDA §4.2 → TPU):
+
+* Phase 1 (grad w.r.t. sampling locations + attention weights) is pure
+  element-wise vector math over the bilinear corners.  In train mode the
+  corners were **saved by the forward kernel** (paper §4.1) so phase 1
+  issues no gathers at all; otherwise it re-gathers (fused, like fwd).
+* Phase 2 (grad w.r.t. value) is the scatter-add hotspot.  The paper
+  staggers vector-core phases to reduce GM write contention; on TPU the
+  Pallas grid is *sequential per TensorCore*, so we instead keep the
+  whole level's ``grad_value`` slab **resident in VMEM** and scatter-add
+  into it across query blocks — contention-free by construction, with a
+  single UB→GM (VMEM→HBM) writeback when the (batch, head) block
+  retires.  Cross-core/chip parallelism gets per-shard partial slabs
+  reduced by ``psum`` at the distribution layer (see
+  ``core/msda.py``) — the TPU-idiomatic equivalent of staggered writes.
+* **Scatter fusion**: all four corners × P points of a query block are
+  scattered with ONE batched ``.at[idx].add`` (duplicate indices
+  accumulate); the ablation flag ``fuse_scatter=False`` issues four
+  per-corner scatters (the paper's "-Scatter Fusion" column).
+
+Outputs per level: grad_value slab (fp32, padded layout), grad_loc,
+grad_attn.  Grid ``(B, H, num_q_blocks)`` with the grad slab revisited
+(accumulated in VMEM) across the innermost ``q`` dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.msda_fwd import corner_indices
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+
+def _bwd_kernel(
+    value_ref,  # (1, 1, HWp, D) VMEM-resident level slab (None if saved)
+    loc_ref,    # (1, 1, Qb, P, 2)
+    attn_ref,   # (1, 1, Qb, P)
+    gout_ref,   # (1, 1, Qb, D)
+    saved_ref,  # (1, 1, Qb, 4P, D) corners saved by fwd (None if regather)
+    gval_ref,   # out: (1, 1, HWp, D) fp32, accumulated across q blocks
+    gloc_ref,   # out: (1, 1, Qb, P, 2)
+    gattn_ref,  # out: (1, 1, Qb, P)
+    *,
+    H: int,
+    W: int,
+    Wp: int,
+    fuse_scatter: bool,
+    onehot_scatter: bool = False,
+):
+    q_idx = pl.program_id(2)
+
+    loc = loc_ref[0, 0].astype(jnp.float32)  # (Qb, P, 2)
+    attn = attn_ref[0, 0].astype(jnp.float32)  # (Qb, P)
+    gout = gout_ref[0, 0].astype(jnp.float32)  # (Qb, D)
+    Qb, P, _ = loc.shape
+    D = gout.shape[-1]
+
+    idx00, lx, ly, (m00, m10, m01, m11) = corner_indices(loc, H, W, Wp)
+    i00 = idx00.reshape(-1)  # (Qb*P,)
+
+    # ---- corners: saved by fwd (no gather) or re-gathered (fused) --------
+    if saved_ref is not None:
+        corners = saved_ref[0, 0].astype(jnp.float32)  # (Qb, 4P, D)
+        v00, v10, v01, v11 = jnp.split(corners, 4, axis=1)
+    else:
+        all_idx = jnp.concatenate([i00, i00 + 1, i00 + Wp, i00 + Wp + 1])
+        g = jnp.take(value_ref[0, 0], all_idx, axis=0).astype(jnp.float32)
+        v00, v10, v01, v11 = (x.reshape(Qb, P, D) for x in jnp.split(g, 4, axis=0))
+    v00 = v00.reshape(Qb, P, D) * m00[..., None]
+    v10 = v10.reshape(Qb, P, D) * m10[..., None]
+    v01 = v01.reshape(Qb, P, D) * m01[..., None]
+    v11 = v11.reshape(Qb, P, D) * m11[..., None]
+
+    w00 = ((1 - lx) * (1 - ly))[..., None]  # (Qb,P,1)
+    w10 = (lx * (1 - ly))[..., None]
+    w01 = ((1 - lx) * ly)[..., None]
+    w11 = (lx * ly)[..., None]
+
+    # ---- phase 1: vector-only grads (paper: element-wise vector ops) -----
+    sampled = v00 * w00 + v10 * w10 + v01 * w01 + v11 * w11  # (Qb,P,D)
+    gattn_ref[0, 0] = jnp.einsum("qd,qpd->qp", gout, sampled).astype(gattn_ref.dtype)
+
+    g_s = attn[..., None] * gout[:, None, :]  # (Qb,P,D): dL/d(sampled)
+    # d sampled / d px = (v10 - v00)(1-ly) + (v11 - v01) ly   (masked corners
+    # are zeroed, matching grid_sample zero-padding gradients)
+    dpx = ((v10 - v00) * (1 - ly)[..., None] + (v11 - v01) * ly[..., None])
+    dpy = ((v01 - v00) * (1 - lx)[..., None] + (v11 - v10) * lx[..., None])
+    glx = jnp.einsum("qpd,qpd->qp", g_s, dpx) * W
+    gly = jnp.einsum("qpd,qpd->qp", g_s, dpy) * H
+    gloc_ref[0, 0] = jnp.stack([glx, gly], axis=-1).astype(gloc_ref.dtype)
+
+    # ---- phase 2: scatter-add grad_value into the resident slab ----------
+    @pl.when(q_idx == 0)
+    def _init():
+        gval_ref[0, 0] = jnp.zeros_like(gval_ref[0, 0])
+
+    c00 = (g_s * w00 * m00[..., None]).reshape(-1, D)
+    c10 = (g_s * w10 * m10[..., None]).reshape(-1, D)
+    c01 = (g_s * w01 * m01[..., None]).reshape(-1, D)
+    c11 = (g_s * w11 * m11[..., None]).reshape(-1, D)
+    slab = gval_ref[0, 0]
+    if onehot_scatter:
+        # Beyond-paper MXU path: scatter-add as a transposed one-hot
+        # matmul (HWp, 4QbP) @ (4QbP, D) — contention-free by algebra
+        # (duplicate indices sum inside the dot), no serialized scatter.
+        all_idx = jnp.concatenate([i00, i00 + 1, i00 + Wp, i00 + Wp + 1])
+        contrib = jnp.concatenate([c00, c10, c01, c11], axis=0)
+        onehot = (jnp.arange(slab.shape[0])[:, None] == all_idx[None, :]).astype(
+            jnp.float32
+        )
+        gval_ref[0, 0] = slab + (onehot @ contrib).astype(slab.dtype)
+    elif fuse_scatter:
+        all_idx = jnp.concatenate([i00, i00 + 1, i00 + Wp, i00 + Wp + 1])
+        contrib = jnp.concatenate([c00, c10, c01, c11], axis=0)
+        gval_ref[0, 0] = slab.at[all_idx].add(contrib.astype(slab.dtype))
+    else:
+        # ablation: four separate per-corner scatters
+        slab = slab.at[i00].add(c00.astype(slab.dtype))
+        slab = slab.at[i00 + 1].add(c10.astype(slab.dtype))
+        slab = slab.at[i00 + Wp].add(c01.astype(slab.dtype))
+        slab = slab.at[i00 + Wp + 1].add(c11.astype(slab.dtype))
+        gval_ref[0, 0] = slab
+
+
+def msda_bwd_level(
+    value_l: Optional[jax.Array],  # (B, H, HWp, D) or None when saved given
+    loc_l: jax.Array,              # (B, H, Q, P, 2)
+    attn_l: jax.Array,             # (B, H, Q, P)
+    gout: jax.Array,               # (B, H, Q, D)
+    saved_l: Optional[jax.Array],  # (B, H, Q, 4P, D) or None
+    *,
+    hw: Tuple[int, int],
+    hwp_rows: int,
+    block_q: int,
+    fuse_scatter: bool = True,
+    onehot_scatter: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-level backward. Returns (grad_value_slab fp32, grad_loc, grad_attn)."""
+    B, Hh, Q, P, _ = loc_l.shape
+    D = gout.shape[-1]
+    Hl, Wl = hw
+    Wp = Wl + 2
+    assert Q % block_q == 0, (Q, block_q)
+    nq = Q // block_q
+
+    kernel = functools.partial(
+        _bwd_kernel, H=Hl, W=Wl, Wp=Wp, fuse_scatter=fuse_scatter,
+        onehot_scatter=onehot_scatter,
+    )
+
+    in_specs = []
+    operands = []
+    if saved_l is None:
+        assert value_l is not None
+        in_specs.append(pl.BlockSpec((1, 1, hwp_rows, D), lambda b, h, q: (b, h, 0, 0)))
+        operands.append(value_l)
+        kernel_fn = functools.partial(_regather_wrap, kernel)
+    else:
+        in_specs.append(
+            pl.BlockSpec((1, 1, block_q, 4 * P, D), lambda b, h, q: (b, h, q, 0, 0))
+        )
+        operands.append(saved_l)
+        kernel_fn = functools.partial(_saved_wrap, kernel)
+    in_specs += [
+        pl.BlockSpec((1, 1, block_q, P, 2), lambda b, h, q: (b, h, q, 0, 0)),
+        pl.BlockSpec((1, 1, block_q, P), lambda b, h, q: (b, h, q, 0)),
+        pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0)),
+    ]
+    operands += [loc_l, attn_l, gout]
+
+    gval, gloc, gattn = pl.pallas_call(
+        kernel_fn,
+        grid=(B, Hh, nq),
+        in_specs=in_specs,
+        out_specs=[
+            # grad slab: revisited/accumulated across q, written back once
+            pl.BlockSpec((1, 1, hwp_rows, D), lambda b, h, q: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, P, 2), lambda b, h, q: (b, h, q, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, P), lambda b, h, q: (b, h, q, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hh, hwp_rows, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hh, Q, P, 2), loc_l.dtype),
+            jax.ShapeDtypeStruct((B, Hh, Q, P), attn_l.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+    return gval, gloc, gattn
+
+
+def _regather_wrap(kernel, value_ref, loc_ref, attn_ref, gout_ref, gval_ref, gloc_ref, gattn_ref):
+    kernel(value_ref, loc_ref, attn_ref, gout_ref, None, gval_ref, gloc_ref, gattn_ref)
+
+
+def _saved_wrap(kernel, saved_ref, loc_ref, attn_ref, gout_ref, gval_ref, gloc_ref, gattn_ref):
+    kernel(None, loc_ref, attn_ref, gout_ref, saved_ref, gval_ref, gloc_ref, gattn_ref)

@@ -1,0 +1,202 @@
+"""Pallas-TPU forward kernel for multi-scale deformable attention.
+
+Paper mapping (xMSDA §4.1 → TPU):
+
+* Per-level processing with the level's padded feature map **resident in
+  VMEM** across all query blocks (the paper's "single-channel feature
+  map fits UB" insight; TPU VMEM holds the whole per-(batch, head) level
+  slab, all channels).
+* **Gather fusion**: all four bilinear corners × P points of a query
+  block are gathered with ONE batched index vector — the TPU analogue of
+  the paper's pixel-pair merged gather (x-adjacent corners are adjacent
+  rows ``idx`` / ``idx+1`` of the row-major ``(HW, D)`` slab and ride the
+  same gather op, maximising effective vector length, the quantity the
+  paper's Fig. 4 shows drives gather throughput).  The ablation flag
+  ``fuse_gather=False`` issues four separate per-corner gathers instead.
+* **Padding-based alignment fix**: each level is zero-padded to
+  ``(H+1, W+1)`` so ``x0+1`` / ``y0+1`` never leave the slab and the
+  merged pair load is always legal (paper Fig. 6, re-motivated: TPU has
+  no unaligned-gather erratum, but the same padding makes the corner
+  arithmetic branch-free).  Out-of-bounds corners are masked on the
+  *weights*, reproducing ``grid_sample(padding_mode='zeros')``.
+* **Adaptive vec-len**: the query-block size ``block_q`` is planned per
+  level so (slab + gathered corners + temporaries) fill the VMEM budget
+  (paper Fig. 7). See ``ops.plan_blocks``.
+* **Train mode** (``save_sampled``): the kernel additionally streams the
+  gathered corner values to HBM for the backward pass (paper §4.1 "store
+  the gather result ... additional IO"), trading fwd MTE3 traffic for a
+  gather-free backward phase 1.
+
+Grid: ``(B, H, num_q_blocks)`` — ``q`` innermost so the value slab block
+``(1, 1, HW_pad, D)`` is revisited (stays in VMEM) across query blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+
+def corner_indices(loc, H: int, W: int, Wp: int):
+    """Bilinear corner bookkeeping shared by fwd/bwd kernels.
+
+    loc: (..., 2) fp32 in [0,1] (x, y), grid_sample(align_corners=False).
+    Returns (idx00, lx, ly, masks) where ``idx00`` indexes the padded
+    row-major slab of width ``Wp = W + 2`` whose real image origin sits
+    at pixel (1, 1) — one LEADING and one TRAILING zero pad row/column.
+    The x-pair partner is ``idx + 1`` and the y-pair partner ``idx + Wp``;
+    with ``x0`` clipped into ``[-1, W-1]`` every pair lands in-slab and
+    clipped-to-pad corners read zeros.  masks = (m00, m10, m01, m11)
+    validity of each corner (required: e.g. ``x0 = -5`` clips to ``-1``
+    whose +1 partner would read real column 0).
+    """
+    px = loc[..., 0] * W - 0.5
+    py = loc[..., 1] * H - 0.5
+    x0f = jnp.floor(px)
+    y0f = jnp.floor(py)
+    lx = px - x0f
+    ly = py - y0f
+    x0 = x0f.astype(jnp.int32)
+    y0 = y0f.astype(jnp.int32)
+    vx0 = (x0 >= 0) & (x0 < W)
+    vx1 = (x0 + 1 >= 0) & (x0 + 1 < W)
+    vy0 = (y0 >= 0) & (y0 < H)
+    vy1 = (y0 + 1 >= 0) & (y0 + 1 < H)
+    # clip into [-1, W-1]; +1 shift lands on the padded origin
+    x0c = jnp.clip(x0, -1, W - 1) + 1
+    y0c = jnp.clip(y0, -1, H - 1) + 1
+    idx00 = y0c * Wp + x0c
+    masks = (vx0 & vy0, vx1 & vy0, vx0 & vy1, vx1 & vy1)
+    return idx00, lx, ly, masks
+
+
+def _fwd_kernel(
+    value_ref,  # (1, 1, HWp, D)   VMEM-resident level slab
+    loc_ref,    # (1, 1, Qb, P, 2)
+    attn_ref,   # (1, 1, Qb, P)
+    out_ref,    # (1, 1, Qb, D)
+    saved_ref,  # (1, 1, Qb, P*4, D) or None
+    *,
+    H: int,
+    W: int,
+    Wp: int,
+    fuse_gather: bool,
+    onehot_gather: bool = False,
+):
+    v = value_ref[0, 0]  # (HWp, D)
+    loc = loc_ref[0, 0].astype(jnp.float32)  # (Qb, P, 2)
+    attn = attn_ref[0, 0].astype(jnp.float32)  # (Qb, P)
+    Qb, P, _ = loc.shape
+
+    idx00, lx, ly, (m00, m10, m01, m11) = corner_indices(loc, H, W, Wp)
+    i00 = idx00.reshape(-1)  # (Qb*P,)
+
+    if onehot_gather:
+        # Beyond-paper MXU path (small levels): gather as a one-hot
+        # matmul (4QbP, HWp) @ (HWp, D) — the systolic array does the
+        # "random access".  The Ascend design could not express this
+        # (cube cores cannot address UB); on TPU the MXU sits idle during
+        # VPU gathers, so shifting small-level sampling there overlaps
+        # with the big-level vector path.
+        all_idx = jnp.concatenate([i00, i00 + 1, i00 + Wp, i00 + Wp + 1])
+        onehot = (all_idx[:, None] == jnp.arange(v.shape[0])[None, :]).astype(
+            jnp.float32
+        )
+        g = onehot @ v.astype(jnp.float32)  # (4*Qb*P, D) via MXU
+        v00, v10, v01, v11 = jnp.split(g, 4, axis=0)
+    elif fuse_gather:
+        # ONE batched gather for all corners & points: [x0y0; x1y0; x0y1; x1y1]
+        all_idx = jnp.concatenate([i00, i00 + 1, i00 + Wp, i00 + Wp + 1])
+        g = jnp.take(v, all_idx, axis=0).astype(jnp.float32)  # (4*Qb*P, D)
+        v00, v10, v01, v11 = jnp.split(g, 4, axis=0)
+    else:
+        # ablation: four separate per-corner gathers (halved vec-len twice)
+        v00 = jnp.take(v, i00, axis=0).astype(jnp.float32)
+        v10 = jnp.take(v, i00 + 1, axis=0).astype(jnp.float32)
+        v01 = jnp.take(v, i00 + Wp, axis=0).astype(jnp.float32)
+        v11 = jnp.take(v, i00 + Wp + 1, axis=0).astype(jnp.float32)
+
+    shape = (Qb, P, 1)
+    w00 = ((1 - lx) * (1 - ly) * m00).reshape(shape)
+    w10 = (lx * (1 - ly) * m10).reshape(shape)
+    w01 = ((1 - lx) * ly * m01).reshape(shape)
+    w11 = (lx * ly * m11).reshape(shape)
+
+    D = v.shape[-1]
+    v00 = v00.reshape(Qb, P, D)
+    v10 = v10.reshape(Qb, P, D)
+    v01 = v01.reshape(Qb, P, D)
+    v11 = v11.reshape(Qb, P, D)
+    sampled = v00 * w00 + v10 * w10 + v01 * w01 + v11 * w11  # (Qb,P,D)
+    out = jnp.einsum("qpd,qp->qd", sampled, attn)
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+
+    if saved_ref is not None:
+        # train mode: stream raw corners to HBM for the backward pass
+        corners = jnp.concatenate([v00, v10, v01, v11], axis=1)  # (Qb, 4P, D)
+        saved_ref[0, 0] = corners.astype(saved_ref.dtype)
+
+
+def msda_fwd_level(
+    value_l: jax.Array,  # (B, H, HWp, D) zero-padded level slab
+    loc_l: jax.Array,    # (B, H, Q, P, 2)
+    attn_l: jax.Array,   # (B, H, Q, P)
+    *,
+    hw: Tuple[int, int],
+    block_q: int,
+    fuse_gather: bool = True,
+    save_sampled: bool = False,
+    onehot_gather: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One level's contribution: (B,H,Q,D) partial output (+ saved corners)."""
+    B, Hh, HWp, D = value_l.shape
+    _, _, Q, P, _ = loc_l.shape
+    Hl, Wl = hw
+    Wp = Wl + 2  # leading + trailing pad column
+    assert Q % block_q == 0, (Q, block_q)
+    nq = Q // block_q
+
+    kernel = functools.partial(
+        _fwd_kernel, H=Hl, W=Wl, Wp=Wp, fuse_gather=fuse_gather,
+        onehot_gather=onehot_gather,
+    )
+    out_shapes = [jax.ShapeDtypeStruct((B, Hh, Q, D), value_l.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0))]
+    if save_sampled:
+        out_shapes.append(jax.ShapeDtypeStruct((B, Hh, Q, 4 * P, D), value_l.dtype))
+        out_specs.append(
+            pl.BlockSpec((1, 1, block_q, 4 * P, D), lambda b, h, q: (b, h, q, 0, 0))
+        )
+    else:
+        kernel = functools.partial(_nosave_wrap, kernel)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(B, Hh, nq),
+        in_specs=[
+            # level slab: revisited across q (resident in VMEM per (b,h))
+            pl.BlockSpec((1, 1, HWp, D), lambda b, h, q: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, P, 2), lambda b, h, q: (b, h, q, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, P), lambda b, h, q: (b, h, q, 0)),
+        ],
+        out_specs=out_specs if save_sampled else out_specs[:1],
+        out_shape=out_shapes if save_sampled else out_shapes[:1],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(value_l, loc_l, attn_l)
+    if save_sampled:
+        return outs[0], outs[1]
+    return outs[0], None
+
+
+def _nosave_wrap(kernel, value_ref, loc_ref, attn_ref, out_ref):
+    kernel(value_ref, loc_ref, attn_ref, out_ref, None)

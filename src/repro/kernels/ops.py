@@ -1,0 +1,297 @@
+"""Public MSDA op: jit-friendly wrapper, custom VJP, block planning.
+
+``msda(value, spatial_shapes, sampling_locations, attention_weights)``
+with MMCV conventions (see ``ref.py``).  Backends:
+
+* ``"ref"``    — pure-jnp oracle (fast on CPU, autodiff via JAX).
+* ``"pallas"`` — the xMSDA Pallas kernels (fwd + custom-VJP bwd).
+  ``interpret=True`` runs the kernel body in Python on CPU (correctness
+  validation); on TPU it compiles via Mosaic.
+* ``"auto"``   — pallas on TPU, ref elsewhere.
+
+The layout/padding contract between the wrapper and the kernels:
+each level is zero-padded from ``(H, W)`` to ``(H+2, W+2)`` (leading +
+trailing pad row/column — the paper's §4.1 padding fix, re-derived for
+branch-free corner pairs) and flattened row-major to a slab of
+``hwp_rows = round_up((H+2) * (W+2), 8)`` rows × ``D`` lanes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import msda_bwd, msda_fwd, ref
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+# Conservative per-core VMEM budget for block planning (v5e-class part).
+VMEM_BUDGET = 32 * 2**20
+_SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def slab_rows(hw: Tuple[int, int]) -> int:
+    h, w = hw
+    return _round_up((h + 2) * (w + 2), _SUBLANE)
+
+
+def plan_blocks(
+    spatial_shapes: Shapes,
+    num_points: int,
+    head_dim: int,
+    num_queries: int,
+    *,
+    value_itemsize: int = 4,
+    train: bool = True,
+    vmem_budget: int = VMEM_BUDGET,
+    adaptive: bool = True,
+) -> Tuple[int, ...]:
+    """Per-level query-block sizes (the paper's adaptive vec-len, Fig. 7).
+
+    Larger levels leave less VMEM for per-step tensors, so their blocks
+    shrink; tiny levels get wide blocks (long vectors).  ``adaptive=False``
+    reproduces the "-Adaptive VecLen" ablation (fixed minimal block).
+    """
+    out = []
+    for hw in spatial_shapes:
+        if not adaptive:
+            out.append(_SUBLANE)
+            continue
+        resident = slab_rows(hw) * head_dim * value_itemsize
+        if train:  # bwd keeps an fp32 grad slab too
+            resident += slab_rows(hw) * head_dim * 4
+        avail = max(vmem_budget - resident, 1 * 2**20)
+        # per-query working set: 4 corners x P points x D lanes in fp32,
+        # ~4 concurrent copies (gathered, weighted, contribs, temporaries)
+        per_q = 4 * num_points * head_dim * 4 * 4 + num_points * 64
+        bq = avail // per_q
+        bq = max(_SUBLANE, min(2048, (bq // _SUBLANE) * _SUBLANE))
+        bq = min(bq, _round_up(num_queries, _SUBLANE))
+        out.append(int(bq))
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class MSDAParams:
+    """Static (hashable) kernel configuration."""
+
+    spatial_shapes: Shapes
+    block_q: Tuple[int, ...]
+    fuse_gather: bool = True
+    fuse_scatter: bool = True
+    save_sampled: bool = False
+    interpret: bool = True
+    # per-level: route sampling through the MXU via one-hot matmuls
+    # (beyond-paper; profitable for small levels where HWp fits an MXU
+    # operand and the VPU gather would under-fill the vector unit)
+    onehot_levels: Tuple[bool, ...] = ()
+
+
+# levels with padded slabs up to this many rows use the MXU one-hot path
+ONEHOT_MAX_ROWS = 1152
+
+
+def plan_onehot(spatial_shapes: Shapes) -> Tuple[bool, ...]:
+    return tuple(slab_rows(hw) <= ONEHOT_MAX_ROWS for hw in spatial_shapes)
+
+
+def _pad_level(value_t: jax.Array, offset: int, hw: Tuple[int, int]) -> jax.Array:
+    """(B,H,S,D) -> zero-padded level slab (B,H,hwp_rows,D)."""
+    B, Hh, S, D = value_t.shape
+    h, w = hw
+    lvl = jax.lax.dynamic_slice_in_dim(value_t, offset, h * w, axis=2)
+    lvl = lvl.reshape(B, Hh, h, w, D)
+    lvl = jnp.pad(lvl, ((0, 0), (0, 0), (1, 1), (1, 1), (0, 0)))
+    lvl = lvl.reshape(B, Hh, (h + 2) * (w + 2), D)
+    rows = slab_rows(hw)
+    extra = rows - (h + 2) * (w + 2)
+    if extra:
+        lvl = jnp.pad(lvl, ((0, 0), (0, 0), (0, extra), (0, 0)))
+    return lvl
+
+
+def _unpad_grad(slab: jax.Array, hw: Tuple[int, int]) -> jax.Array:
+    """Inverse of _pad_level for the grad slab: (B,H,rows,D) -> (B,H,HW,D)."""
+    B, Hh, rows, D = slab.shape
+    h, w = hw
+    slab = slab[:, :, : (h + 2) * (w + 2)].reshape(B, Hh, h + 2, w + 2, D)
+    return slab[:, :, 1 : h + 1, 1 : w + 1].reshape(B, Hh, h * w, D)
+
+
+def _pad_q(x: jax.Array, q_axis: int, qpad: int, fill=0.0) -> jax.Array:
+    q = x.shape[q_axis]
+    if q == qpad:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[q_axis] = (0, qpad - q)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def _fwd_impl(p: MSDAParams, value, loc, attn):
+    """Kernel-backed forward. Returns (out, residuals)."""
+    B, S, Hh, D = value.shape
+    _, Q, _, L, P, _ = loc.shape
+    # (B,S,H,D) -> (B,H,S,D); (B,Q,H,L,P,2) -> (B,H,L,Q,P,2)
+    value_t = jnp.transpose(value, (0, 2, 1, 3))
+    loc_t = jnp.transpose(loc, (0, 2, 3, 1, 4, 5))
+    attn_t = jnp.transpose(attn, (0, 2, 3, 1, 4))
+
+    out = jnp.zeros((B, Hh, Q, D), jnp.float32)
+    slabs, saved_all = [], []
+    offset = 0
+    for l, hw in enumerate(p.spatial_shapes):
+        bq = p.block_q[l]
+        qpad = _round_up(Q, bq)
+        slab = _pad_level(value_t, offset, hw)
+        offset += hw[0] * hw[1]
+        loc_l = _pad_q(loc_t[:, :, l], 2, qpad, 0.5)
+        attn_l = _pad_q(attn_t[:, :, l], 2, qpad, 0.0)
+        onehot = p.onehot_levels[l] if p.onehot_levels else False
+        out_l, saved_l = msda_fwd.msda_fwd_level(
+            slab,
+            loc_l,
+            attn_l,
+            hw=hw,
+            block_q=bq,
+            fuse_gather=p.fuse_gather,
+            save_sampled=p.save_sampled,
+            onehot_gather=onehot,
+            interpret=p.interpret,
+        )
+        out = out + out_l[:, :, :Q].astype(jnp.float32)
+        slabs.append(slab)
+        saved_all.append(saved_l)
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(B, Q, Hh * D)
+    out = out.astype(value.dtype)
+    if p.save_sampled:
+        residuals = (None, tuple(saved_all), loc_t, attn_t)
+    else:
+        residuals = (tuple(slabs), None, loc_t, attn_t)
+    return out, residuals
+
+
+def _bwd_impl(p: MSDAParams, residuals, gout):
+    slabs, saved_all, loc_t, attn_t = residuals
+    B, Hh, L, Q, P, _ = loc_t.shape
+    HD = gout.shape[-1]
+    D = HD // Hh
+    gout_t = jnp.transpose(gout.reshape(B, Q, Hh, D), (0, 2, 1, 3))  # (B,H,Q,D)
+
+    gvals, glocs, gattns = [], [], []
+    for l, hw in enumerate(p.spatial_shapes):
+        bq = p.block_q[l]
+        qpad = _round_up(Q, bq)
+        loc_l = _pad_q(loc_t[:, :, l], 2, qpad, 0.5)
+        attn_l = _pad_q(attn_t[:, :, l], 2, qpad, 0.0)
+        gout_l = _pad_q(gout_t, 2, qpad, 0.0)
+        saved_l = saved_all[l] if saved_all is not None else None
+        slab_l = slabs[l] if slabs is not None else None
+        gval, gloc, gattn = msda_bwd.msda_bwd_level(
+            slab_l,
+            loc_l,
+            attn_l,
+            gout_l,
+            saved_l,
+            hw=hw,
+            hwp_rows=slab_rows(hw),
+            block_q=bq,
+            fuse_scatter=p.fuse_scatter,
+            onehot_scatter=p.onehot_levels[l] if p.onehot_levels else False,
+            interpret=p.interpret,
+        )
+        gvals.append(_unpad_grad(gval, hw))
+        glocs.append(gloc[:, :, :Q])
+        gattns.append(gattn[:, :, :Q])
+
+    gvalue = jnp.concatenate(gvals, axis=2)  # (B,H,S,D) fp32
+    gvalue = jnp.transpose(gvalue, (0, 2, 1, 3))
+    gloc = jnp.stack(glocs, axis=2)  # (B,H,L,Q,P,2)
+    gloc = jnp.transpose(gloc, (0, 3, 1, 2, 4, 5))  # (B,Q,H,L,P,2)
+    gattn = jnp.stack(gattns, axis=2)  # (B,H,L,Q,P)
+    gattn = jnp.transpose(gattn, (0, 3, 1, 2, 4))  # (B,Q,H,L,P)
+    return gvalue, gloc, gattn
+
+
+@functools.lru_cache(maxsize=64)
+def _build_op(p: MSDAParams):
+    @jax.custom_vjp
+    def op(value, loc, attn):
+        return _fwd_impl(p, value, loc, attn)[0]
+
+    def fwd(value, loc, attn):
+        out, res = _fwd_impl(p, value, loc, attn)
+        return out, res
+
+    def bwd(res, gout):
+        slabs, saved_all, loc_t, attn_t = res
+        vdt = (slabs[0] if slabs is not None else saved_all[0]).dtype
+        gvalue, gloc, gattn = _bwd_impl(p, res, gout)
+        return gvalue.astype(vdt), gloc.astype(loc_t.dtype), gattn.astype(attn_t.dtype)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def msda(
+    value: jax.Array,
+    spatial_shapes: Shapes,
+    sampling_locations: jax.Array,
+    attention_weights: jax.Array,
+    *,
+    backend: str = "auto",
+    train: bool = False,
+    block_q: Optional[Tuple[int, ...]] = None,
+    fuse_gather: bool = True,
+    fuse_scatter: bool = True,
+    adaptive_block: bool = True,
+    onehot_small_levels: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Multi-scale deformable attention (differentiable).
+
+    value: (B, S, H, D); sampling_locations: (B, Q, H, L, P, 2) in [0,1];
+    attention_weights: (B, Q, H, L, P); returns (B, Q, H*D).
+    """
+    spatial_shapes = tuple((int(h), int(w)) for h, w in spatial_shapes)
+    be = resolve_backend(backend)
+    if be == "ref":
+        return ref.msda_ref(value, spatial_shapes, sampling_locations, attention_weights)
+    if be != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    B, S, Hh, D = value.shape
+    Q, P = sampling_locations.shape[1], sampling_locations.shape[4]
+    if block_q is None:
+        block_q = plan_blocks(
+            spatial_shapes,
+            P,
+            D,
+            Q,
+            value_itemsize=value.dtype.itemsize,
+            train=train,
+            adaptive=adaptive_block,
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    p = MSDAParams(
+        spatial_shapes=spatial_shapes,
+        block_q=tuple(block_q),
+        fuse_gather=fuse_gather,
+        fuse_scatter=fuse_scatter,
+        save_sampled=train,
+        interpret=interpret,
+        onehot_levels=plan_onehot(spatial_shapes) if onehot_small_levels else (),
+    )
+    return _build_op(p)(value, sampling_locations, attention_weights)

@@ -1,0 +1,255 @@
+"""Post-SPMD HLO analysis: true FLOPs / bytes / collective traffic.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports scanned-layer models by orders of magnitude.  This module
+walks the optimized HLO text instead:
+
+* computations are parsed into a call graph (``body=`` / ``condition=``
+  for whiles — with ``known_trip_count`` from backend_config —,
+  ``calls=`` for fusions, ``to_apply=`` for reduces,
+  ``branch_computations=`` for conditionals) and every computation gets
+  an **execution multiplier** (product of enclosing trip counts);
+* operand shapes are resolved through a per-computation symbol table
+  (optimized HLO does not print operand types inline);
+* dot FLOPs: ``2 * numel(result) * contracted_size`` per ``dot``,
+  times multiplier (vector/elementwise FLOPs are not counted — matmul
+  noise on these workloads; gather/interp costs show up in bytes);
+* HBM-traffic model: for *control* computations (entry / while bodies /
+  branches — NOT fusion interiors) sum result+operand bytes of
+  buffer-level ops, times multiplier;
+* collectives: per-type operand bytes + ring-algorithm per-chip wire
+  estimates using the replica-group size.
+
+All numbers are per-device (the HLO is the per-device SPMD module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z][\w\-]*)\(([^)]*)\)")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z][a-z0-9]*\[[0-9,]*\])")
+_CALLEE_RE = re.compile(r"(body|condition|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort", "pad",
+    "concatenate", "slice", "transpose", "broadcast", "iota", "select",
+    "add", "multiply", "subtract", "divide", "exponential", "tanh", "compare",
+    "reduce-window", "select-and-scatter", "convert", "rng", "bitcast-convert",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "cholesky", "triangular-solve",
+}
+
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "while", "conditional",
+             "call", "custom-call", "opt-barrier"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_numel(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpLine:
+    name: str
+    rtype: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: List[OpLine] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+    edges: List[Tuple[str, str, int]] = field(default_factory=list)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        if not raw.strip():
+            continue
+        if not raw.startswith(" ") and ("->" in raw) and raw.rstrip().endswith("{"):
+            m = _COMP_HDR.match(raw)
+            if m:
+                cur = Computation(name=m.group(1), is_entry=raw.startswith("ENTRY"))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                    cur.symbols[pname] = ptype
+                continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(raw)
+        if dm:
+            name, rtype, op, operand_str = dm.groups()
+            operands = [o.strip().lstrip("%") for o in operand_str.split(",") if o.strip()]
+            cur.symbols[name] = rtype
+            cur.ops.append(OpLine(name=name, rtype=rtype, op=op, operands=operands, line=raw))
+        # parameters defined inline: %p = f32[..] parameter(0)
+        pm = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*parameter\(", raw)
+        if pm:
+            cur.symbols[pm.group(1)] = pm.group(2)
+        trip = 1
+        tm = _TRIP_RE.search(raw)
+        if tm:
+            trip = int(tm.group(1))
+        for kind, callee in _CALLEE_RE.findall(raw):
+            cur.edges.append((callee, kind, trip if kind in ("body", "condition") else 1))
+        bm = _BRANCHES_RE.search(raw)
+        if bm:
+            for b in bm.group(1).split(","):
+                cur.edges.append((b.strip().lstrip("%"), "branch", 1))
+    return comps, entry
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def analyze(text: str, *, default_group: int = 2) -> Dict[str, object]:
+    comps, entry_name = parse_hlo(text)
+    if not entry_name:
+        raise ValueError("no ENTRY computation found")
+
+    fusion_interiors: set = set()
+    for c in comps.values():
+        for callee, kind, _ in c.edges:
+            if kind in ("calls", "to_apply"):
+                fusion_interiors.add(callee)
+
+    # execution multipliers (iterative worklist; HLO call graphs are DAGs)
+    mult: Dict[str, float] = {}
+    stack = [(entry_name, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, kind, trip in comps[name].edges:
+            stack.append((callee, m * trip))
+
+    def operand_bytes(c: Computation, opnd: str) -> int:
+        t = c.symbols.get(opnd)
+        return _type_bytes(t) if t else 0
+
+    flops = 0.0
+    mem = 0.0
+    coll: Dict[str, float] = {}
+    wire = 0.0
+    count = 0.0
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for ol in c.ops:
+            if ol.op == "dot":
+                km = re.search(r"rhs_contracting_dims=\{([0-9,]*)\}", ol.line)
+                k = 1
+                if km and len(ol.operands) >= 2:
+                    rhs_t = c.symbols.get(ol.operands[1], "")
+                    dims = _shape_dims(rhs_t)
+                    for dd in km.group(1).split(","):
+                        if dd and int(dd) < len(dims):
+                            k *= dims[int(dd)]
+                flops += m * 2.0 * _type_numel(ol.rtype) * k
+            if ol.op == "convolution":
+                # rough: 2 * numel(out) * prod(kernel spatial+channel)
+                rhs_t = c.symbols.get(ol.operands[1], "") if len(ol.operands) > 1 else ""
+                kdims = _shape_dims(rhs_t)
+                kk = 1
+                for d in kdims[:-1]:
+                    kk *= d
+                flops += m * 2.0 * _type_numel(ol.rtype) * kk
+            if ol.op in COLLECTIVES:
+                b = sum(operand_bytes(c, o) for o in ol.operands)
+                if b == 0:
+                    b = _type_bytes(ol.rtype)
+                g = _group_size(ol.line, default_group)
+                coll[ol.op] = coll.get(ol.op, 0.0) + m * b
+                count += m
+                frac = (g - 1.0) / max(g, 1)
+                if ol.op == "all-reduce":
+                    wire += m * 2.0 * b * frac
+                elif ol.op == "all-gather":
+                    wire += m * _type_bytes(ol.rtype) * frac
+                elif ol.op in ("reduce-scatter", "all-to-all"):
+                    wire += m * b * frac
+                else:  # collective-permute
+                    wire += m * b
+            if ol.op in _MEM_OPS and name not in fusion_interiors:
+                if ol.op == "dynamic-update-slice":
+                    # in-place in optimized HLO: traffic = the update window
+                    b = 2 * (operand_bytes(c, ol.operands[1]) if len(ol.operands) > 1 else 0)
+                elif ol.op == "dynamic-slice":
+                    b = 2 * _type_bytes(ol.rtype)  # read window + write result
+                elif ol.op in ("broadcast", "iota"):
+                    b = _type_bytes(ol.rtype)  # write-only
+                else:
+                    b = _type_bytes(ol.rtype) + sum(operand_bytes(c, o) for o in ol.operands)
+                mem += m * b
+    return {
+        "flops": flops,
+        "mem_bytes": mem,
+        "collectives": {"per_type": coll, "wire_bytes": wire, "count": int(count)},
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,361 @@
+"""Attention substrate: GQA/MHA/MQA, sliding-window, KV caches, decode.
+
+Memory posture: training/prefill attention is computed in query chunks
+(``lax.scan`` over chunks) so peak temp is ``O(S * q_chunk)`` per head
+rather than ``O(S^2)`` — required for the 32k prefill cells.  Decode
+attends one query against either a full cache or a ring-buffer window
+cache (bounded state for the long-context cells).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, *, cross: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": layers.dense_init(kq, (d, cfg.q_dim)),
+        "wk": layers.dense_init(kk, (d, cfg.kv_dim)),
+        "wv": layers.dense_init(kv, (d, cfg.kv_dim)),
+        "wo": layers.dense_init(ko, (cfg.q_dim, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def _project_q(p, cfg, x):
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    return q.reshape(*x.shape[:-1], cfg.num_heads, cfg.head_dim)
+
+
+def _project_kv(p, cfg, x):
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(*x.shape[:-1], cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(*x.shape[:-1], cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(B, S, kv, hd) -> (B, S, kv*groups, hd) by repetition (GQA)."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=2)
+
+
+# --------------------------------------------------------------------------
+# core attention (query-chunked)
+# --------------------------------------------------------------------------
+
+
+def attend(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Kv, hd) — GQA-native, Kv may be < H
+    v: jax.Array,  # (B, Sk, Kv, hd)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    bias_mask: Optional[jax.Array] = None,  # (B, Sq, Sk) additive
+    impl: str = "flash",  # 'flash' (default) | 'chunked' (baseline ablation)
+) -> jax.Array:
+    """Softmax attention. ``window>0`` = sliding-window (causal).
+
+    'flash' = online-softmax custom-VJP (no S x S traffic, O(S·d)
+    residuals, no GQA head expansion) — the beyond-paper optimisation
+    driven by the roofline's memory term; 'chunked' = the materialising
+    baseline kept for the §Perf before/after comparison.
+    """
+    if impl == "flash" and bias_mask is None:
+        from repro.models import flash
+
+        kv_chunk = min(max(k.shape[1], 1), 1024)
+        return flash.flash_attend(q, k, v, None, causal, window, q_offset, kv_chunk)
+    if k.shape[2] != q.shape[2]:  # chunked baseline needs expanded heads
+        k = _expand_kv(k, q.shape[2] // k.shape[2])
+        v = _expand_kv(v, q.shape[2] // v.shape[2])
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    q = q * scale
+
+    def block(qc, qpos):
+        # qc: (B, C, H, hd); qpos: (C,) absolute positions
+        s = jnp.einsum("bchd,bkhd->bhck", qc, k).astype(jnp.float32)
+        kpos = jnp.arange(Sk)
+        m = jnp.zeros((qpos.shape[0], Sk), jnp.float32)
+        if causal:
+            m = jnp.where(kpos[None, :] > qpos[:, None], NEG_INF, m)
+        if window:
+            m = jnp.where(kpos[None, :] <= qpos[:, None] - window, NEG_INF, m)
+        s = s + m[None, None]
+        if bias_mask is not None:
+            # bias rows for this chunk
+            bm = jax.lax.dynamic_slice_in_dim(bias_mask, qpos[0], qpos.shape[0], axis=1)
+            s = s + bm[:, None].astype(jnp.float32)
+        w = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhck,bkhd->bchd", w, v)
+
+    if Sq <= q_chunk:
+        return block(q, q_offset + jnp.arange(Sq))
+
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = q.shape[1] // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    starts = q_offset + jnp.arange(n) * q_chunk
+
+    def step(_, xs):
+        qc, st = xs
+        return None, block(qc, st + jnp.arange(q_chunk))
+
+    _, out = jax.lax.scan(step, None, (qs, starts))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n * q_chunk, H, hd)
+    return out[:, :Sq]
+
+
+# --------------------------------------------------------------------------
+# full-sequence (train / prefill) attention block
+# --------------------------------------------------------------------------
+
+
+def attention_fwd(
+    p: dict,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+    rope: bool = True,
+    kv_source: Optional[jax.Array] = None,  # cross-attention source
+    q_chunk: int = 512,
+    impl: str = "flash",
+) -> jax.Array:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q = _project_q(p, cfg, x)
+    kv_in = x if kv_source is None else kv_source
+    k, v = _project_kv(p, cfg, kv_in)
+    if rope and kv_source is None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = attend(q, k, v, causal=causal, window=window, q_chunk=q_chunk, impl=impl)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV caches
+# --------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Full cache (prefill/decode) or ring-buffer window cache.
+
+    k/v: (B, C, n_kv, hd) where C = max_len (full) or window (ring).
+    ``pos``: tokens already absorbed PER SLOT, shape (B,) int32 —
+    required for continuous batching (slots decode at different depths).
+
+    **int8 mode** (``k.dtype == int8``): per-(slot, head) symmetric
+    quantisation with fp32 scales ``(B, C, n_kv, 1)`` — halves cache HBM
+    vs bf16 (qwen1.5-32B MHA decode_32k: 21.5 -> ~11 GB/chip, which is
+    what makes that cell fit).  The scale fields are size-0 placeholders
+    in the non-quantised mode (static pytree structure across modes).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    pos: jax.Array
+
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype) -> KVCache:
+    shape = (batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+    if getattr(cfg, "kv_quant", False):
+        sshape = (batch, capacity, cfg.num_kv_heads, 1)
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.float32),
+            v_scale=jnp.zeros(sshape, jnp.float32),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+    empty = jnp.zeros((0,), jnp.float32)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        k_scale=empty, v_scale=empty,
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _quantize(x):
+    """(..., hd) -> (int8 (..., hd), fp32 scale (..., 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def cache_kv(cache: KVCache, dtype):
+    """Read the cache at compute precision (dequantise int8 mode)."""
+    if cache.k.dtype == jnp.int8:
+        k = cache.k.astype(jnp.float32) * cache.k_scale
+        v = cache.v.astype(jnp.float32) * cache.v_scale
+        return k.astype(dtype), v.astype(dtype)
+    return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+def _write_token(cache: KVCache, k_new, v_new, slot: jax.Array) -> KVCache:
+    """Scatter one token per batch element at per-slot positions.
+
+    k_new/v_new: (B, 1, n_kv, hd); slot: (B,) int32 write positions.
+    """
+    b = jnp.arange(cache.k.shape[0])
+    if cache.k.dtype == jnp.int8:
+        kq, ks = _quantize(k_new[:, 0])
+        vq, vs = _quantize(v_new[:, 0])
+        return cache._replace(
+            k=cache.k.at[b, slot].set(kq), v=cache.v.at[b, slot].set(vq),
+            k_scale=cache.k_scale.at[b, slot].set(ks),
+            v_scale=cache.v_scale.at[b, slot].set(vs),
+            pos=cache.pos + 1,
+        )
+    k = cache.k.at[b, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[b, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    return cache._replace(k=k, v=v, pos=cache.pos + 1)
+
+
+def _bulk_write(cache: KVCache, k, v, pos_new, *, at_start: bool = False) -> KVCache:
+    """Write a full (B, T, n_kv, hd) block (prefill), quantising if int8."""
+    if cache.k.dtype == jnp.int8:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        if at_start:
+            return cache._replace(
+                k=jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, 0, 0)),
+                v=jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, 0, 0)),
+                k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, 0, 0, 0)),
+                v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, 0, 0, 0)),
+                pos=pos_new)
+        return cache._replace(k=kq, v=vq, k_scale=ks, v_scale=vs, pos=pos_new)
+    k = k.astype(cache.k.dtype)
+    v = v.astype(cache.v.dtype)
+    if at_start:
+        return cache._replace(
+            k=jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)),
+            pos=pos_new)
+    return cache._replace(k=k, v=v, pos=pos_new)
+
+
+def prefill_attention(
+    p: dict,
+    cfg,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    window: int = 0,
+    rope: bool = True,
+    q_chunk: int = 512,
+    impl: str = "flash",
+) -> Tuple[jax.Array, KVCache]:
+    """Process a full prompt, producing output and a filled cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = attend(q, k, v, causal=True, window=window, q_chunk=q_chunk, impl=impl)
+    if window:
+        # keep the trailing window in the ring buffer, ring-aligned so that
+        # decode's ``slot = pos % window`` indexing lines up
+        if S >= window:
+            start = S - window
+            # token at absolute position start+i must land at slot
+            # (start+i) % window  ->  right-roll by start % window
+            kk = jnp.roll(k[:, -window:], start % window, axis=1)
+            vv = jnp.roll(v[:, -window:], start % window, axis=1)
+        else:
+            pad = ((0, 0), (0, window - S), (0, 0), (0, 0))
+            kk = jnp.pad(k, pad)  # position i already sits at slot i
+            vv = jnp.pad(v, pad)
+        cache = _bulk_write(cache, kk, vv, jnp.full((B,), S, jnp.int32))
+    else:
+        cache = _bulk_write(cache, k, v, jnp.full((B,), S, jnp.int32),
+                            at_start=True)
+    y = out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return y, cache
+
+
+def decode_attention(
+    p: dict,
+    cfg,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    *,
+    window: int = 0,
+    rope: bool = True,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step against the cache (per-slot positions)."""
+    B = x.shape[0]
+    pos = cache.pos  # (B,): index of the token being generated, per slot
+    q = _project_q(p, cfg, x)
+    k_new, v_new = _project_kv(p, cfg, x)
+    if rope:
+        q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = layers.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+    cache = _write_token(cache, k_new, v_new, pos % window if window else pos)
+
+    C = cache.k.shape[1]
+    kpos_slot = jnp.arange(C)[None, :]  # (1, C)
+    posb = pos[:, None]
+    if window:
+        # slot j holds absolute position: largest p <= pos with p % window == j
+        delta = (posb % window - kpos_slot) % window
+        abs_pos = posb - delta
+        valid = (abs_pos >= 0) & (abs_pos <= posb) & (abs_pos > posb - window)
+    else:
+        valid = kpos_slot <= posb  # (B, C)
+    # flash path, GQA-native: the cache is streamed ONCE in chunks at its
+    # n_kv width — no head expansion, no (B,H,C) fp32 score tensor
+    # (§Perf iteration 4: MQA decode regressed 6x with expansion)
+    from repro.models import flash
+
+    if cache.k.dtype == jnp.int8:
+        out = flash.flash_decode_quant(
+            q, cache.k, cache.v, cache.k_scale, cache.v_scale, valid,
+            kv_chunk=min(C, 1024),
+        )
+    else:
+        kk, vv = cache_kv(cache, x.dtype)
+        out = flash.flash_attend(q, kk, vv, valid, False, 0, 0, min(C, 1024))
+    y = out.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return y, cache

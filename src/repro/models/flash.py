@@ -1,0 +1,229 @@
+"""Flash-style attention (jnp-level, custom VJP) — beyond-paper perf.
+
+The baseline q-chunked attention materialises (and, under autodiff,
+*saves*) S x S_k score tensors; the dry-run roofline showed that traffic
+dominating every attention arch's memory term.  This implementation:
+
+* **GQA-native**: k/v keep their ``n_kv`` heads — no ``jnp.repeat``
+  expansion (the v1 expansion made MQA/GQA decode re-materialise the
+  whole cache ``H/n_kv`` times: granite decode_32k regressed 6x until
+  this fix — §Perf iteration 4);
+* forward: *both* q and kv are chunked — q chunks run under ``lax.map``
+  (bounded carry: the v1 full-length-q carry was rewritten once per kv
+  chunk, adding O(S·d·n_kv_chunks) traffic that regressed the 32k
+  prefills — §Perf iteration 4), kv chunks scanned with online softmax;
+* residuals: only ``(q, k, v, o, lse)`` — O(S·d), never O(S²);
+* backward: recomputes probabilities chunk-by-chunk from ``lse``,
+  accumulating dq/dk/dv in the same scan.
+
+Supports causal, sliding-window, query-position offsets, and an
+optional per-key validity mask (decode caches).  Layouts:
+q ``(B, Sq, H, hd)``, k/v ``(B, Sk, Kv, hd)`` with ``H % Kv == 0``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.zeros((qpos.shape[0], kpos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(kpos[None, :] > qpos[:, None], NEG_INF, m)
+    if window:
+        m = jnp.where(kpos[None, :] <= qpos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads)
+
+
+def _kv_padded(k, v, valid, kv_chunk):
+    """Zero-pad KV to a chunk multiple.  Chunks are DYNAMIC-SLICED inside
+    the scan (not pre-split): pre-splitting materialises a transposed
+    copy of the whole cache — measured +22 GB/chip on qwen decode_32k."""
+    kp = _pad_to(k, kv_chunk, 1)
+    vp = _pad_to(v, kv_chunk, 1)
+    if valid is None:
+        valid = jnp.ones((k.shape[0], k.shape[1]), bool)
+    validp = _pad_to(valid, kv_chunk, 1)
+    return kp, vp, validp, kp.shape[1] // kv_chunk
+
+
+def _slice_chunk(arr, idx, kv_chunk):
+    return jax.lax.dynamic_slice_in_dim(arr, idx * kv_chunk, kv_chunk, axis=1)
+
+
+def flash_decode_quant(q, k_q, v_q, k_scale, v_scale, valid, kv_chunk: int = 1024):
+    """Decode against an int8 cache, dequantising PER CHUNK inside the
+    scan — the full-precision cache never exists (inference only, no VJP).
+
+    q: (B, 1, H, hd); k_q/v_q: (B, Sk, Kv, int8); scales: (B, Sk, Kv, 1).
+    """
+    B, Sq, H, hd = q.shape
+    Kv = k_q.shape[2]
+    G = H // Kv
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Sq, Kv, G, hd)
+    kp, vp, validp, nkv = _kv_padded(k_q, v_q, valid, kv_chunk)
+    ksp = _pad_to(k_scale, kv_chunk, 1)
+    vsp = _pad_to(v_scale, kv_chunk, 1)
+
+    def step(carry, idx):
+        o, m, l = carry
+        kc = _slice_chunk(kp, idx, kv_chunk)
+        vc = _slice_chunk(vp, idx, kv_chunk)
+        ks = _slice_chunk(ksp, idx, kv_chunk)
+        vs = _slice_chunk(vsp, idx, kv_chunk)
+        vm = _slice_chunk(validp, idx, kv_chunk)
+        kcf = kc.astype(jnp.float32) * ks  # per-chunk dequant (transient)
+        vcf = vc.astype(jnp.float32) * vs
+        s = jnp.einsum("bqvgd,bkvd->bqvgk", qf, kcf)
+        s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[..., None] + jnp.einsum("bqvgk,bkvd->bqvgd", p, vcf)
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, Kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Kv, G), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), jnp.arange(nkv))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _fwd_one_qchunk(qc, q0, kp, vp, validp, nkv, *, causal, window, kv_chunk):
+    """qc: (B, qc_len, Kv, G, hd) fp32 pre-scaled; q0: absolute start pos.
+    kp/vp/validp: full padded KV (sliced per scan step).
+    Returns (o fp32, lse fp32)."""
+    B, qlen, Kv, G, hd = qc.shape
+    qpos = q0 + jnp.arange(qlen)
+
+    def step(carry, idx):
+        o, m, l = carry
+        kc = _slice_chunk(kp, idx, kv_chunk)
+        vc = _slice_chunk(vp, idx, kv_chunk)
+        vm = _slice_chunk(validp, idx, kv_chunk)
+        kpos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqvgd,bkvd->bqvgk", qc, kc.astype(jnp.float32))
+        msk = _chunk_mask(qpos, kpos, causal, window)  # (qlen, kc)
+        s = s + msk[None, :, None, None, :]
+        s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bqvgk,bkvd->bqvgd", p, vc.astype(jnp.float32)
+        )
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((B, qlen, Kv, G, hd), jnp.float32)
+    m0 = jnp.full((B, qlen, Kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, qlen, Kv, G), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), jnp.arange(nkv))
+    l_safe = jnp.maximum(l, 1e-30)
+    return o / l_safe[..., None], m + jnp.log(l_safe)
+
+
+def _flash_fwd_impl(q, k, v, valid, *, causal, window, q_offset, kv_chunk,
+                    q_chunk: int = 2048):  # wide q tiles: 4x fewer KV re-reads
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Kv, G, hd)
+    kp, vp, validp, nkv = _kv_padded(k, v, valid, kv_chunk)
+
+    if Sq <= q_chunk:
+        o, lse = _fwd_one_qchunk(qf, q_offset, kp, vp, validp, nkv,
+                                 causal=causal, window=window, kv_chunk=kv_chunk)
+        return o.reshape(B, Sq, H, hd), lse.reshape(B, Sq, H)
+
+    qp = _pad_to(qf, q_chunk, 1)
+    nq = qp.shape[1] // q_chunk
+    qchunks = qp.reshape(B, nq, q_chunk, Kv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def one(args):
+        qc, idx = args
+        return _fwd_one_qchunk(qc, q_offset + idx * q_chunk, kp, vp, validp, nkv,
+                               causal=causal, window=window, kv_chunk=kv_chunk)
+
+    o, lse = jax.lax.map(one, (qchunks, jnp.arange(nq)))
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, hd)[:, :Sq]
+    lse = lse.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H)[:, :Sq]
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attend(q, k, v, valid, causal: bool, window: int, q_offset: int,
+                 kv_chunk: int):
+    """Memory-optimal GQA attention. q:(B,Sq,H,hd), k/v:(B,Sk,Kv,hd).
+
+    valid: optional (B, Sk) bool key mask (decode caches). Returns
+    (B,Sq,H,hd) in q.dtype.
+    """
+    o, _ = _flash_fwd_impl(q, k, v, valid, causal=causal, window=window,
+                           q_offset=q_offset, kv_chunk=kv_chunk)
+    return o.astype(q.dtype)
+
+
+def _fwd(q, k, v, valid, causal, window, q_offset, kv_chunk):
+    o, lse = _flash_fwd_impl(q, k, v, valid, causal=causal, window=window,
+                             q_offset=q_offset, kv_chunk=kv_chunk)
+    return o.astype(q.dtype), (q, k, v, valid, o, lse)
+
+
+def _bwd(causal, window, q_offset, kv_chunk, res, do):
+    q, k, v, valid, o, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Kv, G, hd)
+    dof = do.astype(jnp.float32).reshape(B, Sq, Kv, G, hd)
+    of = o.reshape(B, Sq, Kv, G, hd)
+    lsef = lse.reshape(B, Sq, Kv, G)
+    delta = jnp.einsum("bqvgd,bqvgd->bqvg", dof, of)
+
+    kp, vp, validp, nkv = _kv_padded(k, v, valid, kv_chunk)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def step(dq, idx):
+        kc = _slice_chunk(kp, idx, kv_chunk)
+        vc = _slice_chunk(vp, idx, kv_chunk)
+        vm = _slice_chunk(validp, idx, kv_chunk)
+        kpos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqvgd,bkvd->bqvgk", qf, kc.astype(jnp.float32))
+        s = s + _chunk_mask(qpos, kpos, causal, window)[None, :, None, None, :]
+        s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lsef[..., None])  # recomputed probs
+        dv_c = jnp.einsum("bqvgk,bqvgd->bkvd", p, dof)
+        dp = jnp.einsum("bqvgd,bkvd->bqvgk", dof, vc.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bqvgk,bkvd->bqvgd", ds, kc.astype(jnp.float32)) * scale
+        dk_c = jnp.einsum("bqvgk,bqvgd->bkvd", ds, qf)  # qf pre-scaled
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, jnp.arange(nkv))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nkv * kv_chunk, Kv, hd)[:, :Sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nkv * kv_chunk, Kv, hd)[:, :Sk]
+    return (dq.reshape(B, Sq, H, hd).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), None)
+
+
+flash_attend.defvjp(_fwd, _bwd)

@@ -1,0 +1,198 @@
+"""Shared neural-net building blocks (pure JAX, functional params-as-dicts).
+
+Conventions:
+* every ``init_*`` returns a nested dict of fp32 arrays;
+* linear weights are stored ``(in_features, out_features)``;
+* leaf names ('wq', 'wi', 'emb', ...) are the contract with
+  ``repro.sharding.rules`` — rename only in lockstep.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0):
+    """LeCun-normal fan-in init."""
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+
+def embed_init(key, shape, scale: float = 1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(cfg) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = (x * x).mean(-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(dt)
+
+
+def init_groupnorm(num_groups: int, dim: int) -> dict:
+    del num_groups  # static; passed to apply_groupnorm
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def apply_groupnorm(p: dict, x: jax.Array, g: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the last dim (used by xLSTM heads)."""
+    dt = x.dtype
+    shp = x.shape
+    x = x.astype(jnp.float32).reshape(*shp[:-1], g, shp[-1] // g)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(shp)
+    return (y * p["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# linear / mlp
+# --------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> dict:
+    p = {"w": dense_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg) -> dict:
+    kws = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"wi": dense_init(kws[0], (d, ff)), "wd": dense_init(kws[1], (ff, d))}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(kws[2], (d, ff))
+    return p
+
+
+def apply_mlp(p: dict, cfg, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    if "wg" in p:
+        h = _act(cfg.act, x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = _act(cfg.act, h)
+    return h @ p["wd"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,T,hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (...,T,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (length, dim)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    return {"emb": embed_init(key, (vocab, d), scale=0.02)}
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+def chunked_ce_loss(
+    hidden: jax.Array,  # (B, S, d)
+    head_w: jax.Array,  # (d, V)
+    targets: jax.Array,  # (B, S) int32
+    mask: Optional[jax.Array] = None,  # (B, S)
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materialising (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside one
+    (rematerialised) scan step — the memory bound is (B, chunk, V).
+    """
+    B, S, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = hidden.shape[1] // chunk
+    hidden = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    targets = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    mask = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        h, t, m = xs
+        logits = (h @ head_w.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)), (hidden, targets, mask))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,293 @@
+"""Decoder-LM assembly: dense / MoE / hybrid / SSM from a ModelConfig.
+
+Layers are grouped into *periods* (one repetition of ``block_pattern``)
+and scanned with ``jax.lax.scan`` so the lowered HLO is depth-independent
+(critical for compiling 64-layer configs against a 512-device mesh).
+Remainder layers (num_layers % len(pattern)) run unscanned.
+
+Three entry points, matching the assignment's shape kinds:
+  * :func:`lm_loss`      — training forward + chunked CE (no (B,S,V) logits)
+  * :func:`lm_prefill`   — prompt pass filling a decode cache
+  * :func:`lm_decode_step` — one token against the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, xlstm
+from repro.sharding import rules
+
+
+# --------------------------------------------------------------------------
+# per-kind block init / apply
+# --------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": layers.init_norm(cfg)}
+    if kind in ("attn", "local"):
+        p["attn"] = attention.init_attention(k1, cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru.init_rglru(k1, cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(k1, cfg)
+        return p  # self-contained block (no separate FFN)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm(k1, cfg)
+        return p
+    else:
+        raise ValueError(kind)
+    p["norm2"] = layers.init_norm(cfg)
+    if cfg.moe is not None:
+        p["moe"] = moe.init_moe(k2, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = layers.init_mlp(k2, cfg)
+    return p
+
+
+def _init_block_state(cfg, kind: str, batch: int, capacity: int, dtype):
+    if kind == "attn":
+        return attention.init_kv_cache(cfg, batch, capacity, dtype)
+    if kind == "local":
+        return attention.init_kv_cache(cfg, batch, min(cfg.window, capacity), dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _apply_block(
+    p: dict, cfg, kind: str, x: jax.Array, *, mode: str, state=None
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x_out, new_state, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_eps)
+    window = cfg.window if kind == "local" else 0
+    if kind in ("attn", "local"):
+        if mode == "train":
+            y = attention.attention_fwd(p["attn"], cfg, h, causal=True, window=window)
+            new_state = state
+        elif mode == "prefill":
+            y, new_state = attention.prefill_attention(p["attn"], cfg, h, state, window=window)
+        else:  # decode
+            y, new_state = attention.decode_attention(p["attn"], cfg, h, state, window=window)
+    elif kind == "rglru":
+        st = state if state is not None else rglru.init_rglru_state(cfg, x.shape[0], x.dtype)
+        y, new_state = (
+            rglru.rglru_seq(p["rglru"], cfg, h, st)
+            if mode != "decode"
+            else rglru.rglru_step(p["rglru"], cfg, h, st)
+        )
+    elif kind == "mlstm":
+        st = state if state is not None else xlstm.init_mlstm_state(cfg, x.shape[0], x.dtype)
+        y, new_state = (
+            xlstm.mlstm_seq(p["mlstm"], cfg, h, st)
+            if mode != "decode"
+            else xlstm.mlstm_step(p["mlstm"], cfg, h, st)
+        )
+        return x + y, new_state, aux
+    elif kind == "slstm":
+        st = state if state is not None else xlstm.init_slstm_state(cfg, x.shape[0], x.dtype)
+        y, new_state = (
+            xlstm.slstm_seq(p["slstm"], cfg, h, st)
+            if mode != "decode"
+            else xlstm.slstm_step(p["slstm"], cfg, h, st)
+        )
+        return x + y, new_state, aux
+    else:
+        raise ValueError(kind)
+    x = x + y
+    h2 = layers.apply_norm(p["norm2"], x, cfg.norm_eps)
+    if "moe" in p:
+        if mode == "train":
+            y2, aux = moe.moe_ffn(p["moe"], cfg, h2)
+        else:  # inference: exact dropless routing (prefill == decode)
+            y2, aux = moe.moe_ffn_dropless(p["moe"], cfg, h2)
+    elif "mlp" in p:
+        y2 = layers.apply_mlp(p["mlp"], cfg, h2)
+    else:
+        y2 = jnp.zeros_like(x)
+    return x + y2, new_state, aux
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+
+
+def _pattern(cfg) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    pat = tuple(cfg.block_pattern)
+    n_periods = cfg.num_layers // len(pat)
+    rem = tuple(pat[: cfg.num_layers % len(pat)])
+    return pat, n_periods, rem
+
+
+def init_lm(key, cfg) -> dict:
+    pat, n_periods, rem = _pattern(cfg)
+    k_emb, k_blocks, k_rem, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = dict(layers.init_embedding(k_emb, cfg.vocab_size, cfg.d_model))
+
+    def init_period(k):
+        ks = jax.random.split(k, len(pat))
+        return {f"pos{i}": _init_block(ks[i], cfg, kind) for i, kind in enumerate(pat)}
+
+    period_keys = jax.random.split(k_blocks, n_periods)
+    params["periods"] = jax.vmap(init_period)(period_keys)
+    if rem:
+        ks = jax.random.split(k_rem, len(rem))
+        params["rem"] = {
+            f"pos{i}": _init_block(ks[i], cfg, kind) for i, kind in enumerate(rem)
+        }
+    params["final_norm"] = layers.init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(k_head, (cfg.d_model, cfg.vocab_size))
+    return params
+
+
+def head_weight(params, cfg) -> jax.Array:
+    return params["head"] if not cfg.tie_embeddings else params["emb"].T
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype) -> dict:
+    """Decode-state pytree mirroring the scanned period structure."""
+    pat, n_periods, rem = _pattern(cfg)
+
+    def one_period():
+        return {
+            f"pos{i}": _init_block_state(cfg, kind, batch, capacity, dtype)
+            for i, kind in enumerate(pat)
+        }
+
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_periods, *x.shape)), one_period()
+    )
+    cache = {"periods": stacked}
+    if rem:
+        cache["rem"] = {
+            f"pos{i}": _init_block_state(cfg, kind, batch, capacity, dtype)
+            for i, kind in enumerate(rem)
+        }
+    return cache
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _run_blocks(params, cfg, x, *, mode: str, cache=None, remat: bool = False):
+    """Scan periods + remainder. Returns (x, new_cache, aux_sum)."""
+    pat, n_periods, rem = _pattern(cfg)
+
+    def period_body(x, pp, pcache):
+        aux_tot = jnp.float32(0.0)
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            st = pcache[f"pos{i}"] if pcache is not None else None
+            x, st2, aux = _apply_block(pp[f"pos{i}"], cfg, kind, x, mode=mode, state=st)
+            new_cache[f"pos{i}"] = st2
+            aux_tot = aux_tot + aux
+        # residual stream: batch over dp only.  Sequence-parallel hints
+        # were tried and REVERTED twice (§Perf): in train they make
+        # weight grads partial over 'model' (+560 GB/chip on dbrx); in
+        # prefill they collide with flash attention's seq-dim dynamic
+        # slices — GSPMD reshards inside the innermost kv loop
+        # (llama3 prefill regressed 8.9 -> 167 s).  SP belongs UNDER
+        # shard_map (like the MoE dispatch), left as future work.
+        x = rules.hint(x, "dp", None, None)
+        return x, new_cache, aux_tot
+
+    if remat:
+        period_body = jax.checkpoint(period_body)
+
+    if n_periods:
+        if cache is None:
+            def scan_step(carry, pp):
+                x, aux_acc = carry
+                x, _, aux = period_body(x, pp, None)
+                return (x, aux_acc + aux), None
+
+            (x, aux), new_period_caches = jax.lax.scan(
+                scan_step, (x, jnp.float32(0.0)), params["periods"]
+            )
+        else:
+            def scan_step(carry, xs):
+                x, aux_acc = carry
+                pp, pcache = xs
+                x, new_cache, aux = period_body(x, pp, pcache)
+                return (x, aux_acc + aux), new_cache
+
+            (x, aux), new_period_caches = jax.lax.scan(
+                scan_step, (x, jnp.float32(0.0)), (params["periods"], cache["periods"])
+            )
+    else:
+        aux = jnp.float32(0.0)
+        new_period_caches = None
+
+    new_cache = {"periods": new_period_caches} if n_periods else {}
+    if rem:
+        new_cache["rem"] = {}
+        for i, kind in enumerate(rem):
+            st = cache["rem"][f"pos{i}"] if cache is not None else None
+            x, st2, aux_i = _apply_block(
+                params["rem"][f"pos{i}"], cfg, kind, x, mode=mode, state=st
+            )
+            new_cache["rem"][f"pos{i}"] = st2
+            aux = aux + aux_i
+    return x, (new_cache if cache is not None else None), aux
+
+
+def lm_hidden(params, cfg, tokens: jax.Array, *, remat: bool = True, dtype=None):
+    """Token ids (B, S) -> final hidden states (B, S, d). Training path."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    x = layers.embed(params, tokens, dtype)
+    x = rules.hint(x, "dp", None, None)
+    x, _, aux = _run_blocks(params, cfg, x, mode="train", remat=remat)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def lm_loss(
+    params, cfg, tokens: jax.Array, targets: jax.Array, mask=None, *, remat: bool = True
+) -> jax.Array:
+    """Mean next-token CE + MoE aux. tokens/targets: (B, S)."""
+    hidden, aux = lm_hidden(params, cfg, tokens, remat=remat)
+    w = head_weight(params, cfg)
+    ce = layers.chunked_ce_loss(hidden, w, targets, mask)
+    return ce + 0.01 * aux
+
+
+def lm_prefill(params, cfg, tokens: jax.Array, capacity: int, *, dtype=None):
+    """Prompt pass. Returns (last-token logits (B, V), cache)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, capacity, dtype)
+    x = layers.embed(params, tokens, dtype)
+    x = rules.hint(x, "dp", None, None)
+    x, cache, _ = _run_blocks(params, cfg, x, mode="prefill", cache=cache)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = x[:, -1] @ head_weight(params, cfg).astype(x.dtype)
+    return logits.astype(jnp.float32), cache
+
+
+def lm_decode_step(params, cfg, cache, token: jax.Array, *, dtype=None):
+    """One decode step. token: (B,) int32. Returns (logits (B, V), cache)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    x = layers.embed(params, token[:, None], dtype)  # (B, 1, d)
+    x, cache, _ = _run_blocks(params, cfg, x, mode="decode", cache=cache)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = x[:, 0] @ head_weight(params, cfg).astype(x.dtype)
+    return logits.astype(jnp.float32), cache

@@ -1,0 +1,259 @@
+"""Token-choice top-k mixture-of-experts with capacity-bounded dispatch.
+
+Dispatch strategy (scales to EP on the ``model`` mesh axis):
+
+* tokens are viewed as ``(G, N, d)`` groups; the group axis is aligned
+  with the data/batch sharding, so routing decisions are local;
+* per group, each token's top-k experts get a slot via a cumulative-sum
+  position inside a fixed-capacity buffer ``(G, E, C, d)`` — overflow
+  tokens are dropped (standard capacity-factor semantics);
+* the buffer is resharded expert-major for expert compute; under pjit
+  this boundary is where GSPMD emits the all-to-all;
+* combine gathers each token's k expert outputs and mixes with the
+  renormalised router weights.
+
+Expert placement adapts to divisibility: ``E % model_axis == 0`` → one
+(or more) whole experts per shard (EP); otherwise experts are replicated
+and their ``d_ff`` is tensor-parallel (TP-MoE, e.g. grok-1's 8 experts
+on a 16-wide model axis).  See ``sharding/rules.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import layers
+from repro.sharding import rules
+
+
+def _expert_compute_specs(cfg):
+    """Compute-time shardings for the expert einsums.
+
+    Without these, GSPMD contracts the FSDP-sharded ``d`` dim partially
+    and ALL-REDUCES the (huge) expert activations — measured at 3.9TB
+    per device per step on dbrx train_4k.  Constraining the weights to
+    the gathered/EP layout (and the dispatch buffers to match) makes the
+    contraction local: weights are all-gathered instead (MBs, not GBs).
+    §Perf iteration 2.
+    """
+    mesh = rules.current_mesh()
+    if mesh is None:
+        return None
+    E = cfg.moe.num_experts
+    tp = rules.resolve_axis("tp", mesh)
+    dp = rules.resolve_axis("dp", mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get("model", 1)
+    ep_mode = tp is not None and E % tp_size == 0
+    if ep_mode:
+        w_spec = P(tp, None, None)  # whole experts per model shard
+        ebuf_spec = P(tp, dp, None)
+    else:
+        w_spec = P(None, None, tp)  # TP over d_ff inside each expert
+        ebuf_spec = P(None, dp, tp)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    return {
+        "wi": ns(w_spec),
+        "wd": ns(P(*(w_spec[0], w_spec[2], w_spec[1]))),
+        "ebuf": ns(ebuf_spec),
+        "buf": ns(P(dp, None, None)),
+        "vals": ns(P(dp, None, None, None)),
+        "out": ns(P(dp, None, None)),
+    }
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    kr, ki, kg, kd = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, m.num_experts
+    p = {
+        "router": layers.dense_init(kr, (d, E)),
+        "experts_wi": layers.dense_init(ki, (E, d, ff), in_axis=1),
+        "experts_wd": layers.dense_init(kd, (E, ff, d), in_axis=1),
+    }
+    if cfg.gated_mlp:
+        p["experts_wg"] = layers.dense_init(kg, (E, d, ff), in_axis=1)
+    return p
+
+
+def moe_ffn_dropless(p: dict, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact dropless MoE: every expert computed densely, mixed by top-k
+    gates.  Used for inference (prefill/decode): capacity-based dispatch
+    drops tokens data-dependently, which would make decode logits diverge
+    from prefill logits (and serving nondeterministic under batching).
+    Costs E/k x the active FLOPs — the standard small-batch serving
+    trade-off; a megablocks-style sorted dispatch is the at-scale
+    alternative (see DESIGN.md).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+
+    def chunk_fn(xc):
+        # xc: (B, C, d) — dense all-expert compute for one seq chunk
+        logits = (xc @ p["router"].astype(xc.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, ids = jax.lax.top_k(probs, k)  # (B,C,k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        C = xc.shape[1]
+        mix = jnp.zeros((B, C, E), jnp.float32)
+        bidx = jnp.arange(B)[:, None, None]
+        sidx = jnp.arange(C)[None, :, None]
+        mix = mix.at[bidx, sidx, ids].add(gate)
+        h = jnp.einsum("bsd,edf->bsef", xc, p["experts_wi"].astype(xc.dtype))
+        if "experts_wg" in p:
+            g = jnp.einsum("bsd,edf->bsef", xc, p["experts_wg"].astype(xc.dtype))
+            h = h * (jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g))
+        else:
+            h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+        out_e = jnp.einsum("bsef,efd->bsed", h, p["experts_wd"].astype(xc.dtype))
+        return jnp.einsum("bsed,bse->bsd", out_e, mix.astype(xc.dtype))
+
+    # chunk over sequence: the dense (B,S,E,ff) tensors of an unchunked
+    # pass blow prefill_32k temps (grok: 38 GB/chip); per-chunk temps are
+    # bounded at (B, chunk, E, ff)
+    chunk = 2048
+    if S <= chunk:
+        return chunk_fn(x), jnp.float32(0.0)
+    pad = (-S) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    n = xp.shape[1] // chunk
+    xs = xp.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    out = jax.lax.map(chunk_fn, xs)
+    out = out.transpose(1, 0, 2, 3).reshape(B, n * chunk, d)[:, :S]
+    return out, jnp.float32(0.0)
+
+
+def moe_ffn(p: dict, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balancing loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    G, N = B, S  # one routing group per sequence: aligns with batch sharding
+    xt = x.reshape(G, N, d)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)  # (G,N,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): E * mean(frac_tokens_e * frac_prob_e)
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)  # (G,N,k,E)
+    tok_frac = onehot.sum(2).mean(1)  # (G,E)
+    prob_frac = probs.mean(1)  # (G,E)
+    aux = E * (tok_frac * prob_frac).sum(-1).mean()
+
+    # capacity slots: position of each (token, choice) within its expert
+    C = max(int(N * k / E * m.capacity_factor), 1)
+    flat_choice = onehot.reshape(G, N * k, E)
+    pos = jnp.cumsum(flat_choice, axis=1) - 1.0  # (G,N*k,E)
+    slot = (pos * flat_choice).sum(-1).reshape(G, N, k)  # (G,N,k) fp32
+    keep = (slot < C) & (gate > 0)
+    slot = slot.astype(jnp.int32)
+
+    vals = jnp.broadcast_to(xt[:, :, None, :], (G, N, k, d))
+    vals = vals * keep[..., None].astype(x.dtype)
+    gatek = (gate * keep).astype(jnp.float32)  # (G,N,k)
+
+    wi = p["experts_wi"].astype(x.dtype)
+    wg = p.get("experts_wg")
+    wg = wg.astype(x.dtype) if wg is not None else None
+    wd = p["experts_wd"].astype(x.dtype)
+
+    mesh = rules.current_mesh()
+    if mesh is None:
+        mixed = _moe_compute(cfg, vals, ids, slot, keep, gatek, wi, wg, wd,
+                             shard_e=0, n_shards=1)
+        return mixed.reshape(B, S, d), aux.astype(jnp.float32)
+
+    # Manual-EP shard_map block (§Perf iteration 2): dispatch scatter is
+    # local per data shard; the buffer is REPLICATED over 'model' (inputs
+    # are dp-sharded only), so each model shard slices ITS experts for
+    # free; combine mixes only the local experts' outputs and a single
+    # activation-sized psum over 'model' finishes the job.  GSPMD's own
+    # partitioning of the same math moved the full dispatch buffers
+    # through all-reduce / all-gather chains (3.9 TB/chip/step on dbrx).
+    dp = rules.resolve_axis("dp", mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get("model", 1)
+    has_model = "model" in mesh.axis_names and tp_size > 1
+    ep_mode = has_model and E % tp_size == 0
+    dspec = lambda nd: P(*((dp,) + (None,) * (nd - 1)))  # noqa: E731
+    if ep_mode:
+        w_spec = P("model", None, None)
+    elif has_model:
+        w_spec = P(None, None, "model")  # TP over d_ff inside each expert
+    else:
+        w_spec = P(None, None, None)
+    wd_spec = P(w_spec[0], w_spec[2], w_spec[1])
+
+    def body(vals_, ids_, slot_, keep_, gatek_, wi_, wg_, wd_):
+        j = jax.lax.axis_index("model") if ep_mode else 0
+        out = _moe_compute(cfg, vals_, ids_, slot_, keep_, gatek_,
+                           wi_, wg_ if wg is not None else None, wd_,
+                           shard_e=j, n_shards=tp_size if ep_mode else 1)
+        if has_model:
+            # EP: sum partial mixes from each expert shard;
+            # TP: sum ff-slice partial products — same psum either way
+            out = jax.lax.psum(out, "model")
+        return out
+
+    wg_arg = wg if wg is not None else jnp.zeros((1, 1, 1), x.dtype)
+    mixed = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(dspec(4), dspec(3), dspec(3), dspec(3), dspec(3),
+                  w_spec, w_spec if wg is not None else P(None, None, None),
+                  wd_spec),
+        out_specs=dspec(3), check_vma=False,
+    )(vals, ids, slot, keep, gatek, wi, wg_arg, wd)
+    return mixed.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+def _moe_compute(cfg, vals, ids, slot, keep, gatek, wi, wg, wd, *,
+                 shard_e, n_shards):
+    """Dispatch -> expert FFN -> combine for one shard's experts.
+
+    vals: (G,N,k,d) masked token copies; ids/slot/keep/gatek: (G,N,k).
+    EP (n_shards>1): this shard owns experts [shard_e*E_loc, ...).
+    TP-MoE: n_shards==1 with ff-sliced weights; the caller psums the
+    partial outputs over 'model'.
+    """
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    G, N, _, d = vals.shape
+    C = max(int(N * k / E * m.capacity_factor), 1)
+    E_loc = E // n_shards
+    lo = shard_e * E_loc
+
+    if n_shards > 1:
+        mine = (ids >= lo) & (ids < lo + E_loc) & keep
+    else:
+        mine = keep
+    local_e = jnp.clip(ids - lo, 0, E_loc - 1)
+    flat_idx = jnp.where(mine, local_e * C + slot, 0)  # (G,N,k)
+
+    gi = jnp.arange(G)[:, None, None]
+    buf = jnp.zeros((G, E_loc * C, d), vals.dtype)
+    buf = buf.at[gi, flat_idx].add(vals * mine[..., None].astype(vals.dtype))
+
+    ebuf = buf.reshape(G, E_loc, C, d).transpose(1, 0, 2, 3).reshape(E_loc, G * C, d)
+    h = jnp.einsum("egd,edf->egf", ebuf, wi)
+    if wg is not None:
+        gg = jnp.einsum("egd,edf->egf", ebuf, wg)
+        h = h * (jax.nn.silu(gg) if cfg.act == "silu" else jax.nn.gelu(gg))
+    else:
+        h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    out_e = jnp.einsum("egf,efd->egd", h, wd)
+
+    obuf = out_e.reshape(E_loc, G, C, d).transpose(1, 0, 2, 3).reshape(G, E_loc * C, d)
+    picked = jnp.take_along_axis(
+        obuf, flat_idx.reshape(G, N * k)[..., None], axis=1
+    ).reshape(G, N, k, d)
+    w = gatek * mine.astype(jnp.float32)
+    return (picked * w[..., None].astype(vals.dtype)).sum(2)  # (G,N,d)

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: pre-norm -> two branches:
+  (a) linear -> causal depthwise conv(4) -> RG-LRU recurrence
+  (b) linear -> GeLU gate
+merged a*b -> output projection.
+
+Recurrence (per channel):
+  r_t = sigmoid(x_t @ W_r + b_r)            recurrence gate
+  i_t = sigmoid(x_t @ W_i + b_i)            input gate
+  log a_t = -c * softplus(L) * r_t          (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill use ``jax.lax.associative_scan`` (parallel, O(log T)
+depth); decode is a single fused step with carried state ``(h, conv
+tail)`` — constant memory, which is what qualifies this arch for the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0
+_CONV_W = 4
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, width) fp32 recurrent state
+    conv: jax.Array  # (B, _CONV_W - 1, width) conv tail
+
+
+def init_rglru(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    lam_init = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    return {
+        "wx": layers.dense_init(ks[0], (d, w)),
+        "wgate": layers.dense_init(ks[1], (d, w)),
+        "wo": layers.dense_init(ks[2], (w, d)),
+        "conv_w": layers.dense_init(ks[3], (_CONV_W, w)) * 0.1,
+        "wr": layers.dense_init(ks[4], (w, 2 * w)),  # fused r|i gates
+        "br": jnp.zeros((2 * w,), jnp.float32),
+        # parametrise L so that softplus(L) > 0; init near `lam`
+        "lam": jnp.log(jnp.exp(-jnp.log(lam_init) / _C) - 1.0),
+    }
+
+
+def init_rglru_state(cfg, batch: int, dtype) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, _CONV_W - 1, w), dtype),
+    )
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, tail: jax.Array) -> jax.Array:
+    """Depthwise causal conv width 4 via shifted adds.
+
+    x: (B, T, w); tail: (B, 3, w) inputs preceding x.
+    """
+    full = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, T+3, w)
+    T = x.shape[1]
+    out = sum(
+        full[:, (_CONV_W - 1 - i) : (_CONV_W - 1 - i) + T] * w[i].astype(x.dtype)
+        for i in range(_CONV_W)
+    )
+    return out
+
+
+def _gates(p, xb):
+    """xb: (B, T, w) conv output -> (log_a, gated_input) both fp32."""
+    ri = (xb @ p["wr"].astype(xb.dtype) + p["br"].astype(xb.dtype)).astype(jnp.float32)
+    r, i = jnp.split(jax.nn.sigmoid(ri), 2, axis=-1)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B,T,w) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xb.astype(jnp.float32))
+    return log_a, gated
+
+
+def rglru_seq(p: dict, cfg, x: jax.Array, state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+    """Full-sequence branch (train/prefill). x: (B, T, d)."""
+    dt = x.dtype
+    xb = x @ p["wx"].astype(dt)
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    xb = _conv_causal(xb, p["conv_w"], state.conv)
+    log_a, gated = _gates(p, xb)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan over (log_a, b)
+    b = gated
+    # incorporate initial state as a virtual step 0
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la0 = jnp.zeros_like(log_a[:, :1])
+    b0 = state.h[:, None, :]
+    las = jnp.concatenate([la0, log_a], axis=1)
+    bs = jnp.concatenate([b0, b], axis=1)
+    _, hs = jax.lax.associative_scan(combine, (las, bs), axis=1)
+    hs = hs[:, 1:]  # (B,T,w) fp32
+
+    new_state = RGLRUState(
+        h=hs[:, -1],
+        conv=jnp.concatenate([state.conv.astype(dt), (x @ p["wx"].astype(dt))], axis=1)[
+            :, -(_CONV_W - 1) :
+        ],
+    )
+    y = (hs.astype(dt) * gate) @ p["wo"].astype(dt)
+    return y, new_state
+
+
+def rglru_step(p: dict, cfg, x: jax.Array, state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+    """Single decode step. x: (B, 1, d)."""
+    dt = x.dtype
+    xb_raw = x @ p["wx"].astype(dt)  # (B,1,w)
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    xb = _conv_causal(xb_raw, p["conv_w"], state.conv)
+    log_a, gated = _gates(p, xb)
+    h = jnp.exp(log_a[:, 0]) * state.h + gated[:, 0]
+    new_state = RGLRUState(
+        h=h,
+        conv=jnp.concatenate([state.conv.astype(dt), xb_raw], axis=1)[:, 1:],
+    )
+    y = (h[:, None, :].astype(dt) * gate) @ p["wo"].astype(dt)
+    return y, new_state

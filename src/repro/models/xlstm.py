@@ -1,0 +1,334 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM recurrence (per head, stabilised — xLSTM paper eqs. 19-27):
+  C_t = f_t C_{t-1} + i_t k_t v_t^T      (C: dk x dv matrix memory)
+  n_t = f_t n_{t-1} + i_t k_t
+  h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+with exponential input gate i = exp(~i), forget gate f = sigmoid(~f),
+and running log-stabiliser m.  Training/prefill run a **chunkwise
+parallel** form: quadratic attention-like math inside a chunk plus a
+recurrent (C, n, m) carry across chunks — O(T * chunk) memory, exact
+(validated against the step recurrence in tests).  Decode is a single
+step with constant state, which qualifies the arch for ``long_500k``.
+
+sLSTM has true sequential dependence (h_{t-1} feeds the gates), so the
+sequence path is a ``lax.scan`` over time — inherent to the cell, as in
+the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_CONV_W = 4
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv) stabilised matrix memory (fp32)
+    n: jax.Array  # (B, H, dk)
+    m: jax.Array  # (B, H) log stabiliser
+    conv: jax.Array  # (B, _CONV_W-1, inner) conv tail
+
+
+def _inner(cfg) -> int:
+    return 2 * cfg.d_model
+
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    inner = _inner(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wup": layers.dense_init(ks[0], (d, 2 * inner)),  # [x_m | z-gate]
+        "conv_w": layers.dense_init(ks[1], (_CONV_W, inner)) * 0.1,
+        "wq": layers.dense_init(ks[2], (inner, inner)),
+        "wk": layers.dense_init(ks[3], (inner, inner)),
+        "wv": layers.dense_init(ks[4], (inner, inner)),
+        "wif": layers.dense_init(ks[5], (inner, 2 * cfg.num_heads)) * 0.1,
+        "bif": jnp.concatenate(
+            [jnp.zeros((cfg.num_heads,)), 3.0 * jnp.ones((cfg.num_heads,))]
+        ),
+        "gn": layers.init_groupnorm(cfg.num_heads, inner),
+        "wdown": layers.dense_init(ks[6], (inner, d)),
+    }
+
+
+def init_mlstm_state(cfg, batch: int, dtype) -> MLSTMState:
+    H = cfg.num_heads
+    inner = _inner(cfg)
+    dh = inner // H
+    return MLSTMState(
+        c=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, _CONV_W - 1, inner), dtype),
+    )
+
+
+def _mlstm_proj(p, cfg, x, conv_tail):
+    """Shared projections. x: (B,T,d) -> q,k,v (B,H,T,dh), li/lf (B,H,T), z."""
+    dt = x.dtype
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    inner = _inner(cfg)
+    dh = inner // H
+    up = x @ p["wup"].astype(dt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    from repro.models.rglru import _conv_causal
+
+    xc = _conv_causal(xm, p["conv_w"], conv_tail)
+    xc = jax.nn.silu(xc)
+
+    def heads(t):
+        return t.reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+
+    q = heads(xc @ p["wq"].astype(dt)) * dh ** -0.5
+    k = heads(xc @ p["wk"].astype(dt)) * dh ** -0.5
+    v = heads(xm @ p["wv"].astype(dt))
+    gates = (xm @ p["wif"].astype(dt)).astype(jnp.float32) + p["bif"]
+    gi, gf = jnp.split(gates, 2, axis=-1)  # (B,T,H)
+    li = gi.transpose(0, 2, 1)  # log input gate (exp gate: li = ~i)
+    lf = jax.nn.log_sigmoid(gf).transpose(0, 2, 1)
+    return q, k, v, li, lf, z, xm
+
+
+def _mlstm_chunk(q, k, v, li, lf, c_hat, n_hat, m_prev):
+    """One chunk of the stabilised chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,T,dh) (q,k pre-scaled); li,lf: (B,H,T) fp32.
+    carry: c_hat (B,H,dk,dv), n_hat (B,H,dk), m_prev (B,H).
+    Returns h (B,H,T,dh) fp32 and the new carry.
+    """
+    B, H, T, dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    A = jnp.cumsum(lf, axis=-1)  # (B,H,T) inclusive cumulative log f
+    # intra-chunk decay matrix D[t,s] = A_t - A_s + li_s  (s <= t)
+    Dm = A[..., :, None] - A[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    Dm = jnp.where(mask, Dm, NEG_INF)
+    dmax = Dm.max(-1)  # (B,H,T)
+    e_inter = A + m_prev[..., None]  # exponent carried by the inter-chunk term
+    m_t = jnp.maximum(e_inter, dmax)  # (B,H,T) per-step stabiliser
+    W = jnp.exp(Dm - m_t[..., None])  # (B,H,T,T)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf)  # (B,H,T,T)
+    intra_num = jnp.einsum("bhts,bhsd->bhtd", W * scores, vf)
+    intra_den = jnp.einsum("bhts,bhts->bht", W, scores)
+    inter_scale = jnp.exp(e_inter - m_t)  # (B,H,T)
+    inter_num = jnp.einsum("bhtd,bhdv->bhtv", qf, c_hat) * inter_scale[..., None]
+    inter_den = jnp.einsum("bhtd,bhd->bht", qf, n_hat) * inter_scale
+    num = intra_num + inter_num
+    den = intra_den + inter_den
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk state
+    AT = A[..., -1]  # (B,H)
+    li_rel = AT[..., None] - A + li  # exp weight of step s in C_T
+    m_end = jnp.maximum(AT + m_prev, li_rel.max(-1))
+    w_end = jnp.exp(li_rel - m_end[..., None])  # (B,H,T)
+    c_new = jnp.exp(AT + m_prev - m_end)[..., None, None] * c_hat + jnp.einsum(
+        "bhs,bhsd,bhsv->bhdv", w_end, kf, vf
+    )
+    n_new = jnp.exp(AT + m_prev - m_end)[..., None] * n_hat + jnp.einsum(
+        "bhs,bhsd->bhd", w_end, kf
+    )
+    return h, (c_new, n_new, m_end)
+
+
+def mlstm_seq(
+    p: dict, cfg, x: jax.Array, state: MLSTMState, *, chunk: int = 128
+) -> Tuple[jax.Array, MLSTMState]:
+    """Full-sequence mLSTM block. x: (B, T, d)."""
+    dt = x.dtype
+    B, T, d = x.shape
+    H = cfg.num_heads
+    inner = _inner(cfg)
+    q, k, v, li, lf, z, xm = _mlstm_proj(p, cfg, x, state.conv)
+
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)))
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    nch = (T + pad) // chunk
+
+    def split_chunks(t):
+        return t.reshape(B, H, nch, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = split_chunks(q), split_chunks(k), split_chunks(v)
+    lis = li.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
+    lfs = lf.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
+
+    def step(carry, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, new = _mlstm_chunk(qc, kc, vc, lic, lfc, *carry)
+        return new, h
+
+    carry = (state.c, state.n, state.m)
+    carry, hs = jax.lax.scan(step, carry, (qs, ks, vs, lis, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, T + pad, inner // H)[:, :, :T]
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, inner).astype(dt)
+
+    h = layers.apply_groupnorm(p["gn"], h, cfg.num_heads)
+    h = h * jax.nn.silu(z)
+    y = h @ p["wdown"].astype(dt)
+    new_state = MLSTMState(
+        c=carry[0],
+        n=carry[1],
+        m=carry[2],
+        conv=jnp.concatenate([state.conv.astype(dt), xm], axis=1)[:, -(_CONV_W - 1) :],
+    )
+    return y, new_state
+
+
+def mlstm_step(p: dict, cfg, x: jax.Array, state: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    """Single decode step. x: (B, 1, d). Exact stabilised recurrence."""
+    dt = x.dtype
+    B = x.shape[0]
+    inner = _inner(cfg)
+    q, k, v, li, lf, z, xm = _mlstm_proj(p, cfg, x, state.conv)
+    qf = q[..., 0, :].astype(jnp.float32)  # (B,H,dh)
+    kf = k[..., 0, :].astype(jnp.float32)
+    vf = v[..., 0, :].astype(jnp.float32)
+    li0 = li[..., 0]
+    lf0 = lf[..., 0]
+    m_new = jnp.maximum(lf0 + state.m, li0)
+    fs = jnp.exp(lf0 + state.m - m_new)[..., None]
+    is_ = jnp.exp(li0 - m_new)[..., None]
+    c = fs[..., None] * state.c + is_[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = fs * state.n + is_ * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, inner).astype(dt)
+    h = layers.apply_groupnorm(p["gn"], h, cfg.num_heads)
+    h = h * jax.nn.silu(z)
+    y = h @ p["wdown"].astype(dt)
+    new_state = MLSTMState(
+        c=c, n=n, m=m_new,
+        conv=jnp.concatenate([state.conv.astype(dt), xm], axis=1)[:, 1:],
+    )
+    return y, new_state
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, inner) cell
+    n: jax.Array  # (B, inner) normaliser
+    h: jax.Array  # (B, inner) hidden (feeds recurrent gates)
+    m: jax.Array  # (B, inner) log stabiliser
+    conv: jax.Array  # (B, _CONV_W-1, d)
+
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "conv_w": layers.dense_init(ks[0], (_CONV_W, d)) * 0.1,
+        # input weights for 4 gates (z, i, f, o)
+        "wz": layers.dense_init(ks[1], (d, 4 * d)),
+        # block-diagonal recurrent weights per head, per gate
+        "rz": layers.dense_init(ks[2], (4, H, dh, dh), in_axis=2) * 0.5,
+        "bz": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ),
+        "gn": layers.init_groupnorm(cfg.num_heads, d),
+        "wup": layers.dense_init(ks[3], (d, 2 * d)),
+        "wdown": layers.dense_init(jax.random.fold_in(ks[3], 1), (d, d)),
+    }
+
+
+def init_slstm_state(cfg, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(
+        c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, _CONV_W - 1, d), dtype),
+    )
+
+
+def _slstm_cell(p, cfg, xc_t, state: SLSTMState):
+    """xc_t: (B, d) conv-ed input at one step; returns (h_out, new_state)."""
+    B, d = xc_t.shape
+    H = cfg.num_heads
+    dh = d // H
+    hp = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hp, p["rz"].astype(jnp.float32))
+    rec = rec.reshape(4, B, d)
+    pre = (xc_t @ p["wz"].astype(xc_t.dtype)).astype(jnp.float32) + p["bz"]
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    zp = zp + rec[0]
+    ip = ip + rec[1]
+    fp = fp + rec[2]
+    op = op + rec[3]
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    lf = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(lf + state.m, ip)
+    fs = jnp.exp(lf + state.m - m_new)
+    is_ = jnp.exp(ip - m_new)
+    c = fs * state.c + is_ * z
+    n = fs * state.n + is_
+    h = o * c / jnp.maximum(n, jnp.exp(-m_new))
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new, conv=state.conv)
+
+
+def slstm_seq(p: dict, cfg, x: jax.Array, state: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential scan over time (inherent to sLSTM). x: (B, T, d)."""
+    dt = x.dtype
+    B, T, d = x.shape
+    from repro.models.rglru import _conv_causal
+
+    xc = jax.nn.silu(_conv_causal(x, p["conv_w"], state.conv))
+
+    def step(st, xt):
+        h, st2 = _slstm_cell(p, cfg, xt, st)
+        return st2, h
+
+    st, hs = jax.lax.scan(step, state, xc.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(dt)  # (B,T,d)
+    hs = layers.apply_groupnorm(p["gn"], hs, cfg.num_heads)
+    up = hs @ p["wup"].astype(dt)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (a * jax.nn.gelu(b)) @ p["wdown"].astype(dt)
+    new_state = SLSTMState(
+        c=st.c, n=st.n, h=st.h, m=st.m,
+        conv=jnp.concatenate([state.conv.astype(dt), x], axis=1)[:, -(_CONV_W - 1) :],
+    )
+    return y, new_state
+
+
+def slstm_step(p: dict, cfg, x: jax.Array, state: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    """Single decode step. x: (B, 1, d)."""
+    dt = x.dtype
+    from repro.models.rglru import _conv_causal
+
+    xc = jax.nn.silu(_conv_causal(x, p["conv_w"], state.conv))
+    h, st = _slstm_cell(p, cfg, xc[:, 0], state)
+    hs = layers.apply_groupnorm(p["gn"], h[:, None, :].astype(dt), cfg.num_heads)
+    up = hs @ p["wup"].astype(dt)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (a * jax.nn.gelu(b)) @ p["wdown"].astype(dt)
+    new_state = SLSTMState(
+        c=st.c, n=st.n, h=st.h, m=st.m,
+        conv=jnp.concatenate([state.conv.astype(dt), x], axis=1)[:, 1:],
+    )
+    return y, new_state

@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At 1000+ node scale the inter-pod links (DCN) are the scarcest
+bandwidth; compressing the *pod-axis* gradient all-reduce 4x (fp32 ->
+int8 + per-tensor scale) with error feedback keeps convergence intact
+(residual is re-added next step).
+
+Usage (manual-collectives training variant, see train/loop.py):
+
+    q, scale, new_err = compress(g + err)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), 'pod')     # cheap link
+    g_avg = decompress(q_sum, scale_psum) / pod_size
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x fp32 -> (int8 q, scalar scale, residual error). x ~ q * scale."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    err = x - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_tree):
+    """Tree-wise error-feedback compression. Returns (q_tree, scales, errs)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = treedef.flatten_up_to(err_tree) if err_tree is not None else [0.0] * len(leaves)
+    qs, scales, new_errs = [], [], []
+    for g, e in zip(leaves, errs):
+        q, s, ne = compress(g.astype(jnp.float32) + e)
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(ne)
+    return (
+        jax.tree.unflatten(treedef, qs),
+        jax.tree.unflatten(treedef, scales),
+        jax.tree.unflatten(treedef, new_errs),
+    )
+
+
+def decompress_tree(q_tree, scale_tree):
+    return jax.tree.map(lambda q, s: decompress(q, s), q_tree, scale_tree)
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)

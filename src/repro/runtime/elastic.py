@@ -1,0 +1,45 @@
+"""Elastic re-meshing: choose a new mesh for the surviving device set.
+
+After losing a pod/host, the job restarts on fewer chips.  The policy:
+keep the 'model' axis intact if possible (TP degree is baked into layer
+divisibility) and shrink the data axes; fall back to shrinking 'model'
+through the config's divisors.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def propose_mesh_shape(
+    n_devices: int,
+    *,
+    preferred_model: int = 16,
+    want_pod_axis: bool = False,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable (data, model) [or (pod, data, model)] <= n_devices."""
+    model = preferred_model
+    while model > 1 and n_devices % model:
+        model //= 2
+    rest = n_devices // model
+    if want_pod_axis and rest % 2 == 0 and rest >= 4:
+        return (2, rest // 2, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None, *, preferred_model: int = 16,
+                      want_pod_axis: bool = False):
+    devices = list(devices if devices is not None else jax.devices())
+    shape, axes = propose_mesh_shape(
+        len(devices), preferred_model=preferred_model, want_pod_axis=want_pod_axis
+    )
+    n = 1
+    for s in shape:
+        n *= s
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+
+    return Mesh(dev_array, axes)

@@ -1,0 +1,109 @@
+"""Fault tolerance: heartbeats, straggler detection, restart driver.
+
+On a real multi-pod job these hooks bind to the cluster manager; here
+the control-plane logic is implemented and unit-tested against a
+simulated cluster (the container has one host), which is exactly the
+part a framework owns — detection thresholds, restart policy, elastic
+re-meshing — while transport is the environment's.
+
+* :class:`HeartbeatMonitor` — per-worker liveness with wall-clock
+  timeouts; ``dead_workers`` drives elastic restart.
+* :class:`StragglerDetector` — per-worker step-time EMA + z-score; slow
+  workers are flagged for replacement/exclusion (at scale, a straggling
+  host silently halves fleet throughput — detection must be cheap and
+  continuous).
+* :func:`run_with_restarts` — the driver loop: run -> on failure,
+  restore newest checkpoint onto the surviving mesh (see
+  ``runtime.elastic``) -> continue.  Deterministic data (pipeline is a
+  pure function of step) makes the restart bit-exact.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: List[str], timeout_s: float = 60.0):
+        self.timeout = timeout_s
+        self.last_seen: Dict[str, float] = {w: time.monotonic() for w in workers}
+
+    def beat(self, worker: str, now: Optional[float] = None) -> None:
+        self.last_seen[worker] = time.monotonic() if now is None else now
+
+    def dead_workers(self, now: Optional[float] = None) -> Set[str]:
+        now = time.monotonic() if now is None else now
+        return {w for w, t in self.last_seen.items() if now - t > self.timeout}
+
+
+class StragglerDetector:
+    """Step-time EMA + cross-worker z-score straggler flagging."""
+
+    def __init__(self, workers: List[str], alpha: float = 0.2, z_thresh: float = 3.0,
+                 min_steps: int = 5):
+        self.alpha, self.z, self.min_steps = alpha, z_thresh, min_steps
+        self.ema: Dict[str, float] = {w: 0.0 for w in workers}
+        self.count: Dict[str, int] = {w: 0 for w in workers}
+
+    def record(self, worker: str, step_time_s: float) -> None:
+        c = self.count[worker]
+        self.ema[worker] = step_time_s if c == 0 else (
+            self.alpha * step_time_s + (1 - self.alpha) * self.ema[worker]
+        )
+        self.count[worker] = c + 1
+
+    def stragglers(self) -> Set[str]:
+        ready = [w for w, c in self.count.items() if c >= self.min_steps]
+        if len(ready) < 3:
+            return set()
+        vals = np.asarray([self.ema[w] for w in ready])
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-9
+        return {w for w, v in zip(ready, vals) if (v - med) / (1.4826 * mad) > self.z}
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: str  # 'crash' | 'straggler'
+    workers: Set[str] = field(default_factory=set)
+
+
+def run_with_restarts(
+    *,
+    train_some_steps: Callable[[int, int], int],
+    save_ckpt: Callable[[int], None],
+    restore_ckpt: Callable[[], int],
+    total_steps: int,
+    ckpt_every: int,
+    failure_at: Optional[Dict[int, FailureEvent]] = None,
+    max_restarts: int = 10,
+) -> Dict[str, object]:
+    """Restart driver (used by launch/train.py and the FT tests).
+
+    ``train_some_steps(start, n)`` runs n steps, may raise RuntimeError
+    (simulated via ``failure_at`` in tests); returns the reached step.
+    """
+    failure_at = failure_at or {}
+    restarts = 0
+    step = 0
+    log: List[str] = []
+    while step < total_steps:
+        try:
+            nxt = min(step + ckpt_every, total_steps)
+            if step in failure_at:
+                ev = failure_at.pop(step)
+                raise RuntimeError(f"simulated {ev.kind} at step {ev.step}: {ev.workers}")
+            step = train_some_steps(step, nxt - step)
+            save_ckpt(step)
+            log.append(f"ckpt@{step}")
+        except RuntimeError as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log.append(f"restart#{restarts}: {e}")
+            step = restore_ckpt()
+    return {"final_step": step, "restarts": restarts, "log": log}

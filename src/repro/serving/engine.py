@@ -1,0 +1,154 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+``make_serve_fns(cfg)`` returns the pure jittable pair used by both the
+engine and the dry-run cells:
+
+* ``prefill(params, prompt_inputs...) -> (logits, cache)``
+* ``decode_step(params, cache, token) -> (logits, cache)``
+
+``ServeEngine`` adds request scheduling on top: a fixed pool of batch
+slots, each slot independently in {empty, prefilling, decoding}; new
+requests are admitted into free slots between decode steps (continuous
+batching).  Slot state is host-side; the device-side cache is a single
+batched pytree so every decode step is one fused program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
+    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        from repro.models import lm
+
+        def prefill(params, tokens, capacity):
+            return lm.lm_prefill(params, cfg, tokens, capacity)
+
+        def decode(params, cache, token):
+            return lm.lm_decode_step(params, cfg, cache, token)
+
+        return prefill, decode
+    if cfg.family == "audio":
+        from repro.models import whisper
+
+        def prefill(params, frames, tokens, capacity):
+            return whisper.whisper_prefill(params, cfg, frames, tokens, capacity)
+
+        def decode(params, cache, token):
+            return whisper.whisper_decode_step(params, cfg, cache, token)
+
+        return prefill, decode
+    if cfg.family == "vlm":
+        from repro.models import vlm
+
+        def prefill(params, pyramid, tokens, capacity):
+            return vlm.vlm_prefill(params, cfg, pyramid, tokens, capacity)
+
+        def decode(params, cache, token):
+            return vlm.vlm_decode_step(params, cfg, cache, token)
+
+        return prefill, decode
+    raise ValueError(f"{cfg.family} has no serving path")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed slot pool (LM families)."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, capacity: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        from repro.models import lm
+
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.capacity = capacity
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self._occupant: List[Optional[Request]] = [None] * slots
+        self._queue: List[Request] = []
+        dt = jnp.dtype(cfg.dtype)
+        self.cache = lm.init_cache(cfg, slots, capacity, dt)
+        self._prefill_one = jax.jit(
+            lambda p, t: lm.lm_prefill(p, cfg, t, capacity)
+        )
+        self._decode = jax.jit(lambda p, c, t: lm.lm_decode_step(p, cfg, c, t))
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self._occupant[s] is None and self._queue:
+                req = self._queue.pop(0)
+                logits, cache1 = self._prefill_one(self.params, req.prompt[None, :])
+                # splice slot s of the batched cache with the fresh cache
+                self.cache = jax.tree.map(
+                    lambda big, one: _splice(big, one, s), self.cache, cache1
+                )
+                req.out.append(self._sample(np.asarray(logits)[0]))
+                self._occupant[s] = req
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(logits.argmax())
+        p = np.exp((logits - logits.max()) / self.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def step(self):
+        """One engine tick: admit, batched decode, retire."""
+        self._admit()
+        tok = np.zeros((self.slots,), np.int32)
+        active = []
+        for s, req in enumerate(self._occupant):
+            if req is not None:
+                tok[s] = req.out[-1]
+                active.append(s)
+        if not active:
+            return False
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tok))
+        logits = np.asarray(logits)
+        for s in active:
+            req = self._occupant[s]
+            req.out.append(self._sample(logits[s]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self._occupant[s] = None
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step() and not self._queue:
+                break
+
+
+def _splice(big: jax.Array, one: jax.Array, s: int) -> jax.Array:
+    """Write the single-request cache leaf into slot s of the batched leaf.
+
+    Cache leaves are either stacked-over-layers (n, B, ...) or plain
+    (B, ...); the batch dim is the one where shapes differ by slots vs 1.
+    Scalars (pos counters) are shared across slots and taken from `one`.
+    """
+    if big.ndim == 0 or big.shape == one.shape:
+        return one
+    # find batch axis: first axis where big != one
+    for ax in range(big.ndim):
+        if big.shape[ax] != one.shape[ax]:
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slice(s, s + 1)
+            return big.at[tuple(idx)].set(one)
+    return one

@@ -1,0 +1,78 @@
+"""TrainState pytree + model-family dispatch (init / loss)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_model(key, cfg):
+    """Family dispatch for parameter init."""
+    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        from repro.models import lm
+
+        return lm.init_lm(key, cfg)
+    if cfg.family == "audio":
+        from repro.models import whisper
+
+        return whisper.init_whisper(key, cfg)
+    if cfg.family == "vlm":
+        from repro.models import vlm
+
+        return vlm.init_vlm(key, cfg)
+    if cfg.family == "vision":
+        from repro.core import deformable_transformer as dt
+
+        return dt.init_detr(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg) -> Callable[[Any, Dict[str, jax.Array]], jax.Array]:
+    """Family dispatch for the training loss: f(params, batch) -> scalar."""
+    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        from repro.models import lm
+
+        def f(params, batch, remat=True):
+            return lm.lm_loss(params, cfg, batch["tokens"], batch["targets"], remat=remat)
+
+        return f
+    if cfg.family == "audio":
+        from repro.models import whisper
+
+        def f(params, batch, remat=True):
+            return whisper.whisper_loss(
+                params, cfg, batch["frames"], batch["tokens"], batch["targets"], remat=remat
+            )
+
+        return f
+    if cfg.family == "vlm":
+        from repro.models import vlm
+
+        def f(params, batch, remat=True):
+            return vlm.vlm_loss(
+                params, cfg, batch["pyramid"], batch["tokens"], batch["targets"], remat=remat
+            )
+
+        return f
+    if cfg.family == "vision":
+        from repro.core import deformable_transformer as dt
+
+        def f(params, batch, remat=True):
+            return dt.detr_loss(params, cfg, batch, remat=remat)
+
+        return f
+    raise ValueError(cfg.family)
+
+
+def init_state(key, cfg) -> TrainState:
+    params = init_model(key, cfg)
+    return TrainState(params=params, opt=adamw.init_adamw(params), step=jnp.zeros((), jnp.int32))

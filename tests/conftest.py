@@ -1,0 +1,29 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# strictly dryrun.py's, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_trees_close(a, b, atol=1e-5, rtol=1e-5):
+    import jax
+
+    for (ka, la), (kb, lb) in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0],
+        jax.tree_util.tree_flatten_with_path(b)[0],
+    ):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), atol=atol, rtol=rtol,
+            err_msg=f"mismatch at {ka}",
+        )

@@ -1,0 +1,156 @@
+"""Attention + recurrent block unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, rglru, xlstm
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+                num_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _naive_attend(q, k, v, causal, window=0):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, k).astype(jnp.float32)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = jnp.zeros((Sq, Sk))
+    if causal:
+        m = jnp.where(kpos > qpos, -1e30, m)
+    if window:
+        m = jnp.where(kpos <= qpos - window, -1e30, m)
+    w = jax.nn.softmax(s + m[None, None], axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 3), (False, 0)])
+@pytest.mark.parametrize("q_chunk", [4, 64])
+def test_attend_matches_naive(causal, window, q_chunk):
+    B, S, H, hd = 2, 13, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = attention.attend(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    ref = _naive_attend(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_chunking_invariance():
+    B, S, H, hd = 1, 37, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks)
+    o1 = attention.attend(q, k, v, causal=True, q_chunk=5)
+    o2 = attention.attend(q, k, v, causal=True, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_gqa_grouping():
+    """GQA must equal MHA with kv heads repeated."""
+    cfg = _cfg(num_kv_heads=2)
+    p = attention.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model))
+    y = attention.attention_fwd(p, cfg, x, causal=True)
+    # simulate MHA by expanding wk/wv columns per group
+    cfg_mha = _cfg(num_kv_heads=4)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    wk = p["wk"].reshape(cfg.d_model, cfg.num_kv_heads, cfg.head_dim)
+    wk = jnp.repeat(wk, groups, axis=1).reshape(cfg.d_model, -1)
+    wv = p["wv"].reshape(cfg.d_model, cfg.num_kv_heads, cfg.head_dim)
+    wv = jnp.repeat(wv, groups, axis=1).reshape(cfg.d_model, -1)
+    p2 = dict(p, wk=wk, wv=wv)
+    y2 = attention.attention_fwd(p2, cfg_mha, x, causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-5)
+
+
+def test_ring_cache_equivalence_long_decode():
+    """Ring-buffer window cache == full-cache windowed attention."""
+    cfg = _cfg(num_kv_heads=1, window=4)
+    p = attention.init_attention(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 11
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    # reference: full-sequence local attention, take last position outputs
+    ref = attention.attention_fwd(p, cfg, x, causal=True, window=cfg.window)
+    # decode path: prefill 5 then decode 6
+    cache = attention.init_kv_cache(cfg, B, cfg.window, x.dtype)
+    y, cache = attention.prefill_attention(p, cfg, x[:, :5], cache, window=cfg.window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, :5]), atol=1e-5)
+    for t in range(5, S):
+        y, cache = attention.decode_attention(p, cfg, x[:, t : t + 1], cache,
+                                              window=cfg.window)
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(ref[:, t]), atol=1e-5, err_msg=f"t={t}"
+        )
+
+
+def test_mlstm_chunk_vs_step():
+    cfg = _cfg(family="ssm", d_ff=0)
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 19
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 0.5
+    st0 = xlstm.init_mlstm_state(cfg, B, jnp.float32)
+    y_seq, st_seq = xlstm.mlstm_seq(p, cfg, x, st0, chunk=5)
+    st = st0
+    ys = []
+    for t in range(T):
+        y, st = xlstm.mlstm_step(p, cfg, x[:, t : t + 1], st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_seq), atol=2e-4
+    )
+    eff = lambda s: np.asarray(s.c * jnp.exp(s.m)[..., None, None])
+    np.testing.assert_allclose(eff(st_seq), eff(st), atol=2e-4, rtol=1e-3)
+
+
+def test_rglru_scan_vs_step():
+    cfg = _cfg(family="hybrid", lru_width=32)
+    p = rglru.init_rglru(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 17
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 0.5
+    st0 = rglru.init_rglru_state(cfg, B, jnp.float32)
+    y_seq, st_seq = rglru.rglru_seq(p, cfg, x, st0)
+    st = st0
+    ys = []
+    for t in range(T):
+        y, st = rglru.rglru_step(p, cfg, x[:, t : t + 1], st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_seq), atol=2e-4
+    )
+    np.testing.assert_allclose(np.asarray(st_seq.h), np.asarray(st.h), atol=2e-4)
+
+
+def test_slstm_scan_vs_step():
+    cfg = _cfg(family="ssm", d_ff=0)
+    p = xlstm.init_slstm(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 13
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 0.5
+    st0 = xlstm.init_slstm_state(cfg, B, jnp.float32)
+    y_seq, _ = xlstm.slstm_seq(p, cfg, x, st0)
+    st = st0
+    ys = []
+    for t in range(T):
+        y, st = xlstm.slstm_step(p, cfg, x[:, t : t + 1], st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_seq), atol=2e-4
+    )
+
+
+def test_mlstm_long_range_stability():
+    """Exponential gating must not overflow over long sequences."""
+    cfg = _cfg(family="ssm", d_ff=0)
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    B, T = 1, 512
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 2.0
+    st0 = xlstm.init_mlstm_state(cfg, B, jnp.float32)
+    y, st = xlstm.mlstm_seq(p, cfg, x, st0, chunk=64)
+    assert bool(jnp.isfinite(y).all())
+    assert bool(jnp.isfinite(st.c).all())

@@ -1,0 +1,130 @@
+"""Hypothesis property tests for flash attention (GQA-native, chunked)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import flash
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def _naive(q, k, v, causal, window, q_offset, valid=None):
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * hd ** -0.5, kk).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    m = jnp.zeros((Sq, k.shape[1]))
+    if causal:
+        m = jnp.where(kpos > qpos, -1e30, m)
+    if window:
+        m = jnp.where(kpos <= qpos - window, -1e30, m)
+    s = s + m[None, None]
+    if valid is not None:
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vv)
+
+
+cases = st.tuples(
+    st.integers(1, 2),            # B
+    st.integers(1, 37),           # Sq
+    st.integers(1, 41),           # Sk (cross-attention allowed)
+    st.sampled_from([(4, 1), (4, 2), (4, 4), (6, 3)]),  # (H, Kv)
+    st.sampled_from([4, 8]),      # hd
+    st.booleans(),                # causal
+    st.sampled_from([0, 3]),      # window
+    st.sampled_from([1, 4, 16]),  # kv_chunk
+    st.integers(0, 5000),         # seed
+)
+
+
+@given(cases)
+@settings(**SET)
+def test_flash_equals_naive(args):
+    B, Sq, Sk, (H, Kv), hd, causal, window, kv_chunk, seed = args
+    if causal or window:
+        Sk = Sq  # masks assume aligned positions for self-attention
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, Kv, hd))
+    v = jax.random.normal(ks[2], (B, Sk, Kv, hd))
+    out = flash.flash_attend(q, k, v, None, causal, window, 0, kv_chunk)
+    ref = _naive(q, k, v, causal, window, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(cases)
+@settings(**SET)
+def test_flash_grads_equal_naive(args):
+    B, Sq, Sk, (H, Kv), hd, causal, window, kv_chunk, seed = args
+    if causal or window:
+        Sk = Sq
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, Kv, hd))
+    v = jax.random.normal(ks[2], (B, Sk, Kv, hd))
+    g = jax.random.normal(ks[3], (B, Sq, H, hd))
+
+    def lf(q, k, v):
+        return jnp.vdot(flash.flash_attend(q, k, v, None, causal, window, 0, kv_chunk), g)
+
+    def lr(q, k, v):
+        return jnp.vdot(_naive(q, k, v, causal, window, 0), g)
+
+    gf = jax.grad(lf, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gf, gr):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, err_msg=f"d{name}"
+        )
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 7, 16]))
+@settings(max_examples=10, deadline=None)
+def test_flash_valid_mask_decode(seed, kv_chunk):
+    """Per-key validity masks (decode caches) match masked naive attention."""
+    B, Sk, H, Kv, hd = 2, 19, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, Kv, hd))
+    v = jax.random.normal(ks[2], (B, Sk, Kv, hd))
+    nvalid = jax.random.randint(ks[3], (B,), 1, Sk + 1)
+    valid = jnp.arange(Sk)[None, :] < nvalid[:, None]
+    out = flash.flash_attend(q, k, v, valid, False, 0, 0, kv_chunk)
+    ref = _naive(q, k, v, False, 0, 0, valid=valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_flash_quant_decode_tracks_fp(seed):
+    """int8-cache decode stays within quantisation error of fp attention."""
+    from repro.models import attention
+
+    B, Sk, H, Kv, hd = 2, 23, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, Kv, hd))
+    v = jax.random.normal(ks[2], (B, Sk, Kv, hd))
+    kq, ksc = attention._quantize(k)
+    vq, vsc = attention._quantize(v)
+    out_q = flash.flash_decode_quant(q, kq, vq, ksc, vsc, None, kv_chunk=8)
+    ref = _naive(q, k, v, False, 0, 0)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(ref), atol=0.05)
+
+
+def test_q_chunk_invariance():
+    """Tiling must not change results (q chunked at 2048 internally)."""
+    B, S, H, Kv, hd = 1, 2049, 2, 1, 8  # crosses the q-tile boundary
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Kv, hd))
+    v = jax.random.normal(ks[2], (B, S, Kv, hd))
+    out = flash.flash_attend(q, k, v, None, True, 0, 0, 512)
+    ref = _naive(q, k, v, True, 0, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,63 @@
+"""HLO walker: trip-count multiplication must recover true FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_scan_flops_multiplied():
+    """A scan of N matmuls must count N * flops(one matmul)."""
+    N, M = 7, 64
+    w = jnp.ones((N, M, M))
+
+    def f(x, w):
+        def step(c, wi):
+            return c @ wi, None
+
+        y, _ = jax.lax.scan(step, x, w)
+        return y
+
+    x = jnp.ones((M, M))
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = ha.analyze(compiled.as_text())
+    expect = N * 2 * M * M * M
+    # XLA may rearrange but dot flops should match within 2x
+    assert expect * 0.5 <= res["flops"] <= expect * 2.01, (res["flops"], expect)
+
+
+def test_plain_matmul_flops_exact():
+    M, K, Nn = 32, 48, 64
+    a = jnp.ones((M, K))
+    b = jnp.ones((K, Nn))
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    res = ha.analyze(compiled.as_text())
+    assert abs(res["flops"] - 2 * M * K * Nn) / (2 * M * K * Nn) < 0.01
+
+
+def test_nested_scan_multiplies():
+    N1, N2, M = 3, 5, 32
+
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ jnp.eye(M), None
+
+            c2, _ = jax.lax.scan(inner, c, None, length=N2)
+            return c2, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=N1)
+        return y
+
+    compiled = jax.jit(f).lower(jnp.ones((M, M))).compile()
+    res = ha.analyze(compiled.as_text())
+    expect = N1 * N2 * 2 * M ** 3
+    assert expect * 0.5 <= res["flops"] <= expect * 2.01
+
+
+def test_memory_model_nonzero_and_bounded():
+    x = jnp.ones((256, 256))
+    compiled = jax.jit(lambda x: jnp.tanh(x) + 1.0).lower(x).compile()
+    res = ha.analyze(compiled.as_text())
+    b = 256 * 256 * 4
+    assert b <= res["mem_bytes"] <= 10 * b

@@ -1,0 +1,105 @@
+"""Hypothesis property tests for the MSDA op's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import msda_ref
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def _mk(B, Q, H, D, P, levels, seed):
+    S = sum(h * w for h, w in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D))
+    loc = jax.random.uniform(ks[1], (B, Q, H, L, P, 2), minval=-0.2, maxval=1.2)
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (B, Q, H, L, P)).reshape(B, Q, H, -1)
+    ).reshape(B, Q, H, L, P)
+    return value, loc, attn
+
+
+dims = st.tuples(
+    st.integers(1, 2),        # B
+    st.integers(1, 17),       # Q
+    st.integers(1, 3),        # H
+    st.sampled_from([4, 8]),  # D
+    st.integers(1, 4),        # P
+    st.sampled_from([((5, 7),), ((8, 6), (4, 3))]),
+    st.integers(0, 10_000),   # seed
+)
+
+
+@given(dims)
+@settings(**SET)
+def test_kernel_equals_oracle(args):
+    B, Q, H, D, P, levels, seed = args
+    value, loc, attn = _mk(B, Q, H, D, P, levels, seed)
+    out = ops.msda(value, levels, loc, attn, backend="pallas")
+    ref = msda_ref(value, levels, loc, attn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@given(dims, st.floats(-2.0, 2.0), st.floats(-2.0, 2.0))
+@settings(**SET)
+def test_linearity_in_value(args, alpha, beta):
+    """msda(a*v1 + b*v2) == a*msda(v1) + b*msda(v2)."""
+    B, Q, H, D, P, levels, seed = args
+    v1, loc, attn = _mk(B, Q, H, D, P, levels, seed)
+    v2, _, _ = _mk(B, Q, H, D, P, levels, seed + 1)
+    lhs = ops.msda(alpha * v1 + beta * v2, levels, loc, attn, backend="pallas")
+    rhs = alpha * ops.msda(v1, levels, loc, attn, backend="pallas") + beta * ops.msda(
+        v2, levels, loc, attn, backend="pallas"
+    )
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=5e-5)
+
+
+@given(dims)
+@settings(**SET)
+def test_constant_field_interior(args):
+    """Constant value field + interior points -> exactly that constant
+    (attention weights sum to 1)."""
+    B, Q, H, D, P, levels, seed = args
+    _, loc, attn = _mk(B, Q, H, D, P, levels, seed)
+    loc = jnp.clip(loc, 0.3, 0.7)  # safely interior
+    S = sum(h * w for h, w in levels)
+    value = jnp.full((B, S, H, D), 2.5)
+    out = ops.msda(value, levels, loc, attn, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), 2.5, atol=1e-4)
+
+
+@given(dims)
+@settings(**SET)
+def test_attention_weight_homogeneity(args):
+    """Scaling attention weights scales the output (degree-1 homogeneous)."""
+    B, Q, H, D, P, levels, seed = args
+    value, loc, attn = _mk(B, Q, H, D, P, levels, seed)
+    o1 = ops.msda(value, levels, loc, 3.0 * attn, backend="pallas")
+    o2 = 3.0 * ops.msda(value, levels, loc, attn, backend="pallas")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=5e-5)
+
+
+@given(dims)
+@settings(**SET)
+def test_grad_value_conservation(args):
+    """sum over value of grad_value == sum over queries of (attn-weighted
+    corner weights) * gout — with gout = ones and all-interior points the
+    scatter conserves mass: sum(grad_value) == sum(attn)... == Q*B*H*D-ish.
+
+    Concretely: d/dv sum(msda(v)) applied to constant direction =
+    sum(attn * bilinear-partition-of-unity) per (b,h,d); interior points
+    have partition-of-unity corners, so total == sum(attn) * D.
+    """
+    B, Q, H, D, P, levels, seed = args
+    value, loc, attn = _mk(B, Q, H, D, P, levels, seed)
+    loc = jnp.clip(loc, 0.3, 0.7)
+
+    g = jax.grad(
+        lambda v: jnp.sum(ops.msda(v, levels, loc, attn, backend="pallas"))
+    )(value)
+    np.testing.assert_allclose(
+        float(jnp.sum(g)), float(jnp.sum(attn)) * D, rtol=1e-3
+    )

@@ -1,0 +1,124 @@
+"""Sharding rules + distributed MSDA (shard_map on a debug mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, reduced
+from repro.core import msda as msda_mod
+from repro.kernels.ref import msda_ref
+from repro.launch import mesh as mesh_lib
+from repro.sharding import rules
+from repro.train import state as train_state
+
+
+def test_param_specs_cover_all_archs():
+    mesh = mesh_lib.make_debug_mesh()
+    for arch in ("llama3-8b", "dbrx-132b", "grok-1-314b", "xlstm-350m",
+                 "recurrentgemma-2b", "whisper-large-v3", "phi-3-vision-4.2b"):
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda c=cfg: train_state.init_model(jax.random.PRNGKey(0), c))
+        moe_e = cfg.moe.num_experts if cfg.moe else 0
+        specs = rules.param_specs(shapes, mesh, moe_experts=moe_e)
+        for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree_util.tree_flatten_with_path(specs)[0],
+        ):
+            assert len(spec) <= leaf.ndim, (arch, path, spec, leaf.shape)
+
+
+def test_resolve_axes_multi_pod():
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    assert rules.resolve_axis("dp", mesh) == ("pod", "data")
+    assert rules.resolve_axis("tp", mesh) == "model"
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+    assert rules.resolve_axis("dp", mesh1) == "data"
+
+
+def test_hint_degrades_nondivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with rules.use_mesh(mesh):
+        x = jnp.ones((3, 5))
+        y = rules.hint(x, "dp", "tp")  # 3 % 1 == 0 fine on 1-dev mesh
+        assert y.shape == x.shape
+
+
+def test_ep_vs_tp_moe_rule():
+    mesh = mesh_lib.make_debug_mesh()  # model axis size 1 -> divisible
+    cfg = get_config("grok-1-314b")
+    shapes = jax.eval_shape(lambda: train_state.init_model(jax.random.PRNGKey(0), cfg))
+    specs = rules.param_specs(shapes, mesh, moe_experts=8)
+    # just structural sanity on a 1-dev mesh; the divisibility branch is
+    # exercised against the production mesh in the dry-run
+    leaves = jax.tree_util.tree_flatten_with_path(specs)[0]
+    assert any("experts_wi" in str(p) for p, _ in leaves)
+
+
+@pytest.mark.parametrize("query_parallel", [False, True])
+def test_distributed_msda_matches_ref(query_parallel):
+    levels = ((8, 8), (4, 4))
+    B, Q, H, D, Pn = 2, 16, 2, 8, 2
+    S = sum(h * w for h, w in levels)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D))
+    loc = jax.random.uniform(ks[1], (B, Q, H, len(levels), Pn, 2))
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (B, Q, H, len(levels), Pn)).reshape(B, Q, H, -1)
+    ).reshape(B, Q, H, len(levels), Pn)
+    ref = msda_ref(value, levels, loc, attn)
+    mesh = mesh_lib.make_debug_mesh()
+    with rules.use_mesh(mesh):
+        out = msda_mod.distributed_msda(
+            value, levels, loc, attn, mesh=mesh,
+            query_parallel=query_parallel, backend="ref",
+        )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_distributed_msda_grad_value_reduction():
+    """query_parallel mode: grad wrt (replicated) value must equal the
+    single-device grad — shard_map's transpose inserts the psum that
+    realises the paper's staggered-scatter as partials+reduce."""
+    levels = ((6, 6),)
+    B, Q, H, D, Pn = 1, 8, 1, 8, 2
+    S = 36
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D))
+    loc = jax.random.uniform(ks[1], (B, Q, H, 1, Pn, 2))
+    attn = jax.nn.softmax(jax.random.normal(ks[2], (B, Q, H, 1, Pn)), axis=-1)
+    mesh = mesh_lib.make_debug_mesh()
+
+    def loss_dist(v):
+        return jnp.sum(
+            msda_mod.distributed_msda(
+                v, levels, loc, attn, mesh=mesh, query_parallel=True, backend="ref"
+            )
+        )
+
+    def loss_ref(v):
+        return jnp.sum(msda_ref(v, levels, loc, attn))
+
+    with rules.use_mesh(mesh):
+        g1 = jax.grad(loss_dist)(value)
+    g2 = jax.grad(loss_ref)(value)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_msda_attention_module():
+    from repro.configs.base import MSDAConfig
+
+    mc = MSDAConfig(levels=((8, 8), (4, 4)), num_points=2, num_heads=2, backend="ref")
+    d = 32
+    p = msda_mod.init_msda_attention(jax.random.PRNGKey(0), d, mc)
+    B, Q = 2, 10
+    S = sum(h * w for h, w in mc.levels)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Q, d))
+    feats = jax.random.normal(jax.random.PRNGKey(2), (B, S, d))
+    refs = jax.random.uniform(jax.random.PRNGKey(3), (B, Q, 2))
+    out = msda_mod.msda_attention(p, mc, q, feats, refs)
+    assert out.shape == (B, Q, d)
+    assert jnp.isfinite(out).all()
+    # pallas backend agrees with ref backend through the module
+    out_pal = msda_mod.msda_attention(p, mc, q, feats, refs, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out), atol=2e-5)
