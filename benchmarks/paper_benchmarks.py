@@ -24,7 +24,6 @@ budget): levels 64..4, sum HW = 5456 queries, 8 heads x 32 dim,
 """
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
@@ -32,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_util import row, time_fn
-from repro.kernels import ops
+from repro.kernels import plan as plan_mod
 from repro.kernels.ref import msda_grid_sample_baseline, msda_ref
 
 LEVELS = ((64, 64), (32, 32), (16, 16), (8, 8), (4, 4))
@@ -135,6 +134,8 @@ def table4_ablation():
     ).reshape(B, q, H, len(levels), P)
     gout = jax.random.normal(ks[3], (B, q, H * D))
 
+    # each ablation is one committed MsdaSpec -> MsdaPlan: tuning lives on
+    # the spec, the plan is built once, and timing loops just execute it
     variants = {
         "default": dict(fuse_gather=True, adaptive_block=True),
         "-adaptive_veclen": dict(fuse_gather=True, adaptive_block=False),
@@ -142,20 +143,23 @@ def table4_ablation():
         "-all": dict(fuse_gather=False, adaptive_block=False),
     }
     for name, kw in variants.items():
-        bq = ops.plan_blocks(levels, P, D, q, adaptive=kw["adaptive_block"])
-        f = jax.jit(functools.partial(
-            ops.msda, spatial_shapes=levels, backend="pallas",
-            fuse_gather=kw["fuse_gather"], adaptive_block=kw["adaptive_block"],
-        ))
-        t = time_fn(lambda: f(value, sampling_locations=loc, attention_weights=attn),
-                    warmup=1, iters=3)
-        g, veclen = _kernel_stats(levels, q, bq, kw["fuse_gather"])
-        row(f"table4.fwd.{name}", t, f"gathers={g};avg_vec_rows={veclen:.0f};block_q={bq}")
+        spec = plan_mod.MsdaSpec(
+            spatial_shapes=levels, num_heads=H, head_dim=D, num_points=P,
+            num_queries=q, dtype="float32", **kw)
+        p = plan_mod.msda_plan(spec, backend="pallas")
+        f = jax.jit(lambda v, l, a, p=p: p(v, l, a))
+        t = time_fn(lambda: f(value, loc, attn), warmup=1, iters=3)
+        g, veclen = _kernel_stats(levels, q, p.block_q, kw["fuse_gather"])
+        row(f"table4.fwd.{name}", t,
+            f"gathers={g};avg_vec_rows={veclen:.0f};block_q={p.block_q}")
 
     # backward: scatter fusion ablation
     for name, fuse in (("default", True), ("-scatter_fusion", False)):
-        f = jax.jit(jax.grad(lambda v: jnp.vdot(
-            ops.msda(v, levels, loc, attn, backend="pallas", fuse_scatter=fuse), gout)))
+        spec = plan_mod.MsdaSpec(
+            spatial_shapes=levels, num_heads=H, head_dim=D, num_points=P,
+            num_queries=q, dtype="float32", fuse_scatter=fuse)
+        p = plan_mod.msda_plan(spec, backend="pallas")
+        f = jax.jit(jax.grad(lambda v, p=p: jnp.vdot(p(v, loc, attn), gout)))
         t = time_fn(lambda: f(value), warmup=1, iters=3)
         scatters = 1 if fuse else 4
         row(f"table4.bwd.{name}", t, f"scatters_per_step={scatters}")

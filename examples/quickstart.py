@@ -1,4 +1,12 @@
-"""Quickstart: the xMSDA op in 30 lines.
+"""Quickstart: plan once, execute many — the xMSDA plan/execute API.
+
+The paper's lesson is that MSDA gets fast when the static problem
+geometry is exploited *ahead of time*.  The API mirrors that:
+
+1. describe the problem once (``MsdaSpec``),
+2. build a plan (``msda_plan`` — backend registry + block planning +
+   VJP wiring, all committed here),
+3. execute the plan per batch (``plan(value, loc, attn)``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import msda, plan_blocks
+from repro.kernels import registry
+from repro.kernels.plan import MsdaSpec, msda_plan, plan_cache_info
 from repro.kernels.ref import msda_grid_sample_baseline, msda_ref
 
 # a small multi-scale feature pyramid: 3 levels, 2 heads x 16 dims
@@ -23,22 +32,37 @@ attn = jax.nn.softmax(
     jax.random.normal(ka, (B, Q, H, len(levels), P)).reshape(B, Q, H, -1)
 ).reshape(B, Q, H, len(levels), P)
 
-# three implementations of the same op
-out_base = msda_grid_sample_baseline(value, levels, loc, attn)  # paper "Baseline"
+# 1-2) spec + plan: every hardware-aware decision happens HERE, once.
+spec = MsdaSpec(spatial_shapes=levels, num_heads=H, head_dim=D,
+                num_points=P, num_queries=Q, dtype="float32")
+plan = msda_plan(spec, backend="pallas")   # or "ref", "auto", tune="autotune"
+print(plan.describe())                     # per-level block_q / slabs / VMEM
+print("registered backends:", registry.list_backends())
+
+# 3) execute — same MMCV conventions as the one-shot op
+out_pal = plan(value, loc, attn)
 out_ref = msda_ref(value, levels, loc, attn)                    # fused oracle
-out_pal = msda(value, levels, loc, attn, backend="pallas")      # xMSDA kernels
+out_base = msda_grid_sample_baseline(value, levels, loc, attn)  # paper "Baseline"
 print("baseline vs ref  max err:", float(jnp.abs(out_base - out_ref).max()))
 print("pallas   vs ref  max err:", float(jnp.abs(out_pal - out_ref).max()))
 
-# it differentiates (custom VJP: fused bwd kernels with scatter-add)
+# plans are cached by spec: an identical spec returns the SAME object and
+# never re-runs block planning (serving processes call clear_plans())
+assert msda_plan(spec, backend="pallas") is plan
+print("plan cache:", plan_cache_info())
+
+# it differentiates (custom VJP wired at plan time; train=True saves the
+# gathered corners for a gather-free backward phase 1)
+train_plan = msda_plan(MsdaSpec(spatial_shapes=levels, num_heads=H, head_dim=D,
+                                num_points=P, num_queries=Q, dtype="float32",
+                                train=True), backend="pallas")
 grads = jax.grad(
-    lambda v, l, a: jnp.sum(msda(v, levels, l, a, backend="pallas", train=True) ** 2),
-    argnums=(0, 1, 2),
+    lambda v, l, a: jnp.sum(train_plan(v, l, a) ** 2), argnums=(0, 1, 2)
 )(value, loc, attn)
 print("grad shapes:", [g.shape for g in grads])
 
 # the adaptive block plan (paper Fig. 7): bigger levels -> smaller blocks
-print("block plan:", plan_blocks(levels, P, D, Q))
+print("block plan:", plan.block_q)
 
 # CPU timing: fused vs materialising baseline
 f_ref = jax.jit(lambda v, l, a: msda_ref(v, levels, l, a))

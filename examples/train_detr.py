@@ -52,6 +52,11 @@ def main():
     params = dt.init_detr(jax.random.PRNGKey(0), cfg)
     opt = adamw.init_adamw(params)
 
+    # warm the MSDA plans (backend + block planning committed once, before
+    # the first jitted step traces) and show what was decided
+    for name, plan in dt.msda_plans(cfg, dtype="float32", train=True).items():
+        print(f"msda plan ({name}):\n{plan.describe()}")
+
     @jax.jit
     def step(params, opt, batch, lr):
         loss, grads = jax.value_and_grad(

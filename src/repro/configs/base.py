@@ -55,14 +55,28 @@ class VisionConfig:
 
 @dataclass(frozen=True)
 class MSDAConfig:
-    """Multi-scale deformable attention config (the paper's op)."""
+    """Multi-scale deformable attention config (the paper's op).
+
+    ``backend`` / ``tune`` / ``vmem_budget`` feed straight into the
+    plan/execute API (``repro.kernels.plan.msda_plan``): the backend is
+    resolved through the registry and block planning runs once per
+    static geometry — heuristically, or measured when ``tune="autotune"``.
+    """
 
     levels: Tuple[Tuple[int, int], ...]
     num_points: int = 4
     num_heads: int = 8
-    # kernel backend: 'auto' | 'pallas' | 'ref'
+    # kernel backend: 'auto' | 'pallas' | 'ref' | any registered backend
     backend: str = "auto"
     save_sampled: bool = True  # train mode: stash gathered corners for bwd
+    # block planning: 'heuristic' (paper Fig. 7 VMEM model) | 'autotune'
+    # (measure candidates once, persist winners per device kind)
+    tune: str = "heuristic"
+    # per-core VMEM budget for block planning; 0 = default for the
+    # device kind (plan.default_vmem_budget)
+    vmem_budget: int = 0
+    # shard queries (not heads) over 'tp' in the encoder's huge-Q layers
+    query_parallel: bool = True
 
 
 # --------------------------------------------------------------------------

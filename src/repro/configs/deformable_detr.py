@@ -22,6 +22,11 @@ CONFIG = register(ModelConfig(
     gated_mlp=False,
     act="gelu",
     norm_type="layernorm",
-    msda=MSDAConfig(levels=PAPER_LEVELS, num_points=4, num_heads=8),
+    # plan/execute knobs: backend resolved once through the registry;
+    # tune="autotune" measures per-level block_q candidates and persists
+    # winners per device kind (see repro.kernels.plan.msda_plan)
+    msda=MSDAConfig(levels=PAPER_LEVELS, num_points=4, num_heads=8,
+                    backend="auto", tune="heuristic", vmem_budget=0,
+                    query_parallel=True),
     source="arXiv:2010.04159 (Deformable DETR) + paper §3 input spec",
 ))

@@ -65,6 +65,26 @@ def init_detr(key, cfg) -> dict:
     }
 
 
+def msda_plans(cfg, *, dtype="float32", train: bool = False, mesh=None):
+    """Build (and cache) the model's MsdaPlans for warm-up / inspection.
+
+    One plan per static geometry in the model: the encoder's huge-Q
+    self-MSDA (Q = sum HW pixel queries) and the decoder's 300-query
+    cross-MSDA.  Call before the first step to front-load backend
+    resolution + block planning (and autotuning, if configured); print
+    ``plan.describe()`` for the per-level block_q / slab / VMEM report.
+    """
+    mc = cfg.msda
+    sp = sum(h * w for h, w in mc.levels)
+    D = cfg.d_model // mc.num_heads
+    enc = msda_mod.attention_plan(
+        mc, num_queries=sp, head_dim=D, dtype=dtype, train=train,
+        mesh=mesh, query_parallel=mc.query_parallel)
+    dec = msda_mod.attention_plan(
+        mc, num_queries=300, head_dim=D, dtype=dtype, train=train, mesh=mesh)
+    return {"encoder": enc, "decoder": dec}
+
+
 def _level_emb_expanded(params, cfg, dtype):
     mc = cfg.msda
     parts = [
@@ -87,9 +107,10 @@ def encode_pyramid(params, cfg, pyramid: jax.Array, *, train: bool = False,
     def step(x, lp):
         h = layers.apply_norm(lp["norm1"], x, cfg.norm_eps)
         # 87k pixel queries: shard queries over 'model' (value replicated
-        # per shard; grad_value psum'd — the staggered-scatter analogue)
+        # per shard; grad_value psum'd — the staggered-scatter analogue).
+        # The sharding mode is committed on the cached MsdaPlan.
         y = msda_mod.msda_attention(lp["msda"], mc, h, h, refs, train=train,
-                                    query_parallel=True)
+                                    query_parallel=mc.query_parallel)
         x = x + y
         h2 = layers.apply_norm(lp["norm2"], x, cfg.norm_eps)
         x = x + layers.apply_mlp(lp["mlp"], cfg, h2)

@@ -1,12 +1,17 @@
 """MSDAttention: the paper's op as a composable model module.
 
-Wraps the xMSDA kernel (``repro.kernels.ops.msda``) with the standard
-Deformable-DETR parameterisation: per-query learned sampling offsets
-around reference points + softmaxed attention weights, value/output
-projections.
+Wraps the xMSDA plan/execute API (``repro.kernels.plan``) with the
+standard Deformable-DETR parameterisation: per-query learned sampling
+offsets around reference points + softmaxed attention weights,
+value/output projections.
 
-Distribution (``distributed_msda``): the op is sharded with
-``shard_map`` —
+Planning: :func:`attention_plan` builds the :class:`MsdaPlan` for a
+module's static geometry **once** — backend resolution, per-level block
+sizes (heuristic or autotuned via ``msda_cfg.tune``) and the sharding
+mode are all committed at plan time, and repeated forwards with the same
+geometry fetch the cached plan (no per-call re-planning).
+
+Distribution is baked into the plan when a mesh is installed —
 
 * batch over the 'dp' axes, heads over 'tp' (value sharded, no
   reduction needed: each shard owns its heads' slice of grad_value);
@@ -16,18 +21,19 @@ Distribution (``distributed_msda``): the op is sharded with
   transpose emits the **psum of per-shard partial grad_value slabs** —
   the TPU-idiomatic realisation of the paper's staggered-scatter idea
   (contention eliminated via partial accumulators + reduction, §4.2).
+
+``distributed_msda`` survives as a thin compatibility wrapper over a
+mesh-carrying plan.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.kernels import ops
+from repro.kernels import plan as plan_mod
 from repro.models import layers
 from repro.sharding import rules
 
@@ -64,6 +70,44 @@ def init_msda_attention(key, d_model: int, msda_cfg) -> dict:
     return p
 
 
+def attention_plan(
+    msda_cfg,
+    *,
+    num_queries: int,
+    head_dim: int,
+    dtype,
+    train: bool = False,
+    backend: Optional[str] = None,
+    mesh=None,
+    query_parallel: bool = False,
+) -> plan_mod.MsdaPlan:
+    """The module's :class:`MsdaPlan` for one static geometry (cached).
+
+    All hardware-aware decisions (backend, per-level block_q, MXU one-hot
+    routing, shard_map wiring) are committed here, once; forwards just
+    execute.  ``msda_cfg.tune`` selects heuristic vs autotuned block
+    planning and ``msda_cfg.vmem_budget`` overrides the per-device VMEM
+    default (0 = auto).
+    """
+    spec = plan_mod.MsdaSpec(
+        spatial_shapes=msda_cfg.levels,
+        num_heads=msda_cfg.num_heads,
+        head_dim=head_dim,
+        num_points=msda_cfg.num_points,
+        num_queries=num_queries,
+        dtype=str(jnp.dtype(dtype)),
+        train=train,
+        vmem_budget=getattr(msda_cfg, "vmem_budget", 0),
+    )
+    return plan_mod.msda_plan(
+        spec,
+        backend=backend or msda_cfg.backend,
+        tune=getattr(msda_cfg, "tune", "heuristic"),
+        mesh=mesh,
+        query_parallel=query_parallel,
+    )
+
+
 def msda_attention(
     p: dict,
     msda_cfg,
@@ -90,27 +134,23 @@ def msda_attention(
     aw = jax.nn.softmax(aw.reshape(B, Q, H, L * Pn).astype(jnp.float32), axis=-1)
     aw = aw.reshape(B, Q, H, L, Pn)
 
-    be = backend or msda_cfg.backend
+    # one cached plan per static geometry: the mesh (when >1 device) bakes
+    # shard_map wiring in, keeping the irregular gathers LOCAL per shard
+    # (GSPMD left to itself model-parallelises them and pays huge
+    # reshards — same failure mode as the MoE dispatch, see §Perf)
     mesh = rules.current_mesh()
-    if mesh is not None and mesh.devices.size > 1:
-        # distributed op: keeps the irregular gathers LOCAL per shard
-        # (GSPMD left to itself model-parallelises them and pays huge
-        # reshards — same failure mode as the MoE dispatch, see §Perf)
-        out = distributed_msda(
-            value.astype(query.dtype), levels, loc,
-            aw.astype(query.dtype), mesh=mesh,
-            query_parallel=query_parallel, backend=be, train=train,
-        )
-    else:
-        out = ops.msda(
-            value.astype(query.dtype), levels, loc,
-            aw.astype(query.dtype), backend=be, train=train,
-        )
+    if mesh is not None and mesh.devices.size <= 1:
+        mesh = None
+    plan = attention_plan(
+        msda_cfg, num_queries=Q, head_dim=D, dtype=query.dtype, train=train,
+        backend=backend, mesh=mesh, query_parallel=query_parallel,
+    )
+    out = plan(value.astype(query.dtype), loc, aw.astype(query.dtype))
     return out @ p["out_proj"].astype(query.dtype)
 
 
 # --------------------------------------------------------------------------
-# distributed op (shard_map over the kernel)
+# distributed op — compatibility wrapper over a mesh-carrying plan
 # --------------------------------------------------------------------------
 
 
@@ -125,47 +165,14 @@ def distributed_msda(
     backend: str = "auto",
     train: bool = False,
 ) -> jax.Array:
-    """shard_map-distributed MSDA (see module docstring)."""
+    """shard_map-distributed MSDA (see module docstring).
+
+    Thin wrapper: builds/fetches the mesh-carrying plan and executes it.
+    The sharding-mode ladder (query-parallel -> head-parallel ->
+    batch-only) now lives in ``plan._plan_sharding``.
+    """
     mesh = mesh or rules.current_mesh()
-    if mesh is None:
-        return ops.msda(value, levels, loc, attn, backend=backend, train=train)
-    dp = rules.resolve_axis("dp", mesh)
-    tp = rules.resolve_axis("tp", mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    tp_size = sizes.get("model", 1)
-    B, S, Hh, D = value.shape
-    Q = loc.shape[1]
-    # pick a legal sharding mode: query-parallel needs Q % tp == 0,
-    # head-parallel needs H % tp == 0; otherwise batch-only (tp idle)
-    if query_parallel and Q % tp_size:
-        query_parallel = False
-    if not query_parallel and Hh % tp_size:
-        tp = None
-
-    if query_parallel:
-        # value replicated over tp; queries split over tp.  Backward: the
-        # cotangent of the replicated value is psum'd across tp shards —
-        # the contention-free analogue of the paper's staggered scatter.
-        vspec = P(dp, None, None, None)
-        qspec = P(dp, tp, None, None, None, None)
-        wspec = P(dp, tp, None, None, None)
-        ospec = P(dp, tp, None)
-    else:
-        vspec = P(dp, None, tp, None)
-        qspec = P(dp, None, tp, None, None, None)
-        wspec = P(dp, None, tp, None, None)
-        ospec = P(dp, None, tp)
-
-    @partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(vspec, qspec, wspec),
-        out_specs=ospec,
-        check_vma=False,
-    )
-    def run(v, l, a):
-        B, S, Hh, D = v.shape
-        out = ops.msda(v, levels, l, a, backend=backend, train=train)
-        return out.reshape(*l.shape[:2], Hh, D).reshape(l.shape[0], l.shape[1], Hh * D)
-
-    return run(value, loc, attn)
+    spec = plan_mod.spec_from_arrays(value, levels, loc, attn, train=train)
+    plan = plan_mod.msda_plan(
+        spec, backend=backend, mesh=mesh, query_parallel=query_parallel)
+    return plan(value, loc, attn)

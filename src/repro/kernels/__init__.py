@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# MSDA kernel package — the compute hot-spot the paper optimizes.
+#
+# Public surface:
+#   plan.MsdaSpec / plan.msda_plan / plan.MsdaPlan — plan/execute API
+#   registry.register_backend / registry.list_backends — backend registry
+#   ops.msda — legacy one-shot shim over the plan cache
+#   ref.msda_ref — pure-jnp oracle
+from repro.kernels.plan import (  # noqa: F401
+    MsdaPlan,
+    MsdaSpec,
+    clear_plans,
+    configure_plan_cache,
+    msda_plan,
+    plan_cache_info,
+)
+from repro.kernels.registry import (  # noqa: F401
+    list_backends,
+    register_backend,
+    resolve_backend,
+)

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.msda_fwd import corner_indices
+from repro.kernels.msda_fwd import _CompilerParams, corner_indices
 
 Shapes = Tuple[Tuple[int, int], ...]
 
@@ -192,7 +192,7 @@ def msda_bwd_level(
             jax.ShapeDtypeStruct((B, Hh, Q, P, 2), loc_l.dtype),
             jax.ShapeDtypeStruct((B, Hh, Q, P), attn_l.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

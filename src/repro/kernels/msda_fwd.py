@@ -40,6 +40,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams (~0.6); support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 Shapes = Tuple[Tuple[int, int], ...]
 
 
@@ -188,7 +191,7 @@ def msda_fwd_level(
         ],
         out_specs=out_specs if save_sampled else out_specs[:1],
         out_shape=out_shapes if save_sampled else out_shapes[:1],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

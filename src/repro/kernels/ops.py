@@ -1,13 +1,19 @@
-"""Public MSDA op: jit-friendly wrapper, custom VJP, block planning.
+"""MSDA kernel glue + the legacy one-shot ``msda(...)`` shim.
 
-``msda(value, spatial_shapes, sampling_locations, attention_weights)``
-with MMCV conventions (see ``ref.py``).  Backends:
+The *planning* surface lives in ``repro.kernels.plan`` (``MsdaSpec`` →
+``msda_plan`` → ``MsdaPlan``) and the backend registry in
+``repro.kernels.registry``; this module keeps
 
-* ``"ref"``    — pure-jnp oracle (fast on CPU, autodiff via JAX).
-* ``"pallas"`` — the xMSDA Pallas kernels (fwd + custom-VJP bwd).
-  ``interpret=True`` runs the kernel body in Python on CPU (correctness
-  validation); on TPU it compiles via Mosaic.
-* ``"auto"``   — pallas on TPU, ref elsewhere.
+* the layout/padding contract and per-level kernel drivers
+  (``_fwd_impl`` / ``_bwd_impl`` / ``build_kernel_op``) the pallas
+  backend builder compiles into an executor,
+* the heuristic block planner (``plan_blocks`` — the paper's adaptive
+  vec-len model, Fig. 7) and the MXU one-hot routing rule
+  (``plan_onehot``), both invoked once per plan, and
+* ``msda(...)``: a thin compatibility shim that builds a spec, fetches
+  the cached plan, and executes it.  Per-call tuning kwargs
+  (``block_q``, ``fuse_gather``, …) are deprecated — commit them on the
+  spec / plan instead.
 
 The layout/padding contract between the wrapper and the kernels:
 each level is zero-padded from ``(H, W)`` to ``(H+2, W+2)`` (leading +
@@ -17,7 +23,7 @@ branch-free corner pairs) and flattened row-major to a slab of
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -28,7 +34,9 @@ from repro.kernels import msda_bwd, msda_fwd, ref
 
 Shapes = Tuple[Tuple[int, int], ...]
 
-# Conservative per-core VMEM budget for block planning (v5e-class part).
+# Legacy default block-planning budget (v5e-class part).  Plans carry an
+# explicit per-device budget on the spec (plan.default_vmem_budget); this
+# constant only backs direct plan_blocks() calls that don't pass one.
 VMEM_BUDGET = 32 * 2**20
 _SUBLANE = 8
 
@@ -40,6 +48,16 @@ def _round_up(x: int, m: int) -> int:
 def slab_rows(hw: Tuple[int, int]) -> int:
     h, w = hw
     return _round_up((h + 2) * (w + 2), _SUBLANE)
+
+
+def per_query_bytes(num_points: int, head_dim: int) -> int:
+    """Per-query VMEM working set: 4 corners x P points x D lanes in fp32,
+    ~4 concurrent copies (gathered, weighted, contribs, temporaries).
+
+    Single source of truth for the paper's occupancy model — used by the
+    block planner below and by ``MsdaPlan.level_report``.
+    """
+    return 4 * num_points * head_dim * 4 * 4 + num_points * 64
 
 
 def plan_blocks(
@@ -68,9 +86,7 @@ def plan_blocks(
         if train:  # bwd keeps an fp32 grad slab too
             resident += slab_rows(hw) * head_dim * 4
         avail = max(vmem_budget - resident, 1 * 2**20)
-        # per-query working set: 4 corners x P points x D lanes in fp32,
-        # ~4 concurrent copies (gathered, weighted, contribs, temporaries)
-        per_q = 4 * num_points * head_dim * 4 * 4 + num_points * 64
+        per_q = per_query_bytes(num_points, head_dim)
         bq = avail // per_q
         bq = max(_SUBLANE, min(2048, (bq // _SUBLANE) * _SUBLANE))
         bq = min(bq, _round_up(num_queries, _SUBLANE))
@@ -219,8 +235,16 @@ def _bwd_impl(p: MSDAParams, residuals, gout):
     return gvalue, gloc, gattn
 
 
-@functools.lru_cache(maxsize=64)
-def _build_op(p: MSDAParams):
+def build_kernel_op(p: MSDAParams):
+    """Custom-VJP executor for one committed kernel configuration.
+
+    Deliberately *uncached*: the bounded plan cache in
+    ``repro.kernels.plan`` owns the lifetime of compiled ops (and its
+    ``clear_plans()`` hook lets long-lived serving processes drop them) —
+    the old unbounded ``lru_cache`` here leaked one op per distinct
+    config forever.
+    """
+
     @jax.custom_vjp
     def op(value, loc, attn):
         return _fwd_impl(p, value, loc, attn)[0]
@@ -240,9 +264,25 @@ def _build_op(p: MSDAParams):
 
 
 def resolve_backend(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    return backend
+    from repro.kernels import registry
+
+    return registry.resolve_backend(backend)
+
+
+_UNSET = object()
+_WARNED_KWARGS: set = set()
+
+
+def _deprecated_kwarg(name: str) -> None:
+    if name not in _WARNED_KWARGS:
+        _WARNED_KWARGS.add(name)
+        warnings.warn(
+            f"ops.msda(..., {name}=...) is deprecated: commit tuning on an "
+            "MsdaSpec and build a plan via repro.kernels.plan.msda_plan "
+            "(the shim still honours the kwarg)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 def msda(
@@ -253,45 +293,43 @@ def msda(
     *,
     backend: str = "auto",
     train: bool = False,
-    block_q: Optional[Tuple[int, ...]] = None,
-    fuse_gather: bool = True,
-    fuse_scatter: bool = True,
-    adaptive_block: bool = True,
-    onehot_small_levels: bool = False,
-    interpret: Optional[bool] = None,
+    block_q=_UNSET,
+    fuse_gather=_UNSET,
+    fuse_scatter=_UNSET,
+    adaptive_block=_UNSET,
+    onehot_small_levels=_UNSET,
+    interpret=_UNSET,
 ) -> jax.Array:
-    """Multi-scale deformable attention (differentiable).
+    """Multi-scale deformable attention (differentiable) — compat shim.
 
     value: (B, S, H, D); sampling_locations: (B, Q, H, L, P, 2) in [0,1];
     attention_weights: (B, Q, H, L, P); returns (B, Q, H*D).
+
+    This entry point now builds an :class:`~repro.kernels.plan.MsdaSpec`
+    from the operands and executes the cached
+    :class:`~repro.kernels.plan.MsdaPlan` — repeated calls with an
+    identical spec never re-run block planning.  The per-call tuning
+    kwargs (``block_q``, ``fuse_gather``, ``fuse_scatter``,
+    ``adaptive_block``, ``onehot_small_levels``, ``interpret``) are
+    deprecated; put them on the spec / plan instead.
     """
-    spatial_shapes = tuple((int(h), int(w)) for h, w in spatial_shapes)
-    be = resolve_backend(backend)
-    if be == "ref":
-        return ref.msda_ref(value, spatial_shapes, sampling_locations, attention_weights)
-    if be != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
-    B, S, Hh, D = value.shape
-    Q, P = sampling_locations.shape[1], sampling_locations.shape[4]
-    if block_q is None:
-        block_q = plan_blocks(
-            spatial_shapes,
-            P,
-            D,
-            Q,
-            value_itemsize=value.dtype.itemsize,
-            train=train,
-            adaptive=adaptive_block,
-        )
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    p = MSDAParams(
-        spatial_shapes=spatial_shapes,
-        block_q=tuple(block_q),
-        fuse_gather=fuse_gather,
-        fuse_scatter=fuse_scatter,
-        save_sampled=train,
-        interpret=interpret,
-        onehot_levels=plan_onehot(spatial_shapes) if onehot_small_levels else (),
-    )
-    return _build_op(p)(value, sampling_locations, attention_weights)
+    from repro.kernels import plan as plan_mod
+
+    overrides = {}
+    for name, val in (("fuse_gather", fuse_gather), ("fuse_scatter", fuse_scatter),
+                      ("adaptive_block", adaptive_block),
+                      ("onehot_small_levels", onehot_small_levels)):
+        if val is not _UNSET:
+            _deprecated_kwarg(name)
+            overrides[name] = val
+    plan_kwargs = {}
+    for name, val in (("block_q", block_q), ("interpret", interpret)):
+        if val is not _UNSET:
+            _deprecated_kwarg(name)
+            plan_kwargs[name] = tuple(val) if name == "block_q" and val is not None else val
+
+    spec = plan_mod.spec_from_arrays(
+        value, spatial_shapes, sampling_locations, attention_weights,
+        train=train, **overrides)
+    plan = plan_mod.msda_plan(spec, backend=backend, **plan_kwargs)
+    return plan(value, sampling_locations, attention_weights)

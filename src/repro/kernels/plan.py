@@ -1,0 +1,633 @@
+"""Plan/execute API for multi-scale deformable attention.
+
+The paper's central observation is that MSDA gets fast only when the
+*static* problem geometry — level shapes, points, head dim, the VMEM
+budget — is exploited ahead of time: adaptive vec-len planning (Fig. 7),
+gather/scatter fusion and the MXU one-hot routing are all compile-time
+decisions.  This module makes those decisions a first-class artifact:
+
+* :class:`MsdaSpec` — frozen, hashable description of one MSDA problem
+  (spatial shapes, heads, head dim, points, queries, dtype, train flag,
+  per-device VMEM budget).
+* :func:`msda_plan` — resolves a backend through the registry
+  (``repro.kernels.registry``), computes block sizes **once** (heuristic
+  or measured via ``tune="autotune"`` with an on-disk winner cache), bakes
+  in ``shard_map`` wiring when a mesh is given, and returns a
+  :class:`MsdaPlan`.
+* :class:`MsdaPlan` — the executable artifact: ``plan(value, loc, attn)``
+  runs the op (differentiable; the custom VJP was built at plan time) and
+  ``plan.describe()`` reports per-level ``block_q``, slab bytes, VMEM
+  occupancy and the chosen gather path.
+
+Plans are cached in an explicit, bounded LRU (:func:`clear_plans`,
+:func:`plan_cache_info`) — repeated calls with an identical spec return
+the *same* plan object and never re-run block planning.  The legacy
+9-kwarg ``ops.msda(...)`` entry point is now a thin shim over this cache.
+
+Typical use::
+
+    from repro.kernels import plan as msda_plan_mod
+
+    spec = msda_plan_mod.MsdaSpec(
+        spatial_shapes=((64, 64), (32, 32)), num_heads=8, head_dim=32,
+        num_points=4, num_queries=5120, dtype="float32", train=True)
+    plan = msda_plan_mod.msda_plan(spec, backend="pallas")
+    print(plan.describe())
+    out = plan(value, loc, attn)        # (B, Q, H*D), differentiable
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+_SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# --------------------------------------------------------------------------
+# per-device VMEM budgets (satellite: budget is a spec field, defaulted by
+# device kind, so plans for larger-VMEM parts stop under-blocking)
+# --------------------------------------------------------------------------
+
+# substring of jax.Device.device_kind (lowercased) -> usable per-core bytes.
+# Conservative: leaves headroom for Mosaic spills and double-buffering.
+DEVICE_VMEM_BUDGETS: Tuple[Tuple[str, int], ...] = (
+    ("v6", 64 * 2**20),  # trillium-class
+    ("v5p", 64 * 2**20),
+    ("v5 lite", 32 * 2**20),
+    ("v5e", 32 * 2**20),
+    ("v4", 32 * 2**20),
+    ("v3", 16 * 2**20),
+    ("v2", 16 * 2**20),
+)
+_FALLBACK_VMEM_BUDGET = 32 * 2**20  # CPU / interpret / unknown parts
+
+
+def default_vmem_budget(device_kind: Optional[str] = None) -> int:
+    """Usable VMEM bytes for block planning, by accelerator kind."""
+    if device_kind is None:
+        try:
+            device_kind = jax.devices()[0].device_kind
+        except Exception:  # no backend initialised yet
+            device_kind = "cpu"
+    kind = device_kind.lower()
+    for sub, budget in DEVICE_VMEM_BUDGETS:
+        if sub in kind:
+            return budget
+    return _FALLBACK_VMEM_BUDGET
+
+
+# --------------------------------------------------------------------------
+# MsdaSpec
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MsdaSpec:
+    """Static geometry of one MSDA problem (hashable; the plan-cache key).
+
+    ``vmem_budget=0`` resolves to :func:`default_vmem_budget` for the
+    current device at construction time, so the budget is always an
+    explicit, inspectable number on the spec.
+    """
+
+    spatial_shapes: Shapes
+    num_heads: int
+    head_dim: int
+    num_points: int
+    num_queries: int
+    dtype: str = "float32"
+    train: bool = False
+    vmem_budget: int = 0  # 0 -> per-device default
+    # tuning-surface flags (kept on the spec so ablations stay plannable)
+    fuse_gather: bool = True
+    fuse_scatter: bool = True
+    adaptive_block: bool = True
+    onehot_small_levels: bool = False
+
+    def __post_init__(self):
+        shapes = tuple((int(h), int(w)) for h, w in self.spatial_shapes)
+        object.__setattr__(self, "spatial_shapes", shapes)
+        object.__setattr__(self, "dtype", str(jnp.dtype(self.dtype)))
+        if self.vmem_budget <= 0:
+            object.__setattr__(self, "vmem_budget", default_vmem_budget())
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def num_levels(self) -> int:
+        return len(self.spatial_shapes)
+
+    @property
+    def total_pixels(self) -> int:
+        return sum(h * w for h, w in self.spatial_shapes)
+
+    @property
+    def value_itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    def cache_token(self) -> str:
+        """Stable string key (autotune disk cache)."""
+        f = dataclasses.astuple(self)
+        return "|".join(str(x) for x in f)
+
+
+def spec_from_arrays(
+    value: jax.Array,
+    spatial_shapes: Shapes,
+    sampling_locations: jax.Array,
+    attention_weights: jax.Array,
+    *,
+    train: bool = False,
+    **overrides: Any,
+) -> MsdaSpec:
+    """Build the spec for concrete operands (the shim's entry path)."""
+    del attention_weights  # shapes implied by loc
+    B, S, H, D = value.shape
+    Q, P = sampling_locations.shape[1], sampling_locations.shape[4]
+    return MsdaSpec(
+        spatial_shapes=tuple((int(h), int(w)) for h, w in spatial_shapes),
+        num_heads=int(H),
+        head_dim=int(D),
+        num_points=int(P),
+        num_queries=int(Q),
+        dtype=str(value.dtype),
+        train=train,
+        **overrides,
+    )
+
+
+# --------------------------------------------------------------------------
+# PlanTuning: the decisions a backend builder receives
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlanTuning:
+    """Resolved per-plan tuning knobs handed to the backend builder."""
+
+    block_q: Tuple[int, ...]
+    onehot_levels: Tuple[bool, ...]
+    interpret: bool
+    source: str = "heuristic"  # heuristic | autotune | autotune-cache | override
+
+
+# --------------------------------------------------------------------------
+# built-in backends
+# --------------------------------------------------------------------------
+
+
+@registry.backend("ref")
+def _build_ref(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
+    """Pure-jnp oracle; tuning is irrelevant (XLA fuses it on its own)."""
+    from repro.kernels import ref
+
+    shapes = spec.spatial_shapes
+
+    def run(value, loc, attn):
+        return ref.msda_ref(value, shapes, loc, attn)
+
+    return run
+
+
+@registry.backend("pallas")
+def _build_pallas(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
+    """xMSDA Pallas kernels with the plan's committed tiling."""
+    from repro.kernels import ops
+
+    params = ops.MSDAParams(
+        spatial_shapes=spec.spatial_shapes,
+        block_q=tuple(tuning.block_q),
+        fuse_gather=spec.fuse_gather,
+        fuse_scatter=spec.fuse_scatter,
+        save_sampled=spec.train,
+        interpret=tuning.interpret,
+        onehot_levels=tuple(tuning.onehot_levels),
+    )
+    return ops.build_kernel_op(params)
+
+
+# --------------------------------------------------------------------------
+# tuning resolution (heuristic / autotune / override)
+# --------------------------------------------------------------------------
+
+
+def _heuristic_block_q(spec: MsdaSpec) -> Tuple[int, ...]:
+    from repro.kernels import ops
+
+    return ops.plan_blocks(
+        spec.spatial_shapes,
+        spec.num_points,
+        spec.head_dim,
+        spec.num_queries,
+        value_itemsize=spec.value_itemsize,
+        train=spec.train,
+        vmem_budget=spec.vmem_budget,
+        adaptive=spec.adaptive_block,
+    )
+
+
+def _onehot_levels(spec: MsdaSpec) -> Tuple[bool, ...]:
+    from repro.kernels import ops
+
+    if not spec.onehot_small_levels:
+        return ()
+    return ops.plan_onehot(spec.spatial_shapes)
+
+
+def autotune_cache_path() -> str:
+    """On-disk winner cache (override via REPRO_MSDA_AUTOTUNE_CACHE)."""
+    env = os.environ.get("REPRO_MSDA_AUTOTUNE_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+    return os.path.join(base, "repro", "msda_autotune.json")
+
+
+def _load_autotune_cache() -> Dict[str, List[int]]:
+    path = autotune_cache_path()
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_autotune_cache(cache: Dict[str, List[int]]) -> None:
+    path = autotune_cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: autotune still works, winners just aren't kept
+
+
+def _autotune_inputs(spec: MsdaSpec):
+    """Deterministic synthetic operands at the spec's exact geometry."""
+    B = 1
+    S, H, D = spec.total_pixels, spec.num_heads, spec.head_dim
+    Q, L, P = spec.num_queries, spec.num_levels, spec.num_points
+    dt = jnp.dtype(spec.dtype)
+    value = jnp.linspace(-1.0, 1.0, B * S * H * D, dtype=jnp.float32)
+    value = value.reshape(B, S, H, D).astype(dt)
+    loc = jnp.linspace(0.05, 0.95, B * Q * H * L * P * 2, dtype=jnp.float32)
+    loc = loc.reshape(B, Q, H, L, P, 2)
+    attn = jnp.full((B, Q, H, L, P), 1.0 / (L * P), jnp.float32).astype(dt)
+    return value, loc, attn
+
+
+def _time_executor(run: Callable, args, iters: int = 3) -> float:
+    f = jax.jit(run)
+    jax.block_until_ready(f(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def _autotune_block_q(
+    spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
+) -> Tuple[Tuple[int, ...], str]:
+    """Measure candidate block plans; persist the winner per (device, spec).
+
+    Candidates are the heuristic plan scaled by {1/2, 1, 2} per level
+    (uniformly — the per-level cross product explodes), snapped to the
+    sublane multiple.  Winners are keyed by spec + device kind so a cache
+    produced on one part never mis-tunes another.
+    """
+    onehot = _onehot_levels(spec)
+    heur = _heuristic_block_q(spec)
+    key = f"{jax.devices()[0].device_kind}|{backend_name}|{spec.cache_token()}"
+    disk = _load_autotune_cache()
+    hit = disk.get(key)
+    if hit is not None and len(hit) == spec.num_levels:
+        return tuple(int(b) for b in hit), "autotune-cache"
+
+    qcap = _round_up(spec.num_queries, _SUBLANE)
+    candidates = []
+    for scale_num, scale_den in ((1, 2), (1, 1), (2, 1)):
+        cand = tuple(
+            max(_SUBLANE, min(2048, qcap, (b * scale_num // scale_den) // _SUBLANE * _SUBLANE))
+            for b in heur
+        )
+        if cand not in candidates:
+            candidates.append(cand)
+    if len(candidates) == 1:
+        return candidates[0], "autotune"
+
+    args = _autotune_inputs(spec)
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        tuning = PlanTuning(block_q=cand, onehot_levels=onehot,
+                            interpret=interpret, source="autotune")
+        try:
+            t = _time_executor(builder(spec, tuning), args)
+        except Exception:
+            continue  # candidate doesn't fit/compile: skip
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        # every candidate failed to build: fall back to the heuristic and
+        # do NOT persist — a never-validated plan must not poison the
+        # per-device winner cache for future processes
+        return heur, "heuristic"
+    disk[key] = list(best)
+    _store_autotune_cache(disk)
+    return best, "autotune"
+
+
+# --------------------------------------------------------------------------
+# sharding (baked into the plan; collapses the old distributed_msda fork)
+# --------------------------------------------------------------------------
+
+
+def _shard_map_compat(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):  # jax >= 0.6 spelling
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _mesh_cache_key(mesh) -> Optional[tuple]:
+    if mesh is None:
+        return None
+    return (
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool):
+    """Resolve the legal sharding mode for this spec on this mesh.
+
+    Returns (mode, dp_axis, tp_axis, tp_size, inner_spec) where ``mode``
+    is one of 'replicated' | 'batch' | 'head' | 'query'.  Query-parallel
+    needs Q % tp == 0, head-parallel H % tp == 0; otherwise tp idles
+    (batch-only) — same degradation ladder the old distributed_msda had,
+    now committed once at plan time instead of re-derived per call.
+    """
+    from repro.sharding import rules
+
+    dp = rules.resolve_axis("dp", mesh)
+    tp = rules.resolve_axis("tp", mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get("model", 1)
+    H, Q = spec.num_heads, spec.num_queries
+    if query_parallel and Q % tp_size == 0 and tp is not None and tp_size > 1:
+        inner = dataclasses.replace(spec, num_queries=Q // tp_size)
+        return "query", dp, tp, tp_size, inner
+    if tp is not None and tp_size > 1 and H % tp_size == 0:
+        inner = dataclasses.replace(spec, num_heads=H // tp_size)
+        return "head", dp, tp, tp_size, inner
+    # tp idle (or size 1): shards see the full head/query extent
+    mode = "batch" if dp is not None else "replicated"
+    return mode, dp, None, 1, spec
+
+
+def _build_sharded_exec(spec, inner_exec, inner_spec, mesh, mode, dp, tp):
+    from jax.sharding import PartitionSpec as P
+
+    if mode == "query":
+        # value replicated over tp; queries split.  Backward: shard_map's
+        # transpose psums the per-shard partial grad_value slabs — the
+        # TPU-idiomatic realisation of the paper's staggered scatter
+        # (contention eliminated via partial accumulators + reduction).
+        vspec = P(dp, None, None, None)
+        qspec = P(dp, tp, None, None, None, None)
+        wspec = P(dp, tp, None, None, None)
+        ospec = P(dp, tp, None)
+    else:
+        vspec = P(dp, None, tp, None)
+        qspec = P(dp, None, tp, None, None, None)
+        wspec = P(dp, None, tp, None, None)
+        ospec = P(dp, None, tp)
+
+    Hd = inner_spec.num_heads * inner_spec.head_dim
+
+    def run(v, l, a):
+        out = inner_exec(v, l, a)
+        return out.reshape(l.shape[0], l.shape[1], Hd)
+
+    return _shard_map_compat(run, mesh, (vspec, qspec, wspec), ospec)
+
+
+# --------------------------------------------------------------------------
+# MsdaPlan
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MsdaPlan:
+    """Executable MSDA plan: backend + tuning + (optional) sharding, fixed.
+
+    Call it like the op: ``plan(value, loc, attn) -> (B, Q, H*D)``.  The
+    VJP was wired at build time — ``jax.grad`` through the call just works.
+    """
+
+    spec: MsdaSpec
+    backend: str
+    tuning: PlanTuning
+    sharding_mode: str  # 'local' | 'replicated' | 'batch' | 'head' | 'query'
+    # the per-shard geometry the tuning was computed for (== spec for
+    # unsharded plans; Q or H divided by tp for query-/head-parallel ones)
+    local_spec: MsdaSpec
+    _exec: Callable = dataclasses.field(repr=False, compare=False)
+
+    def __call__(self, value: jax.Array, sampling_locations: jax.Array,
+                 attention_weights: jax.Array) -> jax.Array:
+        s = self.spec
+        if value.shape[1] != s.total_pixels or value.shape[3] != s.head_dim:
+            raise ValueError(
+                f"value {value.shape} does not match plan spec "
+                f"(S={s.total_pixels}, D={s.head_dim})")
+        if sampling_locations.shape[1] != s.num_queries:
+            raise ValueError(
+                f"loc Q={sampling_locations.shape[1]} != spec Q={s.num_queries}")
+        return self._exec(value, sampling_locations, attention_weights)
+
+    apply = __call__
+
+    @property
+    def block_q(self) -> Tuple[int, ...]:
+        return self.tuning.block_q
+
+    # -- inspectability ---------------------------------------------------
+    def level_report(self) -> List[Dict[str, Any]]:
+        """Per-level planning facts (the numbers ``describe`` prints).
+
+        Reported against ``local_spec`` — the per-shard geometry the
+        tuning was actually computed for.
+        """
+        from repro.kernels import ops
+
+        s = self.local_spec
+        rows = []
+        for l, hw in enumerate(s.spatial_shapes):
+            slab = ops.slab_rows(hw)
+            slab_bytes = slab * s.head_dim * s.value_itemsize
+            if s.train:
+                slab_bytes += slab * s.head_dim * 4  # fp32 grad slab
+            bq = self.tuning.block_q[l] if l < len(self.tuning.block_q) else 0
+            per_q = ops.per_query_bytes(s.num_points, s.head_dim)
+            occupancy = (slab_bytes + bq * per_q) / max(s.vmem_budget, 1)
+            onehot = bool(self.tuning.onehot_levels[l]) if self.tuning.onehot_levels else False
+            if self.backend == "ref":
+                gather = "xla"
+            elif onehot:
+                gather = "mxu-onehot"
+            else:
+                gather = "vpu-fused" if s.fuse_gather else "vpu-4x"
+            rows.append({
+                "level": l,
+                "hw": hw,
+                "slab_rows": slab,
+                "slab_bytes": slab_bytes,
+                "block_q": bq,
+                "q_steps": -(-_round_up(s.num_queries, max(bq, 1)) // max(bq, 1)),
+                "gather": gather,
+                "vmem_frac": occupancy,
+            })
+        return rows
+
+    def describe(self) -> str:
+        s = self.spec
+        shard_note = ""
+        if self.local_spec is not self.spec:
+            shard_note = (f"  per-shard: Q={self.local_spec.num_queries} "
+                          f"H={self.local_spec.num_heads} (levels below are per shard)\n")
+        head = (
+            f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
+            f"sharding={self.sharding_mode}, train={s.train}, dtype={s.dtype})\n"
+            f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
+            f"levels={s.num_levels} S={s.total_pixels}\n" + shard_note +
+            f"  vmem_budget={s.vmem_budget / 2**20:.1f} MiB  "
+            f"interpret={self.tuning.interpret}\n"
+        )
+        lines = [head,
+                 "  lvl  hw         slab_rows  slab_KiB   block_q  steps  gather      vmem%"]
+        for r in self.level_report():
+            hw = "%dx%d" % r["hw"]
+            lines.append(
+                f"  {r['level']:<4d} {hw:<10s} "
+                f"{r['slab_rows']:<10d} {r['slab_bytes'] / 1024:<10.1f} "
+                f"{r['block_q']:<8d} {r['q_steps']:<6d} {r['gather']:<11s} "
+                f"{100 * r['vmem_frac']:.1f}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# the plan cache (explicit, bounded — replaces the old unbounded lru_cache
+# on the compiled op; serving processes call clear_plans() to drop them)
+# --------------------------------------------------------------------------
+
+_PLAN_CACHE: "OrderedDict[tuple, MsdaPlan]" = OrderedDict()
+_PLAN_CACHE_MAX = 128
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def configure_plan_cache(maxsize: int) -> None:
+    """Bound the in-process plan cache (evicts LRU beyond ``maxsize``)."""
+    global _PLAN_CACHE_MAX
+    _PLAN_CACHE_MAX = max(1, int(maxsize))
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+
+
+def clear_plans() -> None:
+    """Drop every cached plan (and its compiled op closures)."""
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def plan_cache_info() -> Dict[str, int]:
+    return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
+            "size": len(_PLAN_CACHE), "maxsize": _PLAN_CACHE_MAX}
+
+
+def msda_plan(
+    spec: MsdaSpec,
+    *,
+    backend: str = "auto",
+    tune: str = "heuristic",
+    mesh=None,
+    query_parallel: bool = False,
+    block_q: Optional[Tuple[int, ...]] = None,
+    interpret: Optional[bool] = None,
+) -> MsdaPlan:
+    """Resolve backend + tuning + sharding for ``spec``; cached.
+
+    ``tune``: ``"heuristic"`` uses the paper's VMEM-occupancy model
+    (Fig. 7); ``"autotune"`` times candidate block plans on synthetic
+    operands and persists winners per (device kind, spec) on disk.
+    ``block_q`` overrides both (ablation hook).  ``mesh`` bakes the
+    shard_map wiring (dp over batch, tp over heads — or queries with
+    ``query_parallel=True``) into the returned plan.
+    """
+    if tune not in ("heuristic", "autotune"):
+        raise ValueError(f"unknown tune mode {tune!r}; use 'heuristic' or 'autotune'")
+    backend_name = registry.resolve_backend(backend)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if mesh is not None and mesh.devices.size <= 1:
+        mesh = None  # single-device mesh: sharding is a no-op
+
+    key = (spec, backend_name, tune, tuple(block_q) if block_q else None,
+           bool(interpret), _mesh_cache_key(mesh), bool(query_parallel))
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _CACHE_STATS["hits"] += 1
+        _PLAN_CACHE.move_to_end(key)
+        return cached
+    _CACHE_STATS["misses"] += 1
+
+    builder = registry.get_backend(backend_name)
+
+    def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
+        if block_q is not None:
+            if len(block_q) != s.num_levels:
+                raise ValueError(
+                    f"block_q has {len(block_q)} entries for {s.num_levels} levels")
+            bq, source = tuple(int(b) for b in block_q), "override"
+        elif tune == "autotune" and backend_name != "ref":
+            bq, source = _autotune_block_q(s, backend_name, builder, interpret)
+        else:
+            bq, source = _heuristic_block_q(s), "heuristic"
+        tuning = PlanTuning(block_q=bq, onehot_levels=_onehot_levels(s),
+                            interpret=interpret, source=source)
+        return builder(s, tuning), tuning
+
+    if mesh is None:
+        exec_fn, tuning = build_local(spec)
+        mode, local_spec = "local", spec
+    else:
+        mode, dp, tp, tp_size, local_spec = _plan_sharding(spec, mesh, query_parallel)
+        inner_exec, tuning = build_local(local_spec)
+        exec_fn = _build_sharded_exec(spec, inner_exec, local_spec, mesh, mode, dp, tp)
+
+    plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
+                    sharding_mode=mode, local_spec=local_spec, _exec=exec_fn)
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return plan

@@ -111,6 +111,38 @@ class Computation:
     edges: List[Tuple[str, str, int]] = field(default_factory=list)
 
 
+def _parse_operands(comp: Computation, operand_str: str) -> List[str]:
+    """Operand names from an op's argument list.
+
+    Handles both HLO spellings: bare names (``%a, %b``) and inline-typed
+    operands (``f32[32,48]{1,0} %a, ...`` — commas inside the shape must
+    not split).  Inline types are harvested into the symbol table.
+    """
+    pieces, cur, depth = [], "", 0
+    for ch in operand_str:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            pieces.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        pieces.append(cur)
+    names = []
+    for piece in pieces:
+        toks = piece.split()
+        if not toks:
+            continue
+        name = toks[-1].lstrip("%")
+        if len(toks) > 1 and _SHAPE_RE.search(toks[0]) and name not in comp.symbols:
+            comp.symbols[name] = toks[0]
+        names.append(name)
+    return names
+
+
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -136,7 +168,7 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
         dm = _DEF_RE.match(raw)
         if dm:
             name, rtype, op, operand_str = dm.groups()
-            operands = [o.strip().lstrip("%") for o in operand_str.split(",") if o.strip()]
+            operands = _parse_operands(cur, operand_str)
             cur.symbols[name] = rtype
             cur.ops.append(OpLine(name=name, rtype=rtype, op=op, operands=operands, line=raw))
         # parameters defined inline: %p = f32[..] parameter(0)
@@ -147,7 +179,12 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
         tm = _TRIP_RE.search(raw)
         if tm:
             trip = int(tm.group(1))
+        line_op = dm.group(3) if dm else ""
         for kind, callee in _CALLEE_RE.findall(raw):
+            if kind == "to_apply" and line_op == "call":
+                # control-flow call (CPU backend wraps fusions this way):
+                # the callee is NOT a fusion interior — its memory counts
+                kind = "call"
             cur.edges.append((callee, kind, trip if kind in ("body", "condition") else 1))
         bm = _BRANCHES_RE.search(raw)
         if bm:

@@ -45,6 +45,13 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    if cfg.msda is not None:
+        # MSDA archs: commit backend + block planning before the first
+        # step and surface the plan report (block_q / slabs / VMEM).
+        from repro.core import deformable_transformer as dt
+
+        for name, plan in dt.msda_plans(cfg, dtype=cfg.dtype, train=True).items():
+            print(f"[train] msda plan ({name}):\n{plan.describe()}")
     dcfg = DataConfig(
         global_batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size,
         seed=args.seed, source=args.data, path=args.data_path,
@@ -66,6 +73,7 @@ def main() -> None:
         print(f"[train] restored step {start} from {args.ckpt_dir}")
 
     t0 = time.time()
+    pending_save = None
     for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
         state, metrics = step_fn(state, batch)
@@ -75,7 +83,9 @@ def main() -> None:
                   f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
                   f"({(time.time()-t0)/(step-start+1):.2f}s/step)", flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            ckpt.save_async(state, args.ckpt_dir, step + 1)
+            pending_save = ckpt.save_async(state, args.ckpt_dir, step + 1)
+    if pending_save is not None:
+        pending_save.join()  # daemon writer: commit the last ckpt before exit
     print(f"[train] done: {args.steps - start} steps in {time.time()-t0:.1f}s")
 
 

@@ -46,6 +46,11 @@ def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
     if cfg.family == "vlm":
         from repro.models import vlm
 
+        # Warm the MSDA resampler plan at engine-build time: backend
+        # resolution + block planning (+ autotune, if configured) happen
+        # here, once, instead of inside the first prefill's trace.
+        warmup_msda_plans(cfg)
+
         def prefill(params, pyramid, tokens, capacity):
             return vlm.vlm_prefill(params, cfg, pyramid, tokens, capacity)
 
@@ -54,6 +59,41 @@ def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
 
         return prefill, decode
     raise ValueError(f"{cfg.family} has no serving path")
+
+
+def warmup_msda_plans(cfg):
+    """Pre-build every MsdaPlan a serving process will execute.
+
+    Returns the plans (empty tuple for pure-LM families) so callers can
+    log ``plan.describe()``.  Idempotent: plans are cached by spec.
+    """
+    plans = []
+    if getattr(cfg, "vision", None) is not None:
+        from repro.core import msda as msda_mod
+        from repro.models import vlm
+
+        vc = cfg.vision
+        mc = vlm._msda_cfg(vc)
+        plans.append(msda_mod.attention_plan(
+            mc, num_queries=vc.num_visual_tokens,
+            head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype))
+    if getattr(cfg, "msda", None) is not None:
+        from repro.core import deformable_transformer as dt
+
+        plans.extend(dt.msda_plans(cfg, dtype=cfg.dtype).values())
+    return tuple(plans)
+
+
+def clear_kernel_plans() -> None:
+    """Drop cached MSDA plans + their compiled ops (long-lived servers).
+
+    The plan cache is bounded, but a server that cycles through many
+    model configs can still pin compiled executors; call this between
+    model swaps to release them.
+    """
+    from repro.kernels import plan as plan_mod
+
+    plan_mod.clear_plans()
 
 
 @dataclasses.dataclass
@@ -134,6 +174,10 @@ class ServeEngine:
         for _ in range(max_ticks):
             if not self.step() and not self._queue:
                 break
+
+    def shutdown(self) -> None:
+        """Release compiled kernel plans (see :func:`clear_kernel_plans`)."""
+        clear_kernel_plans()
 
 
 def _splice(big: jax.Array, one: jax.Array, s: int) -> jax.Array:

@@ -1,0 +1,290 @@
+"""Plan/execute API: spec -> plan -> execute, registry, caches, shim parity."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, registry
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import MsdaSpec, msda_plan
+from repro.kernels.ref import msda_ref
+
+LEVELS = ((10, 6), (5, 3))
+
+
+def _inputs(B=2, Q=21, H=2, D=8, P=3, levels=LEVELS, dtype=jnp.float32, seed=0):
+    S = sum(h * w for h, w in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(dtype)
+    loc = jax.random.uniform(ks[1], (B, Q, H, L, P, 2), minval=-0.2, maxval=1.2)
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (B, Q, H, L, P)).reshape(B, Q, H, -1)
+    ).reshape(B, Q, H, L, P)
+    return value, loc, attn
+
+
+def _spec(value, loc, **kw):
+    B, S, H, D = value.shape
+    Q, P = loc.shape[1], loc.shape[4]
+    return MsdaSpec(spatial_shapes=LEVELS, num_heads=H, head_dim=D,
+                    num_points=P, num_queries=Q, dtype=str(value.dtype), **kw)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_mod.clear_plans()
+    yield
+    plan_mod.clear_plans()
+
+
+# --------------------------------------------------------------------------
+# shim vs plan equivalence
+# --------------------------------------------------------------------------
+
+
+def test_shim_bit_identical_to_plan_ref_backend():
+    value, loc, attn = _inputs()
+    out_shim = ops.msda(value, LEVELS, loc, attn, backend="ref")
+    plan = msda_plan(_spec(value, loc), backend="ref")
+    out_plan = plan(value, loc, attn)
+    assert jnp.array_equal(out_shim, out_plan)  # bit-identical, same path
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shim_matches_plan_pallas_interpret(dtype):
+    value, loc, attn = _inputs(dtype=dtype)
+    out_shim = ops.msda(value, LEVELS, loc, attn, backend="pallas")
+    plan = msda_plan(_spec(value, loc), backend="pallas")
+    out_plan = plan(value, loc, attn)
+    assert out_plan.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(out_shim), np.asarray(out_plan))
+    ref = msda_ref(value, LEVELS, loc, attn)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_plan, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_plan_q_not_multiple_of_block_q():
+    # Q=21 with forced block_q=8: padding path (qpad=24) must be exact
+    value, loc, attn = _inputs(Q=21)
+    plan = msda_plan(_spec(value, loc), backend="pallas", block_q=(8, 8))
+    out = plan(value, loc, attn)
+    ref = msda_ref(value, LEVELS, loc, attn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_plan_grads_match_oracle_train_mode():
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(value, loc, train=True), backend="pallas")
+    g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2), argnums=(0, 1, 2))(
+        value, loc, attn)
+    gr = jax.grad(lambda v, l, a: jnp.sum(msda_ref(v, LEVELS, l, a) ** 2),
+                  argnums=(0, 1, 2))(value, loc, attn)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
+
+
+def test_plan_shape_validation():
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(value, loc), backend="ref")
+    with pytest.raises(ValueError, match="does not match plan spec"):
+        plan(value[:, :-1], loc, attn)
+    with pytest.raises(ValueError, match="!= spec Q"):
+        plan(value, loc[:, :-1], attn)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+
+def test_registry_builtins_present():
+    assert "ref" in registry.list_backends()
+    assert "pallas" in registry.list_backends()
+
+
+def test_registry_unknown_backend_errors():
+    with pytest.raises(registry.UnknownBackendError, match="no-such-npu"):
+        registry.get_backend("no-such-npu")
+    value, loc, attn = _inputs()
+    with pytest.raises(ValueError):
+        msda_plan(_spec(value, loc), backend="no-such-npu")
+
+
+def test_registry_register_and_execute_custom_backend():
+    calls = []
+
+    def builder(spec, tuning):
+        calls.append(spec)
+
+        def run(value, loc, attn):
+            from repro.kernels.ref import msda_ref as oracle
+
+            return oracle(value, spec.spatial_shapes, loc, attn)
+
+        return run
+
+    registry.register_backend("test-oracle", builder)
+    try:
+        value, loc, attn = _inputs()
+        plan = msda_plan(_spec(value, loc), backend="test-oracle")
+        assert plan.backend == "test-oracle"
+        out = plan(value, loc, attn)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(msda_ref(value, LEVELS, loc, attn)), atol=1e-6)
+        assert len(calls) == 1  # builder ran exactly once (at plan time)
+        plan(value, loc, attn)
+        assert len(calls) == 1
+    finally:
+        registry.unregister_backend("test-oracle")
+
+
+def test_registry_duplicate_and_reserved_names():
+    def builder(spec, tuning):
+        return lambda *a: None
+
+    registry.register_backend("dup-backend", builder)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            registry.register_backend("dup-backend", builder)
+        registry.register_backend("dup-backend", builder, overwrite=True)
+    finally:
+        registry.unregister_backend("dup-backend")
+    with pytest.raises(ValueError, match="reserved"):
+        registry.register_backend("auto", builder)
+
+
+# --------------------------------------------------------------------------
+# plan cache behaviour
+# --------------------------------------------------------------------------
+
+
+def test_same_spec_returns_same_plan_object():
+    value, loc, attn = _inputs()
+    p1 = msda_plan(_spec(value, loc), backend="pallas")
+    p2 = msda_plan(_spec(value, loc), backend="pallas")
+    assert p1 is p2
+    info = plan_mod.plan_cache_info()
+    assert info["hits"] >= 1 and info["size"] == 1
+    plan_mod.clear_plans()
+    p3 = msda_plan(_spec(value, loc), backend="pallas")
+    assert p3 is not p1
+
+
+def test_plan_blocks_not_reinvoked_on_repeat_calls(monkeypatch):
+    """Acceptance: repeated identical-spec calls never re-run block planning."""
+    value, loc, attn = _inputs()
+    counter = {"n": 0}
+    real = ops.plan_blocks
+
+    def counting(*a, **kw):
+        counter["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "plan_blocks", counting)
+    ops.msda(value, LEVELS, loc, attn, backend="pallas")
+    assert counter["n"] == 1  # planned once
+    ops.msda(value, LEVELS, loc, attn, backend="pallas")
+    ops.msda(value, LEVELS, loc, attn, backend="pallas")
+    assert counter["n"] == 1  # cache hits: no re-planning
+
+
+def test_plan_cache_eviction_bounded():
+    value, loc, attn = _inputs()
+    old = plan_mod.plan_cache_info()["maxsize"]
+    plan_mod.configure_plan_cache(2)
+    try:
+        for q in (8, 16, 24):
+            v, l, a = _inputs(Q=q)
+            msda_plan(_spec(v, l), backend="ref")
+        assert plan_mod.plan_cache_info()["size"] == 2  # LRU evicted
+    finally:
+        plan_mod.configure_plan_cache(old)
+
+
+def test_deprecated_tuning_kwargs_warn():
+    value, loc, attn = _inputs()
+    ops._WARNED_KWARGS.clear()
+    with pytest.warns(DeprecationWarning, match="fuse_gather"):
+        ops.msda(value, LEVELS, loc, attn, backend="pallas", fuse_gather=False)
+
+
+# --------------------------------------------------------------------------
+# spec: VMEM budget field (per-device default, overridable)
+# --------------------------------------------------------------------------
+
+
+def test_vmem_budget_defaults_per_device_kind():
+    assert plan_mod.default_vmem_budget("TPU v3") == 16 * 2**20
+    assert plan_mod.default_vmem_budget("TPU v5p") == 64 * 2**20
+    assert plan_mod.default_vmem_budget("cpu") == 32 * 2**20
+    spec = MsdaSpec(spatial_shapes=LEVELS, num_heads=2, head_dim=8,
+                    num_points=2, num_queries=64)
+    assert spec.vmem_budget == plan_mod.default_vmem_budget()
+
+
+def test_vmem_budget_drives_block_plan():
+    big_level = ((64, 64),)
+    mk = lambda budget: MsdaSpec(
+        spatial_shapes=big_level, num_heads=2, head_dim=32, num_points=4,
+        num_queries=4096, vmem_budget=budget)
+    small = msda_plan(mk(4 * 2**20), backend="pallas").block_q
+    large = msda_plan(mk(256 * 2**20), backend="pallas").block_q
+    assert large[0] > small[0]  # more VMEM -> wider blocks (longer vectors)
+
+
+# --------------------------------------------------------------------------
+# inspectability
+# --------------------------------------------------------------------------
+
+
+def test_describe_reports_per_level_decisions():
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(value, loc, onehot_small_levels=True), backend="pallas")
+    report = plan.level_report()
+    assert len(report) == len(LEVELS)
+    assert all(r["gather"] == "mxu-onehot" for r in report)  # tiny levels
+    text = plan.describe()
+    assert "backend=pallas" in text and "block_q" in text and "vmem" in text
+    for r in report:
+        assert r["slab_bytes"] > 0 and r["block_q"] >= 8
+
+
+# --------------------------------------------------------------------------
+# autotune (slow: times real candidate executions)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_autotune_picks_candidate_and_persists(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    value, loc, attn = _inputs(Q=32, levels=((6, 6),))
+    spec = MsdaSpec(spatial_shapes=((6, 6),), num_heads=2, head_dim=8,
+                    num_points=3, num_queries=32)
+    plan = msda_plan(spec, backend="pallas", tune="autotune")
+    assert plan.tuning.source == "autotune"
+    assert (tmp_path / "tune.json").exists()
+    out = plan(value, loc, attn)
+    ref = msda_ref(value, ((6, 6),), loc, attn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # a fresh plan cache must hit the on-disk winner (no re-timing)
+    plan_mod.clear_plans()
+    plan2 = msda_plan(spec, backend="pallas", tune="autotune")
+    assert plan2.tuning.source == "autotune-cache"
+    assert plan2.block_q == plan.block_q
+
+
+def test_autotune_ref_backend_falls_back_to_heuristic(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(value, loc), backend="ref", tune="autotune")
+    assert plan.tuning.source == "heuristic"  # no blocks to tune in XLA
+
+
+def test_unknown_tune_mode_errors():
+    value, loc, attn = _inputs()
+    with pytest.raises(ValueError, match="tune"):
+        msda_plan(_spec(value, loc), tune="genetic")
