@@ -200,6 +200,83 @@ def fig5_scatter_microbench():
 
 
 # --------------------------------------------------------------------------
+# backend x dtype-policy matrix (the planned precision axis, PR 2)
+# --------------------------------------------------------------------------
+
+
+def _time_interleaved(fns, args, iters=9):
+    """Median us per call, measuring the competitors ALTERNATELY.
+
+    Sequential timing (A fully, then B) lets machine-load drift masquerade
+    as a backend delta — on shared CPU runners the same jit'd fn varies
+    2-3x between back-to-back blocks.  Interleaving puts every competitor
+    under the same load profile; the medians stay comparable.
+    """
+    for f in fns.values():
+        jax.block_until_ready(f(*args))  # compile + warm
+    times = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            times[k].append(time.perf_counter() - t0)
+    return {k: sorted(ts)[len(ts) // 2] * 1e6 for k, ts in times.items()}
+
+
+def backend_dtype_matrix():
+    """cpu-vs-ref backend delta and fp32-vs-bf16 plan-variant delta.
+
+    Two comparisons at the paper-scaled workload:
+
+    * ``"cpu"`` (padded-slab batched per-corner gathers, head-major
+      layout) vs ``"ref"`` (masked gathers + per-corner transposes) —
+      the off-TPU ``"auto"`` default must beat the oracle it replaced on
+      forward; train lands at parity (backward is scatter-bound for
+      both backends — the ~0.7 s scatter floor dominates either way).
+    * fp32-slab vs bf16-slab plan variants of the cpu backend — what the
+      ``dtype_policy`` knob / autotune dtype race trades: bf16 halves
+      slab bytes (and on TPU, VMEM residency) against cast overhead.
+      On CPU fp32 wins (casts cost, residency doesn't) — which is the
+      point: the winner is backend-dependent, so it's raced, not assumed.
+    """
+    print("# Backend/dtype matrix: cpu-vs-ref and fp32-vs-bf16 plan variants")
+    import dataclasses
+
+    value, loc, attn, gout = _inputs()
+    spec = plan_mod.MsdaSpec(
+        spatial_shapes=LEVELS, num_heads=H, head_dim=D, num_points=P,
+        num_queries=Q, dtype="float32")
+
+    plans = {b: plan_mod.msda_plan(spec, backend=b) for b in ("ref", "cpu")}
+    fwd = _time_interleaved(
+        {b: jax.jit(lambda v, l, a, p=p: p(v, l, a)) for b, p in plans.items()},
+        (value, loc, attn))
+    bwd = _time_interleaved(
+        {b: jax.jit(jax.grad(lambda v, l, a, p=p: jnp.vdot(p(v, l, a), gout),
+                             argnums=(0, 1, 2))) for b, p in plans.items()},
+        (value, loc, attn), iters=5)
+    for b in plans:
+        row(f"matrix.fwd.{b}", fwd[b], "")
+        row(f"matrix.bwd.{b}", bwd[b], "")
+    row("matrix.fwd.cpu_speedup_vs_ref", 0.0, f"x{fwd['ref'] / fwd['cpu']:.2f}")
+    row("matrix.train.cpu_speedup_vs_ref", 0.0,
+        f"x{(fwd['ref'] + bwd['ref']) / (fwd['cpu'] + bwd['cpu']):.2f}")
+
+    dplans = {pol: plan_mod.msda_plan(dataclasses.replace(spec, slab_dtype=pol),
+                                      backend="cpu")
+              for pol in ("float32", "bfloat16")}
+    dt = _time_interleaved(
+        {pol: jax.jit(lambda v, l, a, p=p: p(v, l, a)) for pol, p in dplans.items()},
+        (value, loc, attn))
+    for pol, p in dplans.items():
+        row(f"matrix.fwd.cpu.{pol}_slab", dt[pol],
+            f"slab_dtypes={p.tuning.slab_dtypes}")
+    row("matrix.fwd.cpu.bf16_vs_fp32_slab", 0.0,
+        f"x{dt['float32'] / dt['bfloat16']:.2f}")
+    return {"fwd": fwd, "bwd": bwd, "dtype": dt}
+
+
+# --------------------------------------------------------------------------
 # end-to-end: paper host model (reduced) train step
 # --------------------------------------------------------------------------
 

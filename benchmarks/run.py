@@ -21,6 +21,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     t2 = pb.table2_overall()
     pb.table3_speedups(t2)
+    pb.backend_dtype_matrix()
     pb.fig4_gather_microbench()
     pb.fig5_scatter_microbench()
     if not args.fast:

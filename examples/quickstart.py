@@ -64,6 +64,31 @@ print("grad shapes:", [g.shape for g in grads])
 # the adaptive block plan (paper Fig. 7): bigger levels -> smaller blocks
 print("block plan:", plan.block_q)
 
+# -- the dtype-policy knob: mixed precision is a PLANNED axis -------------
+# bf16 slabs halve VMEM residency (the planner widens block_q for it);
+# accumulation stays fp32 inside the kernels, so error doesn't grow with
+# Q.  slab_dtype="auto" + tune="autotune" races fp32 vs bf16 per level
+# and persists the winner per device kind.  Model configs expose this as
+# MSDAConfig.dtype_policy ('follow' | 'float32' | 'bfloat16' | 'auto').
+bf16_plan = msda_plan(MsdaSpec(spatial_shapes=levels, num_heads=H, head_dim=D,
+                               num_points=P, num_queries=Q, dtype="float32",
+                               slab_dtype="bfloat16"), backend="pallas")
+print(bf16_plan.describe())  # note the slab_dt column + accum=float32
+err = jnp.abs(bf16_plan(value, loc, attn) - out_ref).max()
+print("bf16-slab vs fp32 ref max err:", float(err), "(bf16 tolerance tier)")
+
+# -- the backend matrix ---------------------------------------------------
+# every registered backend executes the same plan contract; "auto" picks
+# pallas on TPU and the vectorised "cpu" backend elsewhere (padded-slab
+# per-corner gathers, head-major layout — faster forward than the "ref"
+# oracle; backward is scatter-bound for both, so train is parity).
+# tests/conformance.py checks fwd+VJP parity for every (backend, policy).
+for name in registry.list_backends():
+    p = msda_plan(spec, backend=name)
+    e = jnp.abs(p(value, loc, attn) - out_ref).max()
+    print(f"backend {name:8s} gather={p.level_report()[0]['gather']:<11s} "
+          f"max err vs ref: {float(e):.2e}")
+
 # CPU timing: fused vs materialising baseline
 f_ref = jax.jit(lambda v, l, a: msda_ref(v, levels, l, a))
 f_base = jax.jit(lambda v, l, a: msda_grid_sample_baseline(v, levels, l, a))

@@ -66,7 +66,7 @@ class MSDAConfig:
     levels: Tuple[Tuple[int, int], ...]
     num_points: int = 4
     num_heads: int = 8
-    # kernel backend: 'auto' | 'pallas' | 'ref' | any registered backend
+    # kernel backend: 'auto' | 'pallas' | 'cpu' | 'ref' | any registered
     backend: str = "auto"
     save_sampled: bool = True  # train mode: stash gathered corners for bwd
     # block planning: 'heuristic' (paper Fig. 7 VMEM model) | 'autotune'
@@ -77,6 +77,23 @@ class MSDAConfig:
     vmem_budget: int = 0
     # shard queries (not heads) over 'tp' in the encoder's huge-Q layers
     query_parallel: bool = True
+    # msda dtype policy — the planned precision axis:
+    #   'follow'   value-slab dtype tracks the operand dtype (default)
+    #   'float32'  force fp32 slabs
+    #   'bfloat16' bf16 slabs + fp32 accumulation (half the VMEM
+    #              residency, so block planning widens the vec-len)
+    #   'auto'     tune='autotune' races fp32 vs bf16 per level and
+    #              persists the winner per device kind
+    # (mapped to spec fields by repro.kernels.plan.resolve_dtype_policy)
+    dtype_policy: str = "follow"
+
+    def __post_init__(self):
+        # mirror of plan.DTYPE_POLICIES keys — kept local so the config
+        # layer stays importable without jax / the kernel stack
+        if self.dtype_policy not in ("follow", "float32", "bfloat16", "auto"):
+            raise ValueError(
+                f"unknown msda dtype_policy {self.dtype_policy!r}; one of "
+                "'follow' | 'float32' | 'bfloat16' | 'auto'")
 
 
 # --------------------------------------------------------------------------

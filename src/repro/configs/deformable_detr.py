@@ -24,9 +24,16 @@ CONFIG = register(ModelConfig(
     norm_type="layernorm",
     # plan/execute knobs: backend resolved once through the registry;
     # tune="autotune" measures per-level block_q candidates and persists
-    # winners per device kind (see repro.kernels.plan.msda_plan)
+    # winners per device kind (see repro.kernels.plan.msda_plan).
+    # dtype_policy="auto" defers the per-level fp32-vs-bf16 slab choice
+    # to the autotune race — which only runs under tune="autotune" (flip
+    # it on a real fleet; the default heuristic planning keeps the
+    # operand dtype, so this knob is a no-op until then).  When the race
+    # does pick bf16 for the 256x256 level its slab halves to ~4 MiB and
+    # block re-planning widens the encoder's vec-len; accumulation stays
+    # fp32 either way.
     msda=MSDAConfig(levels=PAPER_LEVELS, num_points=4, num_heads=8,
                     backend="auto", tune="heuristic", vmem_budget=0,
-                    query_parallel=True),
+                    query_parallel=True, dtype_policy="auto"),
     source="arXiv:2010.04159 (Deformable DETR) + paper §3 input spec",
 ))

@@ -65,23 +65,26 @@ def init_detr(key, cfg) -> dict:
     }
 
 
-def msda_plans(cfg, *, dtype="float32", train: bool = False, mesh=None):
+def msda_plans(cfg, *, dtype="float32", train: bool = False, mesh=None,
+               dtype_policy=None):
     """Build (and cache) the model's MsdaPlans for warm-up / inspection.
 
     One plan per static geometry in the model: the encoder's huge-Q
     self-MSDA (Q = sum HW pixel queries) and the decoder's 300-query
     cross-MSDA.  Call before the first step to front-load backend
     resolution + block planning (and autotuning, if configured); print
-    ``plan.describe()`` for the per-level block_q / slab / VMEM report.
+    ``plan.describe()`` for the per-level block_q / slab-dtype / VMEM
+    report.  ``dtype_policy`` overrides ``cfg.msda.dtype_policy``.
     """
     mc = cfg.msda
     sp = sum(h * w for h, w in mc.levels)
     D = cfg.d_model // mc.num_heads
     enc = msda_mod.attention_plan(
         mc, num_queries=sp, head_dim=D, dtype=dtype, train=train,
-        mesh=mesh, query_parallel=mc.query_parallel)
+        mesh=mesh, query_parallel=mc.query_parallel, dtype_policy=dtype_policy)
     dec = msda_mod.attention_plan(
-        mc, num_queries=300, head_dim=D, dtype=dtype, train=train, mesh=mesh)
+        mc, num_queries=300, head_dim=D, dtype=dtype, train=train, mesh=mesh,
+        dtype_policy=dtype_policy)
     return {"encoder": enc, "decoder": dec}
 
 

@@ -80,15 +80,21 @@ def attention_plan(
     backend: Optional[str] = None,
     mesh=None,
     query_parallel: bool = False,
+    dtype_policy: Optional[str] = None,
 ) -> plan_mod.MsdaPlan:
     """The module's :class:`MsdaPlan` for one static geometry (cached).
 
-    All hardware-aware decisions (backend, per-level block_q, MXU one-hot
-    routing, shard_map wiring) are committed here, once; forwards just
-    execute.  ``msda_cfg.tune`` selects heuristic vs autotuned block
-    planning and ``msda_cfg.vmem_budget`` overrides the per-device VMEM
-    default (0 = auto).
+    All hardware-aware decisions (backend, per-level block_q, slab
+    dtypes, MXU one-hot routing, shard_map wiring) are committed here,
+    once; forwards just execute.  ``msda_cfg.tune`` selects heuristic vs
+    autotuned block planning, ``msda_cfg.vmem_budget`` overrides the
+    per-device VMEM default (0 = auto), and ``msda_cfg.dtype_policy``
+    (overridable per call) picks the mixed-precision plan variant —
+    'follow' | 'float32' | 'bfloat16' | 'auto' (see
+    :func:`repro.kernels.plan.resolve_dtype_policy`).
     """
+    policy = dtype_policy or getattr(msda_cfg, "dtype_policy", "follow")
+    slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
     spec = plan_mod.MsdaSpec(
         spatial_shapes=msda_cfg.levels,
         num_heads=msda_cfg.num_heads,
@@ -98,6 +104,8 @@ def attention_plan(
         dtype=str(jnp.dtype(dtype)),
         train=train,
         vmem_budget=getattr(msda_cfg, "vmem_budget", 0),
+        slab_dtype=slab_dtype,
+        accum_dtype=accum_dtype,
     )
     return plan_mod.msda_plan(
         spec,

@@ -20,9 +20,16 @@ Paper mapping (xMSDA §4.2 → TPU):
   accumulate); the ablation flag ``fuse_scatter=False`` issues four
   per-corner scatters (the paper's "-Scatter Fusion" column).
 
-Outputs per level: grad_value slab (fp32, padded layout), grad_loc,
-grad_attn.  Grid ``(B, H, num_q_blocks)`` with the grad slab revisited
-(accumulated in VMEM) across the innermost ``q`` dimension.
+Outputs per level: grad_value slab (``accum_dtype``, fp32 by default,
+padded layout), grad_loc, grad_attn.  Grid ``(B, H, num_q_blocks)`` with
+the grad slab revisited (accumulated in VMEM) across the innermost ``q``
+dimension.
+
+Mixed precision: when the plan commits a bf16 value slab, the *inputs*
+(slab / saved corners) arrive narrow but the resident grad slab is a
+genuine **widened accumulator** — allocated and scatter-added in
+``accum_dtype`` inside the kernel, not a bf16 slab cast afterwards —
+so Q-many scatter contributions never round through bf16.
 """
 from __future__ import annotations
 
@@ -143,8 +150,12 @@ def msda_bwd_level(
     fuse_scatter: bool = True,
     onehot_scatter: bool = False,
     interpret: bool = False,
+    accum_dtype=jnp.float32,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-level backward. Returns (grad_value_slab fp32, grad_loc, grad_attn)."""
+    """Per-level backward.
+
+    Returns (grad_value_slab in ``accum_dtype``, grad_loc, grad_attn).
+    """
     B, Hh, Q, P, _ = loc_l.shape
     D = gout.shape[-1]
     Hl, Wl = hw
@@ -188,7 +199,7 @@ def msda_bwd_level(
             pl.BlockSpec((1, 1, block_q, P), lambda b, h, q: (b, h, q, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, Hh, hwp_rows, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hh, hwp_rows, D), jnp.dtype(accum_dtype)),
             jax.ShapeDtypeStruct((B, Hh, Q, P, 2), loc_l.dtype),
             jax.ShapeDtypeStruct((B, Hh, Q, P), attn_l.dtype),
         ],

@@ -26,6 +26,11 @@ Paper mapping (xMSDA §4.1 → TPU):
   gathered corner values to HBM for the backward pass (paper §4.1 "store
   the gather result ... additional IO"), trading fwd MTE3 traffic for a
   gather-free backward phase 1.
+* **Mixed precision**: the value slab may be stored in a narrower dtype
+  (bf16 — half the VMEM residency, so the planner can widen ``block_q``)
+  while the kernel still computes and *emits* its per-level partial
+  output in ``out_dtype`` (fp32 by default) — a widened accumulator, not
+  a cast wrapper: cross-level accumulation never rounds through bf16.
 
 Grid: ``(B, H, num_q_blocks)`` — ``q`` innermost so the value slab block
 ``(1, 1, HW_pad, D)`` is revisited (stays in VMEM) across query blocks.
@@ -157,9 +162,16 @@ def msda_fwd_level(
     save_sampled: bool = False,
     onehot_gather: bool = False,
     interpret: bool = False,
+    out_dtype=None,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """One level's contribution: (B,H,Q,D) partial output (+ saved corners)."""
+    """One level's contribution: (B,H,Q,D) partial output (+ saved corners).
+
+    ``out_dtype`` is the accumulator dtype the partial output is emitted
+    in (default: the slab dtype).  Saved corners always keep the slab
+    dtype — they are re-read, not accumulated.
+    """
     B, Hh, HWp, D = value_l.shape
+    out_dtype = value_l.dtype if out_dtype is None else jnp.dtype(out_dtype)
     _, _, Q, P, _ = loc_l.shape
     Hl, Wl = hw
     Wp = Wl + 2  # leading + trailing pad column
@@ -170,7 +182,7 @@ def msda_fwd_level(
         _fwd_kernel, H=Hl, W=Wl, Wp=Wp, fuse_gather=fuse_gather,
         onehot_gather=onehot_gather,
     )
-    out_shapes = [jax.ShapeDtypeStruct((B, Hh, Q, D), value_l.dtype)]
+    out_shapes = [jax.ShapeDtypeStruct((B, Hh, Q, D), out_dtype)]
     out_specs = [pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0))]
     if save_sampled:
         out_shapes.append(jax.ShapeDtypeStruct((B, Hh, Q, 4 * P, D), value_l.dtype))

@@ -70,12 +70,18 @@ def plan_blocks(
     train: bool = True,
     vmem_budget: int = VMEM_BUDGET,
     adaptive: bool = True,
+    accum_itemsize: int = 4,
 ) -> Tuple[int, ...]:
     """Per-level query-block sizes (the paper's adaptive vec-len, Fig. 7).
 
     Larger levels leave less VMEM for per-step tensors, so their blocks
     shrink; tiny levels get wide blocks (long vectors).  ``adaptive=False``
     reproduces the "-Adaptive VecLen" ablation (fixed minimal block).
+
+    ``value_itemsize`` is the itemsize of the dtype the value slab is
+    *stored* in (a bf16-slab plan halves residency and widens blocks);
+    ``accum_itemsize`` sizes the train-mode grad slab, which stays wide
+    (fp32) regardless of the slab dtype.
     """
     out = []
     for hw in spatial_shapes:
@@ -83,8 +89,8 @@ def plan_blocks(
             out.append(_SUBLANE)
             continue
         resident = slab_rows(hw) * head_dim * value_itemsize
-        if train:  # bwd keeps an fp32 grad slab too
-            resident += slab_rows(hw) * head_dim * 4
+        if train:  # bwd keeps a widened (accum-dtype) grad slab too
+            resident += slab_rows(hw) * head_dim * accum_itemsize
         avail = max(vmem_budget - resident, 1 * 2**20)
         per_q = per_query_bytes(num_points, head_dim)
         bq = avail // per_q
@@ -108,6 +114,20 @@ class MSDAParams:
     # (beyond-paper; profitable for small levels where HWp fits an MXU
     # operand and the VPU gather would under-fill the vector unit)
     onehot_levels: Tuple[bool, ...] = ()
+    # mixed precision: per-level dtype the VMEM value slab is stored in
+    # ('' entries / empty tuple -> keep the operand dtype) and the dtype
+    # partial outputs + the bwd grad slab accumulate in
+    slab_dtypes: Tuple[str, ...] = ()
+    accum_dtype: str = "float32"
+    # dtype the grad_value must be emitted in (custom-VJP contract with
+    # the primal); '' -> infer from the residual slab (legacy behaviour,
+    # only correct when slab dtype == operand dtype)
+    io_dtype: str = ""
+
+    def slab_dtype(self, level: int) -> str:
+        if self.slab_dtypes and self.slab_dtypes[level]:
+            return self.slab_dtypes[level]
+        return ""
 
 
 # levels with padded slabs up to this many rows use the MXU one-hot path
@@ -159,13 +179,17 @@ def _fwd_impl(p: MSDAParams, value, loc, attn):
     loc_t = jnp.transpose(loc, (0, 2, 3, 1, 4, 5))
     attn_t = jnp.transpose(attn, (0, 2, 3, 1, 4))
 
-    out = jnp.zeros((B, Hh, Q, D), jnp.float32)
+    accum = jnp.dtype(p.accum_dtype)
+    out = jnp.zeros((B, Hh, Q, D), accum)
     slabs, saved_all = [], []
     offset = 0
     for l, hw in enumerate(p.spatial_shapes):
         bq = p.block_q[l]
         qpad = _round_up(Q, bq)
         slab = _pad_level(value_t, offset, hw)
+        sdt = p.slab_dtype(l)
+        if sdt:  # committed slab dtype (may narrow: bf16 slab, fp32 accum)
+            slab = slab.astype(sdt)
         offset += hw[0] * hw[1]
         loc_l = _pad_q(loc_t[:, :, l], 2, qpad, 0.5)
         attn_l = _pad_q(attn_t[:, :, l], 2, qpad, 0.0)
@@ -180,8 +204,9 @@ def _fwd_impl(p: MSDAParams, value, loc, attn):
             save_sampled=p.save_sampled,
             onehot_gather=onehot,
             interpret=p.interpret,
+            out_dtype=accum,
         )
-        out = out + out_l[:, :, :Q].astype(jnp.float32)
+        out = out + out_l[:, :, :Q]
         slabs.append(slab)
         saved_all.append(saved_l)
     out = jnp.transpose(out, (0, 2, 1, 3)).reshape(B, Q, Hh * D)
@@ -221,12 +246,13 @@ def _bwd_impl(p: MSDAParams, residuals, gout):
             fuse_scatter=p.fuse_scatter,
             onehot_scatter=p.onehot_levels[l] if p.onehot_levels else False,
             interpret=p.interpret,
+            accum_dtype=p.accum_dtype,
         )
         gvals.append(_unpad_grad(gval, hw))
         glocs.append(gloc[:, :, :Q])
         gattns.append(gattn[:, :, :Q])
 
-    gvalue = jnp.concatenate(gvals, axis=2)  # (B,H,S,D) fp32
+    gvalue = jnp.concatenate(gvals, axis=2)  # (B,H,S,D) accum dtype
     gvalue = jnp.transpose(gvalue, (0, 2, 1, 3))
     gloc = jnp.stack(glocs, axis=2)  # (B,H,L,Q,P,2)
     gloc = jnp.transpose(gloc, (0, 3, 1, 2, 4, 5))  # (B,Q,H,L,P,2)
@@ -255,7 +281,9 @@ def build_kernel_op(p: MSDAParams):
 
     def bwd(res, gout):
         slabs, saved_all, loc_t, attn_t = res
-        vdt = (slabs[0] if slabs is not None else saved_all[0]).dtype
+        # grad_value must match the *operand* dtype, which a bf16-slab
+        # plan no longer shares with the residual slabs
+        vdt = p.io_dtype or (slabs[0] if slabs is not None else saved_all[0]).dtype
         gvalue, gloc, gattn = _bwd_impl(p, res, gout)
         return gvalue.astype(vdt), gloc.astype(loc_t.dtype), gattn.astype(attn_t.dtype)
 
@@ -293,6 +321,7 @@ def msda(
     *,
     backend: str = "auto",
     train: bool = False,
+    dtype_policy: str = "follow",
     block_q=_UNSET,
     fuse_gather=_UNSET,
     fuse_scatter=_UNSET,
@@ -308,14 +337,18 @@ def msda(
     This entry point now builds an :class:`~repro.kernels.plan.MsdaSpec`
     from the operands and executes the cached
     :class:`~repro.kernels.plan.MsdaPlan` — repeated calls with an
-    identical spec never re-run block planning.  The per-call tuning
-    kwargs (``block_q``, ``fuse_gather``, ``fuse_scatter``,
+    identical spec never re-run block planning.  ``dtype_policy``
+    ('follow' | 'float32' | 'bfloat16' | 'auto') commits the
+    mixed-precision plan variant (bf16 slab + fp32 accumulate; see
+    ``plan.resolve_dtype_policy``).  The per-call tuning kwargs
+    (``block_q``, ``fuse_gather``, ``fuse_scatter``,
     ``adaptive_block``, ``onehot_small_levels``, ``interpret``) are
     deprecated; put them on the spec / plan instead.
     """
     from repro.kernels import plan as plan_mod
 
-    overrides = {}
+    slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(dtype_policy)
+    overrides = {"slab_dtype": slab_dtype, "accum_dtype": accum_dtype}
     for name, val in (("fuse_gather", fuse_gather), ("fuse_scatter", fuse_scatter),
                       ("adaptive_block", adaptive_block),
                       ("onehot_small_levels", onehot_small_levels)):

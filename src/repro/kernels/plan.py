@@ -8,16 +8,19 @@ decisions.  This module makes those decisions a first-class artifact:
 
 * :class:`MsdaSpec` — frozen, hashable description of one MSDA problem
   (spatial shapes, heads, head dim, points, queries, dtype, train flag,
-  per-device VMEM budget).
+  per-device VMEM budget, and the precision policy: ``slab_dtype`` /
+  ``accum_dtype`` — bf16 slabs with fp32 accumulation are a *planned*
+  variant, not a call-site cast).
 * :func:`msda_plan` — resolves a backend through the registry
-  (``repro.kernels.registry``), computes block sizes **once** (heuristic
-  or measured via ``tune="autotune"`` with an on-disk winner cache), bakes
-  in ``shard_map`` wiring when a mesh is given, and returns a
+  (``repro.kernels.registry``), computes block sizes **and per-level
+  slab dtypes** once (heuristic, or measured via ``tune="autotune"``
+  which races fp32-vs-bf16 per level, with an on-disk winner cache),
+  bakes in ``shard_map`` wiring when a mesh is given, and returns a
   :class:`MsdaPlan`.
 * :class:`MsdaPlan` — the executable artifact: ``plan(value, loc, attn)``
   runs the op (differentiable; the custom VJP was built at plan time) and
-  ``plan.describe()`` reports per-level ``block_q``, slab bytes, VMEM
-  occupancy and the chosen gather path.
+  ``plan.describe()`` reports per-level ``block_q``, slab bytes, the
+  committed slab dtype, VMEM occupancy and the chosen gather path.
 
 Plans are cached in an explicit, bounded LRU (:func:`clear_plans`,
 :func:`plan_cache_info`) — repeated calls with an identical spec return
@@ -119,11 +122,24 @@ class MsdaSpec:
     fuse_scatter: bool = True
     adaptive_block: bool = True
     onehot_small_levels: bool = False
+    # -- precision policy (the second planned axis) -----------------------
+    # slab_dtype: dtype the VMEM value slab is STORED in.  '' follows the
+    # operand dtype; 'auto' lets tune="autotune" race fp32 vs bf16 per
+    # level; any concrete dtype pins it (bf16 halves residency -> the
+    # planner widens block_q).  accum_dtype: the widened accumulator for
+    # fwd partial outputs and the bwd grad_value slab — kept fp32 so a
+    # bf16-slab plan is "bf16 storage, fp32 math", per DEFA's
+    # reduced-precision-sampling / wide-accumulation observation.
+    slab_dtype: str = ""
+    accum_dtype: str = "float32"
 
     def __post_init__(self):
         shapes = tuple((int(h), int(w)) for h, w in self.spatial_shapes)
         object.__setattr__(self, "spatial_shapes", shapes)
         object.__setattr__(self, "dtype", str(jnp.dtype(self.dtype)))
+        if self.slab_dtype not in ("", "auto"):
+            object.__setattr__(self, "slab_dtype", str(jnp.dtype(self.slab_dtype)))
+        object.__setattr__(self, "accum_dtype", str(jnp.dtype(self.accum_dtype)))
         if self.vmem_budget <= 0:
             object.__setattr__(self, "vmem_budget", default_vmem_budget())
 
@@ -140,10 +156,46 @@ class MsdaSpec:
     def value_itemsize(self) -> int:
         return jnp.dtype(self.dtype).itemsize
 
+    def resolved_slab_dtype(self) -> str:
+        """The slab storage dtype before any per-level autotune override
+        ('' and 'auto' fall back to the operand dtype)."""
+        if self.slab_dtype in ("", "auto"):
+            return self.dtype
+        return self.slab_dtype
+
+    @property
+    def slab_itemsize(self) -> int:
+        return jnp.dtype(self.resolved_slab_dtype()).itemsize
+
+    @property
+    def accum_itemsize(self) -> int:
+        return jnp.dtype(self.accum_dtype).itemsize
+
     def cache_token(self) -> str:
         """Stable string key (autotune disk cache)."""
         f = dataclasses.astuple(self)
         return "|".join(str(x) for x in f)
+
+
+# dtype-policy knob (configs' ``msda.dtype_policy``) -> spec fields.
+# 'follow' keeps the operand dtype; 'bfloat16' commits bf16 slabs with
+# fp32 accumulation; 'auto' defers the per-level choice to autotune.
+DTYPE_POLICIES: Dict[str, Tuple[str, str]] = {
+    "follow": ("", "float32"),
+    "float32": ("float32", "float32"),
+    "bfloat16": ("bfloat16", "float32"),
+    "auto": ("auto", "float32"),
+}
+
+
+def resolve_dtype_policy(policy: str) -> Tuple[str, str]:
+    """Map a policy name to ``(slab_dtype, accum_dtype)`` spec fields."""
+    try:
+        return DTYPE_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown msda dtype policy {policy!r}; one of {sorted(DTYPE_POLICIES)}"
+        ) from None
 
 
 def spec_from_arrays(
@@ -184,6 +236,13 @@ class PlanTuning:
     onehot_levels: Tuple[bool, ...]
     interpret: bool
     source: str = "heuristic"  # heuristic | autotune | autotune-cache | override
+    # per-level committed slab storage dtype; () -> the spec's resolved
+    # slab dtype for every level (autotune may mix fp32/bf16 per level)
+    slab_dtypes: Tuple[str, ...] = ()
+
+
+def _default_slab_dtypes(spec: MsdaSpec) -> Tuple[str, ...]:
+    return (spec.resolved_slab_dtype(),) * spec.num_levels
 
 
 # --------------------------------------------------------------------------
@@ -206,7 +265,7 @@ def _build_ref(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
 
 @registry.backend("pallas")
 def _build_pallas(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
-    """xMSDA Pallas kernels with the plan's committed tiling."""
+    """xMSDA Pallas kernels with the plan's committed tiling + dtypes."""
     from repro.kernels import ops
 
     params = ops.MSDAParams(
@@ -217,8 +276,19 @@ def _build_pallas(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
         save_sampled=spec.train,
         interpret=tuning.interpret,
         onehot_levels=tuple(tuning.onehot_levels),
+        slab_dtypes=tuple(tuning.slab_dtypes) or _default_slab_dtypes(spec),
+        accum_dtype=spec.accum_dtype,
+        io_dtype=spec.dtype,
     )
     return ops.build_kernel_op(params)
+
+
+@registry.backend("cpu")
+def _build_cpu(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
+    """CPU-vectorised backend: one vmapped fused gather per level."""
+    from repro.kernels import msda_cpu
+
+    return msda_cpu.build_cpu_exec(spec, tuning)
 
 
 # --------------------------------------------------------------------------
@@ -234,11 +304,33 @@ def _heuristic_block_q(spec: MsdaSpec) -> Tuple[int, ...]:
         spec.num_points,
         spec.head_dim,
         spec.num_queries,
-        value_itemsize=spec.value_itemsize,
+        value_itemsize=spec.slab_itemsize,
         train=spec.train,
         vmem_budget=spec.vmem_budget,
         adaptive=spec.adaptive_block,
+        accum_itemsize=spec.accum_itemsize,
     )
+
+
+def _blocks_for_slab_dtypes(spec: MsdaSpec, slab_dtypes: Tuple[str, ...]) -> Tuple[int, ...]:
+    """Heuristic block plan with PER-LEVEL slab itemsizes (a mixed
+    fp32/bf16 dtype commitment changes each level's VMEM residency)."""
+    from repro.kernels import ops
+
+    out = []
+    for hw, sdt in zip(spec.spatial_shapes, slab_dtypes):
+        out.append(ops.plan_blocks(
+            (hw,),
+            spec.num_points,
+            spec.head_dim,
+            spec.num_queries,
+            value_itemsize=jnp.dtype(sdt).itemsize,
+            train=spec.train,
+            vmem_budget=spec.vmem_budget,
+            adaptive=spec.adaptive_block,
+            accum_itemsize=spec.accum_itemsize,
+        )[0])
+    return tuple(out)
 
 
 def _onehot_levels(spec: MsdaSpec) -> Tuple[bool, ...]:
@@ -258,7 +350,7 @@ def autotune_cache_path() -> str:
     return os.path.join(base, "repro", "msda_autotune.json")
 
 
-def _load_autotune_cache() -> Dict[str, List[int]]:
+def _load_autotune_cache() -> Dict[str, Any]:
     path = autotune_cache_path()
     try:
         with open(path) as f:
@@ -267,7 +359,7 @@ def _load_autotune_cache() -> Dict[str, List[int]]:
         return {}
 
 
-def _store_autotune_cache(cache: Dict[str, List[int]]) -> None:
+def _store_autotune_cache(cache: Dict[str, Any]) -> None:
     path = autotune_cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -280,7 +372,13 @@ def _store_autotune_cache(cache: Dict[str, List[int]]) -> None:
 
 
 def _autotune_inputs(spec: MsdaSpec):
-    """Deterministic synthetic operands at the spec's exact geometry."""
+    """Deterministic synthetic operands at the spec's exact geometry.
+
+    All three operands honour ``spec.dtype``: timing a bf16 spec with
+    fp32 operands would trace (and cache a winner for) a *different*
+    program than the one real calls execute — the casts, slab residency
+    and gather widths all change with the operand dtype.
+    """
     B = 1
     S, H, D = spec.total_pixels, spec.num_heads, spec.head_dim
     Q, L, P = spec.num_queries, spec.num_levels, spec.num_points
@@ -288,69 +386,185 @@ def _autotune_inputs(spec: MsdaSpec):
     value = jnp.linspace(-1.0, 1.0, B * S * H * D, dtype=jnp.float32)
     value = value.reshape(B, S, H, D).astype(dt)
     loc = jnp.linspace(0.05, 0.95, B * Q * H * L * P * 2, dtype=jnp.float32)
-    loc = loc.reshape(B, Q, H, L, P, 2)
+    loc = loc.reshape(B, Q, H, L, P, 2).astype(dt)
     attn = jnp.full((B, Q, H, L, P), 1.0 / (L * P), jnp.float32).astype(dt)
     return value, loc, attn
 
 
-def _time_executor(run: Callable, args, iters: int = 3) -> float:
-    f = jax.jit(run)
-    jax.block_until_ready(f(*args))  # compile + warm
-    t0 = time.perf_counter()
+# a candidate must win the interleaved median by this relative margin to
+# replace the incumbent — sub-noise deltas must not get PERSISTED into the
+# per-device winner cache (shared runners drift 2-3x between sequential
+# timing blocks; interleaving cancels most of it, the margin eats the rest)
+_AUTOTUNE_MARGIN = 0.05
+
+
+def _time_executors(fns: Dict[Any, Callable], args, iters: int = 3) -> Dict[Any, float]:
+    """Median seconds/call per candidate, measured ALTERNATELY.
+
+    ``fns`` values must already be jitted + warmed.  Interleaving puts
+    every candidate under the same machine-load profile, so the medians
+    stay comparable — sequential per-candidate blocks let load drift
+    masquerade as a tuning delta.
+    """
+    times: Dict[Any, List[float]] = {k: [] for k in fns}
     for _ in range(iters):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / iters
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            times[k].append(time.perf_counter() - t0)
+    return {k: sorted(ts)[len(ts) // 2] for k, ts in times.items()}
 
 
-def _autotune_block_q(
+# backends whose executors ignore block_q (nothing to race on that axis)
+_BLOCKLESS_BACKENDS = frozenset({"ref", "cpu"})
+
+# the two slab dtypes autotune races per level under the 'auto' policy
+_SLAB_DTYPE_CANDIDATES = ("float32", "bfloat16")
+
+
+def _parse_cache_entry(hit, spec: MsdaSpec):
+    """Decode a winner-cache entry -> (block_q, slab_dtypes) or None.
+
+    Two on-disk schemas: the current ``{"block_q": [...], "slab_dtypes":
+    [...]}`` dict, and a flat ``[block_q...]`` list accepted for
+    hand-authored caches (offline sweep tooling / the pre-dtype-policy
+    format — note old entries won't *hit* anyway, since adding the
+    policy fields to the spec changed ``cache_token()``).  Anything
+    malformed is treated as a miss, never an error: a corrupt cache file
+    must degrade to re-tuning.
+    """
+    L = spec.num_levels
+    try:
+        if isinstance(hit, list) and len(hit) == L:
+            return tuple(int(b) for b in hit), _default_slab_dtypes(spec)
+        if isinstance(hit, dict):
+            bq = hit.get("block_q")
+            dts = hit.get("slab_dtypes")
+            if not (isinstance(bq, list) and len(bq) == L):
+                return None
+            if not (isinstance(dts, list) and len(dts) == L):
+                dts = _default_slab_dtypes(spec)
+            dts = tuple(str(jnp.dtype(d)) for d in dts)
+            return tuple(int(b) for b in bq), dts
+    except (TypeError, ValueError):  # hand-edited / corrupted entries
+        return None
+    return None
+
+
+def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
-) -> Tuple[Tuple[int, ...], str]:
-    """Measure candidate block plans; persist the winner per (device, spec).
+) -> Tuple[Tuple[int, ...], Tuple[str, ...], str]:
+    """Measure candidate plans; persist the winner per (device, spec).
 
-    Candidates are the heuristic plan scaled by {1/2, 1, 2} per level
-    (uniformly — the per-level cross product explodes), snapped to the
-    sublane multiple.  Winners are keyed by spec + device kind so a cache
-    produced on one part never mis-tunes another.
+    Two raced axes:
+
+    * ``block_q`` — the heuristic plan scaled by {1/2, 1, 2} per level
+      (uniformly — the per-level cross product explodes), snapped to the
+      sublane multiple.  Skipped for blockless backends ("cpu").
+    * slab dtype — under the ``slab_dtype="auto"`` policy, fp32 vs bf16
+      is raced PER LEVEL (greedy marginal flips on the block winner): a
+      bf16 slab halves VMEM residency but pays cast/precision overhead,
+      and which side wins is level-size- and backend-dependent.
+
+    All timings are interleaved medians (see :func:`_time_executors`)
+    and a challenger must beat the incumbent by ``_AUTOTUNE_MARGIN`` —
+    load jitter must never pick a precision.
+
+    Winners ``{"block_q": [...], "slab_dtypes": [...]}`` are keyed by
+    spec + device kind so a cache produced on one part never mis-tunes
+    another.  Returns ``(block_q, slab_dtypes, source)``.
     """
     onehot = _onehot_levels(spec)
     heur = _heuristic_block_q(spec)
+    base_dts = _default_slab_dtypes(spec)
     key = f"{jax.devices()[0].device_kind}|{backend_name}|{spec.cache_token()}"
     disk = _load_autotune_cache()
-    hit = disk.get(key)
-    if hit is not None and len(hit) == spec.num_levels:
-        return tuple(int(b) for b in hit), "autotune-cache"
+    parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is not None:
+        return parsed[0], parsed[1], "autotune-cache"
 
     qcap = _round_up(spec.num_queries, _SUBLANE)
     candidates = []
-    for scale_num, scale_den in ((1, 2), (1, 1), (2, 1)):
-        cand = tuple(
-            max(_SUBLANE, min(2048, qcap, (b * scale_num // scale_den) // _SUBLANE * _SUBLANE))
-            for b in heur
-        )
-        if cand not in candidates:
-            candidates.append(cand)
-    if len(candidates) == 1:
-        return candidates[0], "autotune"
+    if backend_name not in _BLOCKLESS_BACKENDS:
+        for scale_num, scale_den in ((1, 2), (1, 1), (2, 1)):
+            cand = tuple(
+                max(_SUBLANE, min(2048, qcap, (b * scale_num // scale_den) // _SUBLANE * _SUBLANE))
+                for b in heur
+            )
+            if cand not in candidates:
+                candidates.append(cand)
+    else:
+        candidates.append(heur)
+    race_dtypes = spec.slab_dtype == "auto"
+    if len(candidates) == 1 and not race_dtypes:
+        return candidates[0], base_dts, "autotune"
 
     args = _autotune_inputs(spec)
-    best, best_t = None, float("inf")
-    for cand in candidates:
-        tuning = PlanTuning(block_q=cand, onehot_levels=onehot,
-                            interpret=interpret, source="autotune")
-        try:
-            t = _time_executor(builder(spec, tuning), args)
-        except Exception:
-            continue  # candidate doesn't fit/compile: skip
-        if t < best_t:
-            best, best_t = cand, t
-    if best is None:
+    jit_cache: Dict[tuple, Callable] = {}
+
+    def get_fn(bq, dts):
+        """Jitted + warmed executor for one candidate, cached so incumbent
+        re-appearances across race rounds never recompile."""
+        ck = (bq, dts)
+        if ck not in jit_cache:
+            tuning = PlanTuning(block_q=bq, onehot_levels=onehot,
+                                interpret=interpret, source="autotune",
+                                slab_dtypes=dts)
+            f = jax.jit(builder(spec, tuning))
+            jax.block_until_ready(f(*args))  # compile + warm (may raise)
+            jit_cache[ck] = f
+        return jit_cache[ck]
+
+    def race(variants: Dict[Any, tuple]):
+        """Interleave-time variants {key: (bq, dts)}; unbuildable ones drop."""
+        fns = {}
+        for k, (bq, dts) in variants.items():
+            try:
+                fns[k] = get_fn(bq, dts)
+            except Exception:
+                continue  # candidate doesn't fit/compile: skip
+        if not fns:
+            return None, {}
+        times = _time_executors(fns, args)
+        return min(times, key=times.get), times
+
+    bkey, _ = race({c: (c, base_dts) for c in candidates})
+    if bkey is None:
         # every candidate failed to build: fall back to the heuristic and
         # do NOT persist — a never-validated plan must not poison the
         # per-device winner cache for future processes
-        return heur, "heuristic"
-    disk[key] = list(best)
+        return heur, base_dts, "heuristic"
+    best = bkey
+
+    best_dts = base_dts
+    if race_dtypes:
+        # greedy per-level flips against the committed block winner; each
+        # round re-times incumbent vs challenger INTERLEAVED and the flip
+        # must clear the noise margin, so a level goes bf16 only when its
+        # marginal saving genuinely beats its cast cost end-to-end
+        wide, narrow = (str(jnp.dtype(d)) for d in _SLAB_DTYPE_CANDIDATES)
+        current = (wide,) * spec.num_levels
+        for l in range(spec.num_levels):
+            trial = current[:l] + (narrow,) + current[l + 1:]
+            k, times = race({"cur": (best, current), "trial": (best, trial)})
+            if (k == "trial"
+                    and times["trial"] < times["cur"] * (1 - _AUTOTUNE_MARGIN)):
+                current = trial
+        best_dts = current
+        if best_dts != base_dts and backend_name not in _BLOCKLESS_BACKENDS:
+            # flipped levels halved their residency: re-plan blocks with
+            # the committed per-level itemsizes (the 'bf16 frees VMEM ->
+            # wider vec-len' payoff) and keep whichever clearly wins
+            rebq = _blocks_for_slab_dtypes(spec, best_dts)
+            if rebq != best:
+                k, times = race({"cur": (best, best_dts), "re": (rebq, best_dts)})
+                if (k == "re"
+                        and times["re"] < times["cur"] * (1 - _AUTOTUNE_MARGIN)):
+                    best = rebq
+
+    disk[key] = {"block_q": list(best), "slab_dtypes": list(best_dts)}
     _store_autotune_cache(disk)
-    return best, "autotune"
+    return best, best_dts, "autotune"
 
 
 # --------------------------------------------------------------------------
@@ -482,18 +696,26 @@ class MsdaPlan:
         from repro.kernels import ops
 
         s = self.local_spec
+        dts = self.tuning.slab_dtypes or _default_slab_dtypes(s)
         rows = []
         for l, hw in enumerate(s.spatial_shapes):
             slab = ops.slab_rows(hw)
-            slab_bytes = slab * s.head_dim * s.value_itemsize
-            if s.train:
-                slab_bytes += slab * s.head_dim * 4  # fp32 grad slab
+            sdt = dts[l] if l < len(dts) and dts[l] else s.resolved_slab_dtype()
+            if self.backend == "ref":
+                # the oracle ignores the slab policy: pure fp32 compute,
+                # no resident slabs — report what actually executes
+                sdt = "float32"
+            slab_bytes = slab * s.head_dim * jnp.dtype(sdt).itemsize
+            if s.train:  # widened (accum-dtype) grad slab rides along
+                slab_bytes += slab * s.head_dim * s.accum_itemsize
             bq = self.tuning.block_q[l] if l < len(self.tuning.block_q) else 0
             per_q = ops.per_query_bytes(s.num_points, s.head_dim)
             occupancy = (slab_bytes + bq * per_q) / max(s.vmem_budget, 1)
             onehot = bool(self.tuning.onehot_levels[l]) if self.tuning.onehot_levels else False
             if self.backend == "ref":
                 gather = "xla"
+            elif self.backend == "cpu":
+                gather = "cpu-fused"
             elif onehot:
                 gather = "mxu-onehot"
             else:
@@ -503,6 +725,7 @@ class MsdaPlan:
                 "hw": hw,
                 "slab_rows": slab,
                 "slab_bytes": slab_bytes,
+                "slab_dtype": str(sdt),
                 "block_q": bq,
                 "q_steps": -(-_round_up(s.num_queries, max(bq, 1)) // max(bq, 1)),
                 "gather": gather,
@@ -511,6 +734,14 @@ class MsdaPlan:
         return rows
 
     def describe(self) -> str:
+        """Human-readable plan report.
+
+        One line per level with the committed ``block_q``, slab bytes /
+        VMEM occupancy, the gather path, and — the mixed-precision axis —
+        the **chosen slab dtype variant** per level (``slab_dt`` column:
+        fp32, or bf16 when the policy/autotune committed a narrow slab;
+        accumulation stays in ``accum_dtype``, shown in the header).
+        """
         s = self.spec
         shard_note = ""
         if self.local_spec is not self.spec:
@@ -518,19 +749,21 @@ class MsdaPlan:
                           f"H={self.local_spec.num_heads} (levels below are per shard)\n")
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
-            f"sharding={self.sharding_mode}, train={s.train}, dtype={s.dtype})\n"
+            f"sharding={self.sharding_mode}, train={s.train}, dtype={s.dtype}, "
+            f"accum={s.accum_dtype})\n"
             f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
             f"levels={s.num_levels} S={s.total_pixels}\n" + shard_note +
             f"  vmem_budget={s.vmem_budget / 2**20:.1f} MiB  "
             f"interpret={self.tuning.interpret}\n"
         )
         lines = [head,
-                 "  lvl  hw         slab_rows  slab_KiB   block_q  steps  gather      vmem%"]
+                 "  lvl  hw         slab_rows  slab_KiB   slab_dt   block_q  steps  gather      vmem%"]
         for r in self.level_report():
             hw = "%dx%d" % r["hw"]
             lines.append(
                 f"  {r['level']:<4d} {hw:<10s} "
                 f"{r['slab_rows']:<10d} {r['slab_bytes'] / 1024:<10.1f} "
+                f"{r['slab_dtype']:<9s} "
                 f"{r['block_q']:<8d} {r['q_steps']:<6d} {r['gather']:<11s} "
                 f"{100 * r['vmem_frac']:.1f}")
         return "\n".join(lines)
@@ -604,17 +837,19 @@ def msda_plan(
     builder = registry.get_backend(backend_name)
 
     def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
+        dts = _default_slab_dtypes(s)
         if block_q is not None:
             if len(block_q) != s.num_levels:
                 raise ValueError(
                     f"block_q has {len(block_q)} entries for {s.num_levels} levels")
             bq, source = tuple(int(b) for b in block_q), "override"
         elif tune == "autotune" and backend_name != "ref":
-            bq, source = _autotune_block_q(s, backend_name, builder, interpret)
+            bq, dts, source = _autotune_plan(s, backend_name, builder, interpret)
         else:
             bq, source = _heuristic_block_q(s), "heuristic"
         tuning = PlanTuning(block_q=bq, onehot_levels=_onehot_levels(s),
-                            interpret=interpret, source=source)
+                            interpret=interpret, source=source,
+                            slab_dtypes=dts)
         return builder(s, tuning), tuning
 
     if mesh is None:

@@ -61,11 +61,16 @@ def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
     raise ValueError(f"{cfg.family} has no serving path")
 
 
-def warmup_msda_plans(cfg):
+def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None):
     """Pre-build every MsdaPlan a serving process will execute.
 
     Returns the plans (empty tuple for pure-LM families) so callers can
     log ``plan.describe()``.  Idempotent: plans are cached by spec.
+
+    ``dtype_policy`` overrides the config's ``msda.dtype_policy`` for
+    every warmed plan (e.g. force ``"bfloat16"`` slabs fleet-wide, or
+    ``"auto"`` so the warm-up absorbs the autotune fp32-vs-bf16 race —
+    and its winner-cache disk write — instead of the first request).
     """
     plans = []
     if getattr(cfg, "vision", None) is not None:
@@ -76,11 +81,13 @@ def warmup_msda_plans(cfg):
         mc = vlm._msda_cfg(vc)
         plans.append(msda_mod.attention_plan(
             mc, num_queries=vc.num_visual_tokens,
-            head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype))
+            head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype,
+            dtype_policy=dtype_policy))
     if getattr(cfg, "msda", None) is not None:
         from repro.core import deformable_transformer as dt
 
-        plans.extend(dt.msda_plans(cfg, dtype=cfg.dtype).values())
+        plans.extend(
+            dt.msda_plans(cfg, dtype=cfg.dtype, dtype_policy=dtype_policy).values())
     return tuple(plans)
 
 

@@ -1,0 +1,245 @@
+"""Cross-backend x dtype-policy conformance suite for MSDA.
+
+Every backend returned by ``registry.list_backends()`` is parametrized
+against the ``"ref"`` oracle for forward and VJP parity, under every
+dtype policy — so any future ``register_backend(...)`` call is
+automatically covered the moment it lands (collection re-reads the
+registry).  CI shards the matrix via two env vars:
+
+* ``REPRO_CONFORMANCE_BACKENDS`` — comma list restricting the backends
+  (e.g. ``"ref,cpu"`` for the Pallas-free CPU lane),
+* ``REPRO_CONFORMANCE_POLICIES`` — comma list restricting the dtype
+  policies (``"float32"`` / ``"bfloat16"``).
+
+Tolerance tiers (documented, per dtype policy):
+
+* ``float32`` policy on the ``"ref"`` backend: **bit-identical** — the
+  plan executes the oracle itself, so any difference is a planning bug.
+* ``float32`` policy elsewhere: ``2e-5`` fwd / ``5e-4`` VJP — fp32
+  reassociation only (fused vs per-corner gather order).
+* ``bfloat16`` policy (bf16 slab, fp32 accumulation): ``3e-2`` fwd /
+  ``1e-1`` VJP against the *fp32* oracle — one bf16 rounding of the
+  value slab (8-bit mantissa => ~4e-3 relative per element, amplified
+  by the P*L-term reduction); accumulation error does NOT grow with Q
+  because the accumulator stays fp32.
+
+Also here: finite-difference gradcheck of the backward path on small
+geometries, including sampling locations at and outside the [0, 1]
+border where bilinear corner weights zero out.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import plan as plan_mod
+from repro.kernels import registry
+from repro.kernels.plan import MsdaSpec, msda_plan
+from repro.kernels.ref import msda_ref
+
+LEVELS = ((10, 6), (5, 3))
+B, Q, H, D, P = 2, 21, 2, 8, 3
+
+# documented per-policy tolerance tiers (see module docstring)
+FWD_TOL = {"float32": 2e-5, "bfloat16": 3e-2}
+VJP_TOL = {"float32": 5e-4, "bfloat16": 1e-1}
+
+
+def _env_subset(env_var, names):
+    env = os.environ.get(env_var)
+    if not env:
+        return tuple(names)
+    keep = {s.strip() for s in env.split(",") if s.strip()}
+    unknown = keep - set(names)
+    if unknown:
+        # a typo'd/renamed name must fail the lane, not skip-collect an
+        # empty matrix and report a green job that tested nothing
+        raise ValueError(
+            f"{env_var} names {sorted(unknown)} not in {sorted(names)}")
+    return tuple(n for n in names if n in keep)
+
+
+BACKENDS = _env_subset("REPRO_CONFORMANCE_BACKENDS", registry.list_backends())
+POLICIES = _env_subset("REPRO_CONFORMANCE_POLICIES", ("float32", "bfloat16"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_mod.clear_plans()
+    yield
+    plan_mod.clear_plans()
+
+
+def _inputs(seed=0, levels=LEVELS, b=B, q=Q, h=H, d=D, p=P):
+    S = sum(hh * ww for hh, ww in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    value = jax.random.normal(ks[0], (b, S, h, d), jnp.float32)
+    # straddle the border on purpose: [-0.2, 1.2] exercises the masked
+    # (zero-weight) corners every backend must reproduce
+    loc = jax.random.uniform(ks[1], (b, q, h, L, p, 2), minval=-0.2, maxval=1.2)
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (b, q, h, L, p)).reshape(b, q, h, -1)
+    ).reshape(b, q, h, L, p)
+    return value, loc, attn
+
+
+def _spec(policy, *, train=False, levels=LEVELS, q=Q, h=H, d=D, p=P):
+    slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
+    return MsdaSpec(spatial_shapes=levels, num_heads=h, head_dim=d,
+                    num_points=p, num_queries=q, dtype="float32", train=train,
+                    slab_dtype=slab_dtype, accum_dtype=accum_dtype)
+
+
+# --------------------------------------------------------------------------
+# fwd parity: every backend x every dtype policy vs the fp32 oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fwd_matches_ref_oracle(backend, policy):
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(policy), backend=backend)
+    out = plan(value, loc, attn)
+    ref = msda_ref(value, LEVELS, loc, attn)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    if backend == "ref" and policy == "float32":
+        # the plan runs the oracle itself: bit-identical or planning bug
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        tol = FWD_TOL[policy]
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bf16_policy_commits_bf16_slabs(backend, policy):
+    """The plan must *report* the committed dtype variant per level."""
+    plan = msda_plan(_spec(policy), backend=backend)
+    report = plan.level_report()
+    assert len(report) == len(LEVELS)
+    # the ref oracle ignores the slab policy (pure fp32 compute) and its
+    # report must say so rather than echo an uncommitted policy
+    want = "bfloat16" if policy == "bfloat16" and backend != "ref" else "float32"
+    assert all(r["slab_dtype"] == want for r in report)
+    assert f"accum={plan.spec.accum_dtype}" in plan.describe()
+    assert plan.spec.accum_dtype == "float32"  # wide accumulation, always
+
+
+# --------------------------------------------------------------------------
+# VJP parity: grads of every backend vs the fp32 oracle's grads
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_vjp_matches_ref_oracle(backend, policy):
+    value, loc, attn = _inputs()
+    plan = msda_plan(_spec(policy, train=True), backend=backend)
+
+    g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2),
+                 argnums=(0, 1, 2))(value, loc, attn)
+    gr = jax.grad(lambda v, l, a: jnp.sum(msda_ref(v, LEVELS, l, a) ** 2),
+                  argnums=(0, 1, 2))(value, loc, attn)
+    tol = VJP_TOL[policy]
+    for got, want, name in zip(g, gr, ("value", "loc", "attn")):
+        assert got.dtype == want.dtype, name  # grad dtype == operand dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=tol, rtol=tol, err_msg=f"grad_{name} [{backend}/{policy}]")
+
+
+# --------------------------------------------------------------------------
+# finite-difference gradcheck (bwd path, small geometry, border cases)
+# --------------------------------------------------------------------------
+
+# x/y samples: outside (<0, >1), exactly at the border, and interior —
+# chosen OFF the bilinear kinks (px = x*W - 0.5 never an integer for
+# W, H in {4, 5}) so central differences see a smooth function
+_BORDER_COORDS = (-0.12, 0.0, 0.31, 0.52, 0.77, 1.0, 1.09, 0.45)
+
+
+@pytest.mark.parametrize("backend", [b for b in BACKENDS if b != "ref"])
+def test_gradcheck_finite_difference_small_geometry(backend):
+    levels = ((4, 5),)
+    b, q, h, d, p = 1, 4, 1, 4, 2
+    value, _, attn = _inputs(seed=3, levels=levels, b=b, q=q, h=h, d=d, p=p)
+    coords = np.resize(np.asarray(_BORDER_COORDS, np.float32), q * p * 2)
+    loc = jnp.asarray(coords.reshape(b, q, h, 1, p, 2))
+    gout = jax.random.normal(jax.random.PRNGKey(7), (b, q, h * d), jnp.float32)
+
+    plan = msda_plan(_spec("float32", train=True, levels=levels, q=q, h=h,
+                           d=d, p=p), backend=backend)
+    f = jax.jit(lambda v, l, a: jnp.vdot(plan(v, l, a), gout))
+    grads = jax.jit(jax.grad(f, argnums=(0, 1, 2)))(value, loc, attn)
+
+    def fd(operand_idx, arr, flat_idx, eps):
+        base = [np.asarray(value, np.float64), np.asarray(loc, np.float64),
+                np.asarray(attn, np.float64)]
+
+        def at(delta):
+            pert = [x.copy() for x in base]
+            pert[operand_idx].flat[flat_idx] += delta
+            return float(f(*[jnp.asarray(x, jnp.float32) for x in pert]))
+
+        return (at(eps) - at(-eps)) / (2 * eps)
+
+    # loc: every coordinate (the nonlinear argument — border masks live
+    # here); fp32 central differences at eps=1e-3 resolve ~1e-3 abs
+    g_loc = np.asarray(grads[1], np.float64)
+    for i in range(g_loc.size):
+        approx = fd(1, loc, i, eps=1e-3)
+        np.testing.assert_allclose(
+            g_loc.flat[i], approx, atol=5e-3, rtol=5e-2,
+            err_msg=f"grad_loc[{i}] (coord={np.asarray(loc).flat[i]:.2f})")
+
+    # value / attn enter linearly: FD is exact up to fp noise; spot-check
+    for operand_idx, arr, g in ((0, value, grads[0]), (2, attn, grads[2])):
+        garr = np.asarray(g, np.float64)
+        for i in range(0, garr.size, max(garr.size // 7, 1)):
+            approx = fd(operand_idx, arr, i, eps=1e-2)
+            np.testing.assert_allclose(garr.flat[i], approx, atol=2e-3,
+                                       rtol=2e-2, err_msg=f"operand{operand_idx}[{i}]")
+
+
+@pytest.mark.parametrize("backend", [b for b in BACKENDS if b != "ref"])
+def test_grad_zero_far_outside_border(backend):
+    """>1 pixel outside the map every corner weight masks to zero, so the
+    op is locally constant: grad_loc == 0 and the output ignores attn
+    mass placed there."""
+    levels = ((4, 5),)
+    b, q, h, d, p = 1, 3, 1, 4, 2
+    value, _, attn = _inputs(seed=5, levels=levels, b=b, q=q, h=h, d=d, p=p)
+    loc = jnp.full((b, q, h, 1, p, 2), 1.8)  # deep outside
+    plan = msda_plan(_spec("float32", train=True, levels=levels, q=q, h=h,
+                           d=d, p=p), backend=backend)
+    out = plan(value, loc, attn)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+    g_loc = jax.grad(lambda l: jnp.sum(plan(value, l, attn) ** 2))(loc)
+    np.testing.assert_allclose(np.asarray(g_loc), 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# registry auto-coverage: a freshly registered backend enters the matrix
+# --------------------------------------------------------------------------
+
+
+def test_new_backend_is_auto_covered():
+    """list_backends() is the parametrization source, so a backend
+    registered before collection lands in every test above; this guards
+    the mechanism itself."""
+
+    def builder(spec, tuning):
+        return lambda v, l, a: msda_ref(v, spec.spatial_shapes, l, a)
+
+    registry.register_backend("conformance-probe", builder)
+    try:
+        assert "conformance-probe" in registry.list_backends()
+        assert set(BACKENDS) <= set(registry.list_backends())
+    finally:
+        registry.unregister_backend("conformance-probe")

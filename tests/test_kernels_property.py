@@ -8,6 +8,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops
+from repro.kernels import plan as plan_mod
 from repro.kernels.ref import msda_ref
 
 SET = dict(max_examples=15, deadline=None)
@@ -83,6 +84,116 @@ def test_attention_weight_homogeneity(args):
     o1 = ops.msda(value, levels, loc, 3.0 * attn, backend="pallas")
     o2 = 3.0 * ops.msda(value, levels, loc, attn, backend="pallas")
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=5e-5)
+
+
+# --------------------------------------------------------------------------
+# block planning: the slab-bytes VMEM model's invariants over random specs
+# --------------------------------------------------------------------------
+
+_MIB = 2**20
+
+spec_dims = st.tuples(
+    st.sampled_from([((5, 7),), ((8, 6), (4, 3)), ((32, 32), (16, 16), (8, 8))]),
+    st.integers(1, 8),                       # P
+    st.sampled_from([8, 16, 32]),            # D
+    st.integers(1, 90_000),                  # Q
+    st.sampled_from([2 * _MIB, 16 * _MIB, 32 * _MIB, 64 * _MIB]),  # budget
+    st.booleans(),                           # train
+    st.sampled_from(["float32", "bfloat16"]),  # slab dtype
+)
+
+
+def _round_up8(x):
+    return (x + 7) // 8 * 8
+
+
+@given(spec_dims)
+@settings(**SET)
+def test_planned_block_q_respects_vmem_model(args):
+    """For random specs, heuristic block_q stays sublane(8)-aligned, never
+    exceeds the query extent or the 2048 cap, and under the slab-bytes
+    model never exceeds vmem_budget (unless already clamped at the 8-row
+    floor / the model's 1 MiB minimum working set)."""
+    levels, P, D, Q, budget, train, slab = args
+    spec = plan_mod.MsdaSpec(
+        spatial_shapes=levels, num_heads=2, head_dim=D, num_points=P,
+        num_queries=Q, train=train, vmem_budget=budget, slab_dtype=slab)
+    bqs = plan_mod._heuristic_block_q(spec)
+    per_q = ops.per_query_bytes(P, D)
+    for hw, bq in zip(levels, bqs):
+        assert bq % 8 == 0 and 8 <= bq <= 2048
+        assert bq <= _round_up8(Q)
+        resident = ops.slab_rows(hw) * D * spec.slab_itemsize
+        if train:
+            resident += ops.slab_rows(hw) * D * spec.accum_itemsize
+        # the documented model: per-step bytes fit what the budget leaves
+        # after the resident slab(s), floored at a 1 MiB working set
+        assert bq * per_q <= max(budget - resident, 1 * _MIB) or bq == 8
+
+
+@given(spec_dims)
+@settings(**SET)
+def test_bf16_slab_never_narrows_blocks(args):
+    """Halving slab residency (bf16 storage) can only widen the planned
+    vec-len, never shrink it — the VMEM freed goes to queries."""
+    levels, P, D, Q, budget, train, _ = args
+    mk = lambda sdt: plan_mod.MsdaSpec(
+        spatial_shapes=levels, num_heads=2, head_dim=D, num_points=P,
+        num_queries=Q, train=train, vmem_budget=budget, slab_dtype=sdt)
+    wide = plan_mod._heuristic_block_q(mk("float32"))
+    narrow = plan_mod._heuristic_block_q(mk("bfloat16"))
+    assert all(n >= w for n, w in zip(narrow, wide))
+
+
+# --------------------------------------------------------------------------
+# autotune winner cache: round-trips through XDG_CACHE_HOME, both schemas
+# --------------------------------------------------------------------------
+
+cache_entries = st.dictionaries(
+    st.text(st.characters(min_codepoint=33, max_codepoint=126), min_size=1, max_size=40),
+    st.one_of(
+        st.lists(st.integers(8, 2048), min_size=1, max_size=5),  # legacy
+        st.fixed_dictionaries({
+            "block_q": st.lists(st.integers(8, 2048), min_size=2, max_size=2),
+            "slab_dtypes": st.lists(
+                st.sampled_from(["float32", "bfloat16"]), min_size=2, max_size=2),
+        }),
+    ),
+    max_size=4,
+)
+
+
+@given(cache_entries)
+@settings(**SET)
+def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entries):
+    """Winner caches (legacy flat lists AND the dtype-aware dict schema)
+    survive a store/load cycle rooted at a tmp XDG_CACHE_HOME."""
+    import os
+
+    tmp = tmp_path_factory.mktemp("xdg")
+    old_env = {k: os.environ.pop(k, None)
+               for k in ("XDG_CACHE_HOME", "REPRO_MSDA_AUTOTUNE_CACHE")}
+    os.environ["XDG_CACHE_HOME"] = str(tmp)
+    try:
+        path = plan_mod.autotune_cache_path()
+        assert path.startswith(str(tmp))  # respects XDG, not ~/.cache
+        plan_mod._store_autotune_cache(entries)
+        assert plan_mod._load_autotune_cache() == entries
+        spec = plan_mod.MsdaSpec(spatial_shapes=((8, 6), (4, 3)), num_heads=2,
+                                 head_dim=8, num_points=2, num_queries=16)
+        for hit in entries.values():
+            parsed = plan_mod._parse_cache_entry(hit, spec)
+            if isinstance(hit, dict):  # current schema always parses
+                assert parsed == (tuple(hit["block_q"]), tuple(hit["slab_dtypes"]))
+            elif len(hit) == spec.num_levels:  # legacy: level count must match
+                assert parsed == (tuple(hit), ("float32",) * 2)
+            else:
+                assert parsed is None
+    finally:
+        os.environ.pop("XDG_CACHE_HOME", None)
+        for k, v in old_env.items():
+            if v is not None:
+                os.environ[k] = v
 
 
 @given(dims)

@@ -254,6 +254,60 @@ def test_describe_reports_per_level_decisions():
 
 
 # --------------------------------------------------------------------------
+# dtype policy: the second planned axis (slab dtype + widened accumulator)
+# --------------------------------------------------------------------------
+
+
+def test_autotune_inputs_honor_spec_dtype():
+    """Regression: _autotune_inputs used to build fp32 operands regardless
+    of spec.dtype, so autotune timed (and cached winners for) a different
+    program than real bf16 calls execute."""
+    for dt in ("float32", "bfloat16"):
+        spec = MsdaSpec(spatial_shapes=LEVELS, num_heads=2, head_dim=8,
+                        num_points=3, num_queries=16, dtype=dt)
+        value, loc, attn = plan_mod._autotune_inputs(spec)
+        assert str(value.dtype) == dt
+        assert str(loc.dtype) == dt
+        assert str(attn.dtype) == dt
+        assert value.shape == (1, spec.total_pixels, 2, 8)
+        assert loc.shape == (1, 16, 2, spec.num_levels, 3, 2)
+
+
+def test_dtype_policy_resolution():
+    assert plan_mod.resolve_dtype_policy("follow") == ("", "float32")
+    assert plan_mod.resolve_dtype_policy("bfloat16") == ("bfloat16", "float32")
+    assert plan_mod.resolve_dtype_policy("auto") == ("auto", "float32")
+    with pytest.raises(ValueError, match="dtype policy"):
+        plan_mod.resolve_dtype_policy("float8")
+
+
+def test_bf16_slab_widens_blocks_and_is_reported():
+    """bf16 slabs halve residency -> heuristic blocks can only widen; the
+    committed variant must show up in describe()/level_report()."""
+    big = ((64, 64),)
+    mk = lambda sdt: MsdaSpec(spatial_shapes=big, num_heads=2, head_dim=32,
+                              num_points=4, num_queries=4096,
+                              vmem_budget=4 * 2**20, slab_dtype=sdt)
+    p32 = msda_plan(mk("float32"), backend="pallas")
+    p16 = msda_plan(mk("bfloat16"), backend="pallas")
+    assert p16.block_q[0] >= p32.block_q[0]
+    assert p16.level_report()[0]["slab_dtype"] == "bfloat16"
+    assert p16.level_report()[0]["slab_bytes"] < p32.level_report()[0]["slab_bytes"]
+    assert "bfloat16" in p16.describe() and "accum=float32" in p16.describe()
+
+
+def test_spec_normalises_policy_dtypes():
+    spec = MsdaSpec(spatial_shapes=LEVELS, num_heads=2, head_dim=8,
+                    num_points=2, num_queries=16, slab_dtype=jnp.bfloat16,
+                    accum_dtype="float32")
+    assert spec.slab_dtype == "bfloat16" and spec.accum_dtype == "float32"
+    assert spec.resolved_slab_dtype() == "bfloat16"
+    auto = MsdaSpec(spatial_shapes=LEVELS, num_heads=2, head_dim=8,
+                    num_points=2, num_queries=16, slab_dtype="auto")
+    assert auto.resolved_slab_dtype() == "float32"  # heuristic fallback
+
+
+# --------------------------------------------------------------------------
 # autotune (slow: times real candidate executions)
 # --------------------------------------------------------------------------
 
@@ -275,6 +329,28 @@ def test_autotune_picks_candidate_and_persists(tmp_path, monkeypatch):
     plan2 = msda_plan(spec, backend="pallas", tune="autotune")
     assert plan2.tuning.source == "autotune-cache"
     assert plan2.block_q == plan.block_q
+
+
+@pytest.mark.slow
+def test_autotune_races_slab_dtypes_and_persists(tmp_path, monkeypatch):
+    """Under slab_dtype='auto', autotune races fp32 vs bf16 per level and
+    the winner (whichever side) round-trips through the on-disk cache."""
+    import json
+
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    spec = MsdaSpec(spatial_shapes=((6, 6), (3, 3)), num_heads=2, head_dim=8,
+                    num_points=3, num_queries=32, slab_dtype="auto")
+    plan = msda_plan(spec, backend="pallas", tune="autotune")
+    assert plan.tuning.source == "autotune"
+    assert len(plan.tuning.slab_dtypes) == 2
+    assert all(d in ("float32", "bfloat16") for d in plan.tuning.slab_dtypes)
+    entry = next(iter(json.load(open(tmp_path / "tune.json")).values()))
+    assert entry == {"block_q": list(plan.block_q),
+                     "slab_dtypes": list(plan.tuning.slab_dtypes)}
+    plan_mod.clear_plans()
+    plan2 = msda_plan(spec, backend="pallas", tune="autotune")
+    assert plan2.tuning.source == "autotune-cache"
+    assert plan2.tuning.slab_dtypes == plan.tuning.slab_dtypes
 
 
 def test_autotune_ref_backend_falls_back_to_heuristic(tmp_path, monkeypatch):
