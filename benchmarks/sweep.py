@@ -1,0 +1,92 @@
+"""Offline autotune sweep: pre-populate winner caches + plan stores for a fleet.
+
+The first step of the ROADMAP "Autotune sweeps" item: run the
+``tune="autotune"`` races ONCE, offline, for every (arch, dtype policy)
+a fleet will serve, and persist the results twice over —
+
+* the per-device autotune winner cache (``REPRO_MSDA_AUTOTUNE_CACHE`` /
+  XDG path) that ``msda_plan`` consults, and
+* one :class:`~repro.serving.persistence.PlanStore` file per (arch,
+  policy) under ``--store-dir``, which a serving boot points at via
+  ``ServeEngine(store_path=...)`` to rebuild its full plan set with
+  zero timing runs and zero describe drift.
+
+VLM archs sweep their serving BUCKET geometries (the ladder the
+bucketed batcher actually admits), not just the config pyramid.
+
+    PYTHONPATH=src python -m benchmarks.sweep --smoke \
+        --store-dir /tmp/fleet-store --policies follow auto
+
+Prints one CSV row per (arch, policy): plan count, tune sources, and
+the store path a server should be pointed at.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from collections import Counter
+
+
+def sweep_one(cfg, policy: str, store_dir: str):
+    """Autotune + persist one (config, dtype policy) cell."""
+    from repro.serving import batcher as batcher_mod
+    from repro.serving.engine import warmup_msda_plans
+    from repro.serving.persistence import PlanStore
+
+    buckets = None
+    if getattr(cfg, "vision", None) is not None:
+        vc = cfg.vision
+        buckets = batcher_mod.default_buckets(
+            vc.levels, getattr(vc, "bucket_scales", (1.0,)))
+    plans = warmup_msda_plans(cfg, dtype_policy=policy, tune="autotune",
+                              buckets=buckets)
+    path = os.path.join(store_dir, f"{cfg.name}-{policy}.json")
+    # meta mirrors ServeEngine's store gate exactly, so a server booted
+    # with the same (arch, policy, tune, bucket ladder) restores this
+    # store directly via ServeEngine(store_path=...)
+    meta = {"arch": cfg.name, "dtype_policy": policy, "tune": "autotune",
+            "buckets": [b.key for b in (buckets or ())]}
+    n = PlanStore(path).save_plans(plans, meta=meta)
+    return plans, path, n
+
+
+def main() -> None:
+    from repro.configs.base import get_config, list_configs, reduced
+    from repro.kernels import plan as plan_mod
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+", default=None,
+                    help="default: every MSDA-bearing config")
+    ap.add_argument("--policies", nargs="+", default=["follow", "auto"],
+                    choices=("follow", "float32", "bfloat16", "auto"))
+    ap.add_argument("--store-dir", default="experiments/plan-store")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI / laptop sweeps)")
+    args = ap.parse_args()
+
+    archs = args.archs
+    if archs is None:
+        archs = [n for n in list_configs()
+                 if get_config(n).msda is not None
+                 or get_config(n).vision is not None]
+    os.makedirs(args.store_dir, exist_ok=True)
+
+    print("arch,policy,plans,stored,sources,store_path")
+    for name in archs:
+        cfg = get_config(name)
+        if args.smoke:
+            cfg = reduced(cfg)
+        for policy in args.policies:
+            plans, path, stored = sweep_one(cfg, policy, args.store_dir)
+            sources = "+".join(
+                f"{k}:{v}" for k, v in sorted(
+                    Counter(p.tuning.source for p in plans).items()))
+            print(f"{cfg.name},{policy},{len(plans)},{stored},{sources},{path}",
+                  flush=True)
+    stats = plan_mod.autotune_stats()
+    print(f"# autotune: {stats['raced']} raced, {stats['cache_hits']} cache "
+          f"hits; winner cache at {plan_mod.autotune_cache_path()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -89,6 +89,32 @@ for name in registry.list_backends():
     print(f"backend {name:8s} gather={p.level_report()[0]['gather']:<11s} "
           f"max err vs ref: {float(e):.2e}")
 
+# -- warm-start serving: persist plans + AOT-compile across restarts -----
+# A serving process saves its warmed plans (specs + autotune winners) to
+# a versioned store; a RESTARTED process rebuilds the identical plan set
+# with zero autotune timing runs, then AOT-compiles the executors at
+# boot (jit(...).lower().compile()) so the first request never traces.
+# serving.persistence.enable_jax_compilation_cache(dir) additionally
+# makes those boot compiles disk hits on a restart.
+import os
+import tempfile
+
+from repro.serving import aot
+from repro.serving.persistence import PlanStore
+
+store = PlanStore(os.path.join(tempfile.mkdtemp(), "plans.json"))
+store.save_plans([plan, train_plan])
+# --- imagine a process restart here ---
+report = store.restore()          # seeds winners, rebuilds plans, 0 races
+warm_plan = report.plans[0]
+assert warm_plan.describe() == plan.describe()
+executor = aot.compile_plan_executor(warm_plan, batch_size=B)  # boot-time
+with aot.probe() as probe:
+    out_warm = executor(value, loc, attn)                      # request-time
+print(f"warm-start: {len(report.plans)} plans restored, "
+      f"request-time traces={probe.traces} (AOT), "
+      f"max err vs ref: {float(jnp.abs(out_warm - out_ref).max()):.2e}")
+
 # CPU timing: fused vs materialising baseline
 f_ref = jax.jit(lambda v, l, a: msda_ref(v, levels, l, a))
 f_base = jax.jit(lambda v, l, a: msda_grid_sample_baseline(v, levels, l, a))

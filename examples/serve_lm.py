@@ -31,6 +31,12 @@ for i, text in enumerate(prompts):
     ids = np.asarray(tokenizer.encode(text), np.int32) % cfg.vocab_size
     req = Request(rid=i, prompt=ids, max_new=12)
     reqs.append(req)
+
+# AOT warm-up: trace + compile decode and every expected prefill length
+# BEFORE traffic — requests then run with zero retraces (serving.aot).
+engine.warmup(prompt_lengths=tuple(sorted({len(r.prompt) for r in reqs})))
+
+for req in reqs:
     engine.submit(req)
 
 t0 = time.time()
@@ -45,3 +51,4 @@ print(f"{len(reqs)} requests on 3 slots: {tok} tokens in {ticks} ticks "
       f"({tok/dt:.1f} tok/s on CPU)")
 for r in reqs:
     print(f"  req {r.rid}: {len(r.out)} new tokens {r.out[:8]}...")
+print(engine.metrics.format())

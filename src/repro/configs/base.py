@@ -51,6 +51,11 @@ class VisionConfig:
     levels: Tuple[Tuple[int, int], ...] = ((32, 32), (16, 16), (8, 8))
     msda_points: int = 4
     msda_heads: int = 8
+    # serving: variable incoming pyramids are padded into this ladder of
+    # fixed bucket geometries (fractions of ``levels``), bounding the
+    # plan cache and the set of compiled prefill programs
+    # (serving.batcher.default_buckets).
+    bucket_scales: Tuple[float, ...] = (1.0, 0.75, 0.5)
 
 
 @dataclass(frozen=True)

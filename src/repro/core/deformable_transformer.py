@@ -66,7 +66,7 @@ def init_detr(key, cfg) -> dict:
 
 
 def msda_plans(cfg, *, dtype="float32", train: bool = False, mesh=None,
-               dtype_policy=None):
+               dtype_policy=None, tune=None):
     """Build (and cache) the model's MsdaPlans for warm-up / inspection.
 
     One plan per static geometry in the model: the encoder's huge-Q
@@ -74,17 +74,20 @@ def msda_plans(cfg, *, dtype="float32", train: bool = False, mesh=None,
     cross-MSDA.  Call before the first step to front-load backend
     resolution + block planning (and autotuning, if configured); print
     ``plan.describe()`` for the per-level block_q / slab-dtype / VMEM
-    report.  ``dtype_policy`` overrides ``cfg.msda.dtype_policy``.
+    report.  ``dtype_policy`` overrides ``cfg.msda.dtype_policy`` and
+    ``tune`` overrides ``cfg.msda.tune`` (the offline sweep CLI forces
+    "autotune" when pre-populating the fleet winner cache).
     """
     mc = cfg.msda
     sp = sum(h * w for h, w in mc.levels)
     D = cfg.d_model // mc.num_heads
     enc = msda_mod.attention_plan(
         mc, num_queries=sp, head_dim=D, dtype=dtype, train=train,
-        mesh=mesh, query_parallel=mc.query_parallel, dtype_policy=dtype_policy)
+        mesh=mesh, query_parallel=mc.query_parallel, dtype_policy=dtype_policy,
+        tune=tune)
     dec = msda_mod.attention_plan(
         mc, num_queries=300, head_dim=D, dtype=dtype, train=train, mesh=mesh,
-        dtype_policy=dtype_policy)
+        dtype_policy=dtype_policy, tune=tune)
     return {"encoder": enc, "decoder": dec}
 
 

@@ -81,16 +81,19 @@ def attention_plan(
     mesh=None,
     query_parallel: bool = False,
     dtype_policy: Optional[str] = None,
+    tune: Optional[str] = None,
 ) -> plan_mod.MsdaPlan:
     """The module's :class:`MsdaPlan` for one static geometry (cached).
 
     All hardware-aware decisions (backend, per-level block_q, slab
     dtypes, MXU one-hot routing, shard_map wiring) are committed here,
     once; forwards just execute.  ``msda_cfg.tune`` selects heuristic vs
-    autotuned block planning, ``msda_cfg.vmem_budget`` overrides the
-    per-device VMEM default (0 = auto), and ``msda_cfg.dtype_policy``
-    (overridable per call) picks the mixed-precision plan variant —
-    'follow' | 'float32' | 'bfloat16' | 'auto' (see
+    autotuned block planning (``tune`` overrides it per call — the
+    offline sweep CLI forces "autotune" on configs that default to the
+    heuristic), ``msda_cfg.vmem_budget`` overrides the per-device VMEM
+    default (0 = auto), and ``msda_cfg.dtype_policy`` (overridable per
+    call) picks the mixed-precision plan variant — 'follow' | 'float32'
+    | 'bfloat16' | 'auto' (see
     :func:`repro.kernels.plan.resolve_dtype_policy`).
     """
     policy = dtype_policy or getattr(msda_cfg, "dtype_policy", "follow")
@@ -110,7 +113,7 @@ def attention_plan(
     return plan_mod.msda_plan(
         spec,
         backend=backend or msda_cfg.backend,
-        tune=getattr(msda_cfg, "tune", "heuristic"),
+        tune=tune or getattr(msda_cfg, "tune", "heuristic"),
         mesh=mesh,
         query_parallel=query_parallel,
     )
@@ -126,6 +129,7 @@ def msda_attention(
     train: bool = False,
     backend: Optional[str] = None,
     query_parallel: bool = False,
+    valid_ratios: Optional[jax.Array] = None,  # (B, L, 2) x,y fractions
 ) -> jax.Array:
     levels = msda_cfg.levels
     L, H, Pn = len(levels), msda_cfg.num_heads, msda_cfg.num_points
@@ -136,7 +140,17 @@ def msda_attention(
     off = query @ p["w_offsets"].astype(query.dtype) + p["b_offsets"].astype(query.dtype)
     off = off.reshape(B, Q, H, L, Pn, 2).astype(jnp.float32)
     wh = jnp.asarray([[w, h] for (h, w) in levels], jnp.float32)  # (L,2) x,y order
-    loc = reference_points[:, :, None, None, None, :] + off / wh[None, None, None, :, None, :]
+    refs = reference_points[:, :, None, None, None, :]
+    if valid_ratios is not None:
+        # bucketed serving (Deformable-DETR valid_ratios): the pyramid
+        # only occupies the top-left (w*rx, h*ry) region of each padded
+        # level.  Scaling the REFERENCE POINTS by the ratio (offsets stay
+        # normalised by the padded extents wh) lands every sample on the
+        # same pixel coordinate as in the unpadded level:
+        # (x*r)*W - 0.5 == x*w - 0.5, and pad-region corners gather the
+        # zeros that out-of-range corners contributed anyway.
+        refs = refs * valid_ratios[:, None, None, :, None, :].astype(jnp.float32)
+    loc = refs + off / wh[None, None, None, :, None, :]
 
     aw = query @ p["w_weights"].astype(query.dtype) + p["b_weights"].astype(query.dtype)
     aw = jax.nn.softmax(aw.reshape(B, Q, H, L * Pn).astype(jnp.float32), axis=-1)

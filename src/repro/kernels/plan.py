@@ -177,6 +177,26 @@ class MsdaSpec:
         return "|".join(str(x) for x in f)
 
 
+def spec_to_json(spec: MsdaSpec) -> Dict[str, Any]:
+    """JSON-serialisable dict for ``spec`` (plan store / sweep tooling)."""
+    d = dataclasses.asdict(spec)
+    d["spatial_shapes"] = [[int(h), int(w)] for h, w in spec.spatial_shapes]
+    return d
+
+
+def spec_from_json(d: Dict[str, Any]) -> MsdaSpec:
+    """Inverse of :func:`spec_to_json`.  Unknown keys raise — the plan
+    store is versioned, so a field this build doesn't know means the
+    entry was written by a newer schema and must not be half-loaded."""
+    d = dict(d)
+    known = {f.name for f in dataclasses.fields(MsdaSpec)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(f"unknown MsdaSpec fields {unknown}")
+    d["spatial_shapes"] = tuple((int(h), int(w)) for h, w in d["spatial_shapes"])
+    return MsdaSpec(**d)
+
+
 # dtype-policy knob (configs' ``msda.dtype_policy``) -> spec fields.
 # 'follow' keeps the operand dtype; 'bfloat16' commits bf16 slabs with
 # fp32 accumulation; 'auto' defers the per-level choice to autotune.
@@ -341,6 +361,21 @@ def _onehot_levels(spec: MsdaSpec) -> Tuple[bool, ...]:
     return ops.plan_onehot(spec.spatial_shapes)
 
 
+# process-wide autotune activity counters.  "raced" counts specs whose
+# candidates were actually TIMED this process; a serving boot restored
+# from a plan store must keep it at zero (the CI smoke job asserts it).
+_AUTOTUNE_STATS = {"raced": 0, "cache_hits": 0, "seeded": 0}
+
+
+def autotune_stats() -> Dict[str, int]:
+    return dict(_AUTOTUNE_STATS)
+
+
+def reset_autotune_stats() -> None:
+    for k in _AUTOTUNE_STATS:
+        _AUTOTUNE_STATS[k] = 0
+
+
 def autotune_cache_path() -> str:
     """On-disk winner cache (override via REPRO_MSDA_AUTOTUNE_CACHE)."""
     env = os.environ.get("REPRO_MSDA_AUTOTUNE_CACHE")
@@ -451,6 +486,58 @@ def _parse_cache_entry(hit, spec: MsdaSpec):
     return None
 
 
+def autotune_winner_key(spec: MsdaSpec, backend: str,
+                        device_kind: Optional[str] = None) -> str:
+    """The on-disk winner-cache key for (device kind, backend, spec)."""
+    if device_kind is None:
+        device_kind = jax.devices()[0].device_kind
+    return f"{device_kind}|{registry.resolve_backend(backend)}|{spec.cache_token()}"
+
+
+def get_autotune_winner(spec: MsdaSpec, backend: str,
+                        device_kind: Optional[str] = None) -> Optional[Dict[str, Any]]:
+    """Read (and normalise) the persisted winner for a spec, or None."""
+    hit = _load_autotune_cache().get(autotune_winner_key(spec, backend, device_kind))
+    parsed = _parse_cache_entry(hit, spec)
+    if parsed is None:
+        return None
+    return {"block_q": [int(b) for b in parsed[0]], "slab_dtypes": list(parsed[1])}
+
+
+def seed_autotune_winners(entries, device_kind: Optional[str] = None) -> int:
+    """Install winners into the on-disk cache WITHOUT racing (batch).
+
+    ``entries``: iterable of ``(spec, backend, winner)``.  The restore
+    path of the serving plan store and the offline sweep CLI use this to
+    pre-populate the cache a fleet (or a restarted server) reads, so
+    ``tune="autotune"`` resolves to ``autotune-cache`` with zero timing
+    runs.  One cache read + one atomic write for the whole batch.  Each
+    winner is validated with the same parser the cache reader uses;
+    malformed winners are skipped (returns the number actually written)
+    rather than written where they would poison future boots.
+    """
+    disk = _load_autotune_cache()
+    n = 0
+    for spec, backend, winner in entries:
+        parsed = _parse_cache_entry(winner, spec)
+        if parsed is None:
+            continue
+        disk[autotune_winner_key(spec, backend, device_kind)] = {
+            "block_q": [int(b) for b in parsed[0]],
+            "slab_dtypes": list(parsed[1])}
+        n += 1
+    if n:
+        _store_autotune_cache(disk)
+        _AUTOTUNE_STATS["seeded"] += n
+    return n
+
+
+def seed_autotune_winner(spec: MsdaSpec, backend: str, winner: Any,
+                         device_kind: Optional[str] = None) -> bool:
+    """Single-entry convenience over :func:`seed_autotune_winners`."""
+    return seed_autotune_winners([(spec, backend, winner)], device_kind) == 1
+
+
 def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
 ) -> Tuple[Tuple[int, ...], Tuple[str, ...], str]:
@@ -481,6 +568,7 @@ def _autotune_plan(
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
     if parsed is not None:
+        _AUTOTUNE_STATS["cache_hits"] += 1
         return parsed[0], parsed[1], "autotune-cache"
 
     qcap = _round_up(spec.num_queries, _SUBLANE)
@@ -499,6 +587,7 @@ def _autotune_plan(
     if len(candidates) == 1 and not race_dtypes:
         return candidates[0], base_dts, "autotune"
 
+    _AUTOTUNE_STATS["raced"] += 1
     args = _autotune_inputs(spec)
     jit_cache: Dict[tuple, Callable] = {}
 

@@ -2,10 +2,25 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --prompts "hello world" "the quick brown fox"
+
+Serving-runtime extras:
+
+    # persistent warm boot: plan store + XLA compilation cache; AOT
+    # warm-up for the prompt lengths the fleet expects
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --store /tmp/plans.json --compile-cache /tmp/xla-cache --warm-lengths 4 8
+
+    # CI smoke: boot the (vlm) engine against one store path; run twice
+    # with the same paths and the SECOND boot must perform zero autotune
+    # timing runs, zero request-time retraces and zero new XLA cache
+    # entries — the process exits non-zero otherwise.
+    PYTHONPATH=src python -m repro.launch.serve --serving-smoke \
+        --store /tmp/store/plans.json --compile-cache /tmp/store/xla-cache
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -16,32 +31,157 @@ from repro.serving.engine import Request, ServeEngine
 from repro.train import state as train_state
 
 
+def serving_smoke(arch: str, store_path: str, compile_cache_dir: str,
+                  *, slots: int = 2, capacity: int = 64) -> dict:
+    """One serving boot against a persistent store; self-asserting.
+
+    Cold boot (no store yet): warms + autotunes the bucket plans, saves
+    the store, AOT-compiles the executors (all persisted to the XLA
+    compilation cache), serves a few pyramid requests.  Warm boot (store
+    exists): restores the plan set — the assertions then REQUIRE zero
+    autotune timing runs, zero describe drift, zero request-time
+    retraces, and zero new XLA cache entries (every boot compile was a
+    disk hit).  The CI serving-smoke job runs this twice.
+    """
+    from repro.kernels import plan as plan_mod
+    from repro.serving import aot, persistence
+
+    # enable the compilation cache BEFORE any compile (params init
+    # included) so both boots persist/hit the same entry set
+    cache_on = persistence.enable_jax_compilation_cache(compile_cache_dir)
+    assert cache_on, "persistent compilation cache failed to enable"
+    warm = persistence.PlanStore(store_path).exists()
+    cache0 = persistence.compilation_cache_entries(compile_cache_dir)
+    plan_mod.reset_autotune_stats()
+    aot.reset_stats()
+
+    cfg = reduced(get_config(arch))
+    params = train_state.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity,
+                      store_path=store_path, compile_cache_dir=compile_cache_dir,
+                      dtype_policy="auto", tune="autotune")
+    eng.warmup(prompt_lengths=(4,))
+    boot_tune = plan_mod.autotune_stats()
+
+    vc = cfg.vision
+    half = tuple((max(1, h // 2), max(1, w // 2)) for h, w in vc.levels)
+    odd = tuple((max(1, h - 2), max(1, w - 3)) for h, w in vc.levels)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i, lv in enumerate((vc.levels, odd, half, half)):
+        S = sum(h * w for h, w in lv)
+        reqs.append(Request(
+            rid=i, prompt=np.arange(4, dtype=np.int32) + i, max_new=4,
+            pyramid=rng.standard_normal((S, vc.vision_dim)).astype(np.float32),
+            levels=lv))
+    with aot.probe() as probe:
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+
+    rr = eng.restore_report
+    summary = {
+        "arch": cfg.name,
+        "warm_boot": warm,
+        "plans": len(eng.plans),
+        "restored_plans": len(rr.plans) if rr else 0,
+        "seeded_winners": rr.seeded_winners if rr else 0,
+        "describe_mismatches": rr.describe_mismatches if rr else [],
+        "boot_autotune": boot_tune,
+        "request_traces": probe.traces,
+        "request_compiles": probe.compiles,
+        "new_xla_cache_entries":
+            persistence.compilation_cache_entries(compile_cache_dir) - cache0,
+        "completed": [len(r.out) for r in reqs],
+        "metrics": eng.metrics.snapshot(),
+    }
+    print(json.dumps(summary, indent=1))
+    assert all(len(r.out) == r.max_new for r in reqs), "requests incomplete"
+    assert probe.traces == 0 and probe.compiles == 0, (
+        f"request-time retraces: {probe}")
+    if warm:
+        assert boot_tune["raced"] == 0, (
+            f"warm boot ran autotune timing: {boot_tune}")
+        assert summary["restored_plans"] > 0, "warm boot restored no plans"
+        assert not summary["describe_mismatches"], summary["describe_mismatches"]
+        assert summary["new_xla_cache_entries"] == 0, (
+            f"warm boot recompiled {summary['new_xla_cache_entries']} executables")
+    else:
+        # the no-recompilation assertion above is only meaningful if the
+        # cold boot actually persisted executables — a silently-disabled
+        # cache would make the warm-boot check pass vacuously
+        assert summary["new_xla_cache_entries"] > 0, (
+            "cold boot persisted no executables: compilation cache inert")
+    eng.shutdown()
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompts", nargs="+", default=["hello world"])
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="default: 4 (2 for --serving-smoke)")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="default: 128 (64 for --serving-smoke)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--store", default=None,
+                    help="plan-store path: warm boots restore every plan "
+                         "with zero autotune races")
+    ap.add_argument("--compile-cache", default=None,
+                    help="JAX persistent compilation cache directory")
+    ap.add_argument("--dtype-policy", default=None,
+                    choices=("follow", "float32", "bfloat16", "auto"))
+    ap.add_argument("--tune", default=None, choices=("heuristic", "autotune"))
+    ap.add_argument("--warm-lengths", type=int, nargs="*", default=None,
+                    help="prompt lengths to AOT-compile prefill for at boot")
+    ap.add_argument("--serving-smoke", action="store_true",
+                    help="self-asserting double-boot CI smoke (see docstring)")
     args = ap.parse_args()
 
+    if args.serving_smoke:
+        if not (args.store and args.compile_cache):
+            ap.error("--serving-smoke needs --store and --compile-cache")
+        serving_smoke(args.arch or "phi-3-vision-4.2b", args.store,
+                      args.compile_cache,
+                      slots=args.slots or 2, capacity=args.capacity or 64)
+        return
+
+    if not args.arch:
+        ap.error("--arch is required")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
     params = train_state.init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, capacity=args.capacity,
-                      temperature=args.temperature)
+    eng = ServeEngine(cfg, params, slots=args.slots or 4,
+                      capacity=args.capacity or 128,
+                      temperature=args.temperature, store_path=args.store,
+                      compile_cache_dir=args.compile_cache,
+                      dtype_policy=args.dtype_policy, tune=args.tune)
+    rng = np.random.default_rng(0)
     reqs = []
     for i, p in enumerate(args.prompts):
         ids = np.asarray(tokenizer.encode(p), np.int32) % cfg.vocab_size
         req = Request(rid=i, prompt=ids, max_new=args.max_new)
+        if cfg.family == "vlm":
+            # driver demo: synthetic pyramid at the config geometry (a
+            # real frontend would pass per-image levels + features)
+            vc = cfg.vision
+            S = sum(h * w for h, w in vc.levels)
+            req.pyramid = rng.standard_normal((S, vc.vision_dim)).astype(np.float32)
         reqs.append(req)
+    warm = args.warm_lengths
+    if warm is None:
+        warm = sorted({len(r.prompt) for r in reqs})
+    eng.warmup(prompt_lengths=tuple(warm))
+    for req in reqs:
         eng.submit(req)
     eng.run()
     for req in reqs:
         print(f"[serve] request {req.rid}: {len(req.out)} tokens -> {req.out}")
+    print(eng.metrics.format())
 
 
 if __name__ == "__main__":

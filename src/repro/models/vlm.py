@@ -22,11 +22,18 @@ def pyramid_len(vision) -> int:
     return sum(h * w for h, w in vision.levels)
 
 
-def _msda_cfg(vision):
+def _msda_cfg(vision, levels=None, dtype_policy=None, tune=None):
+    """Resampler MSDA config; ``levels`` overrides the config pyramid
+    (the serving batcher runs the resampler at BUCKET geometry) and
+    ``dtype_policy``/``tune`` pin the precision/tuning plan axes so
+    serving executes exactly the specs its warm-up planned (the plan
+    cache keys on them — a mismatch would silently re-plan per request)."""
     from repro.configs.base import MSDAConfig
 
     return MSDAConfig(
-        levels=vision.levels, num_points=vision.msda_points, num_heads=vision.msda_heads
+        levels=levels or vision.levels, num_points=vision.msda_points,
+        num_heads=vision.msda_heads, dtype_policy=dtype_policy or "follow",
+        tune=tune or "heuristic",
     )
 
 
@@ -42,8 +49,16 @@ def init_vlm(key, cfg) -> dict:
     }
 
 
-def visual_tokens(params, cfg, pyramid: jax.Array, *, train: bool = False) -> jax.Array:
-    """pyramid: (B, S_v, vision_dim) -> (B, Nv, d_model)."""
+def visual_tokens(params, cfg, pyramid: jax.Array, *, train: bool = False,
+                  levels=None, valid_ratios=None, dtype_policy=None,
+                  tune=None) -> jax.Array:
+    """pyramid: (B, S_v, vision_dim) -> (B, Nv, d_model).
+
+    ``levels``/``valid_ratios`` serve the bucketed batcher: the pyramid
+    arrives padded to a bucket's geometry and each request's valid
+    fractions rescale the reference points so sampling is equivalent to
+    the unpadded pyramid (see ``serving.batcher``).
+    """
     vc = cfg.vision
     B = pyramid.shape[0]
     q = jnp.broadcast_to(
@@ -53,7 +68,8 @@ def visual_tokens(params, cfg, pyramid: jax.Array, *, train: bool = False) -> ja
     refs = jax.nn.sigmoid(layers.apply_linear(params["vis_ref"], params["vis_queries"]))
     refs = jnp.broadcast_to(refs[None].astype(jnp.float32), (B, vc.num_visual_tokens, 2))
     vt = msda_mod.msda_attention(
-        params["resampler"], _msda_cfg(vc), q, pyramid, refs, train=train
+        params["resampler"], _msda_cfg(vc, levels, dtype_policy, tune), q,
+        pyramid, refs, train=train, valid_ratios=valid_ratios,
     )
     return layers.apply_linear(params["projector"], vt)
 
@@ -73,11 +89,14 @@ def vlm_loss(params, cfg, pyramid, tokens, targets, *, remat: bool = True) -> ja
     return layers.chunked_ce_loss(hidden_text, w, targets) + 0.01 * aux
 
 
-def vlm_prefill(params, cfg, pyramid, tokens, capacity: int):
+def vlm_prefill(params, cfg, pyramid, tokens, capacity: int, *,
+                levels=None, valid_ratios=None, dtype_policy=None, tune=None):
     """Image + prompt prefill. Cache capacity covers Nv + text budget."""
     dt = jnp.dtype(cfg.dtype)
     B, S = tokens.shape
-    vt = visual_tokens(params, cfg, pyramid.astype(dt))
+    vt = visual_tokens(params, cfg, pyramid.astype(dt),
+                       levels=levels, valid_ratios=valid_ratios,
+                       dtype_policy=dtype_policy, tune=tune)
     te = layers.embed(params["backbone"], tokens, dt)
     x = jnp.concatenate([vt.astype(dt), te], axis=1)
     cache = lm.init_cache(cfg, B, capacity, dt)

@@ -1,0 +1,175 @@
+"""AOT compilation for serving: trace + compile at boot, never at request time.
+
+``jax.jit`` defers tracing and XLA compilation to the first call with a
+new input signature, so a server that builds its :class:`MsdaPlan`\\ s at
+boot still pays the first *request* the trace and the compile.  This
+module moves both to boot via the AOT path —
+``jax.jit(fn).lower(shapes).compile()`` returns an executable bound to
+exact input shapes/dtypes; calling it never re-traces (a shape mismatch
+raises instead of silently recompiling a new variant).
+
+The module also carries the process-wide **compile-count probe**: every
+function routed through :func:`traced` bumps a trace counter each time
+its Python body actually runs under a JAX trace, and :func:`aot_compile`
+bumps a compile counter.  Tests and the CI serving-smoke job snapshot
+the counters after warm-up and assert ZERO retraces at request time::
+
+    engine.warmup(prompt_lengths=(8,))
+    with aot.probe() as p:
+        engine.run()
+    assert p.traces == 0 and p.compiles == 0
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Iterator, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# compile-count probe
+# --------------------------------------------------------------------------
+
+_STATS = {"traces": 0, "compiles": 0, "aot_calls": 0}
+
+
+def stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+class Probe:
+    """Delta view over the trace/compile counters since construction."""
+
+    def __init__(self):
+        self._base = dict(_STATS)
+
+    @property
+    def traces(self) -> int:
+        return _STATS["traces"] - self._base["traces"]
+
+    @property
+    def compiles(self) -> int:
+        return _STATS["compiles"] - self._base["compiles"]
+
+    @property
+    def aot_calls(self) -> int:
+        return _STATS["aot_calls"] - self._base["aot_calls"]
+
+    def __repr__(self):
+        return (f"Probe(traces={self.traces}, compiles={self.compiles}, "
+                f"aot_calls={self.aot_calls})")
+
+
+@contextlib.contextmanager
+def probe() -> Iterator[Probe]:
+    """``with aot.probe() as p: ...; assert p.traces == 0``."""
+    yield Probe()
+
+
+def traced(fn: Callable, name: str = "") -> Callable:
+    """Wrap ``fn`` so every (re)trace bumps the probe's trace counter.
+
+    The wrapper's body only executes while JAX is tracing (jit replays
+    compiled programs without re-entering Python), so the counter is an
+    exact retrace count.  Wrap the function BEFORE handing it to
+    ``jax.jit`` — the engine routes its jit fallbacks through this, so a
+    request that misses the AOT warm-up set shows up in the probe.
+    """
+
+    def wrapper(*args, **kwargs):
+        _STATS["traces"] += 1
+        return fn(*args, **kwargs)
+
+    wrapper.__name__ = name or getattr(fn, "__name__", "fn")
+    return wrapper
+
+
+# --------------------------------------------------------------------------
+# AOT executors
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AotExecutor:
+    """A compiled executable bound to one input signature.
+
+    Calling it never traces or compiles; argument shapes/dtypes that
+    don't match the signature raise (jax's ``Compiled`` contract) — the
+    serving engine treats that as "fall back to jit + count the retrace".
+    """
+
+    name: str
+    in_avals: Tuple[Any, ...]
+    _compiled: Any = dataclasses.field(repr=False)
+
+    def __call__(self, *args):
+        _STATS["aot_calls"] += 1
+        return self._compiled(*args)
+
+
+def aot_compile(fn: Callable, *args, name: str = "") -> AotExecutor:
+    """Trace + XLA-compile ``fn`` for the given example args, now.
+
+    ``args`` may be concrete arrays, pytrees of arrays, or
+    ``jax.ShapeDtypeStruct``\\ s — ``lower`` only needs shapes/dtypes and
+    never executes the computation.  The one trace this performs is a
+    *boot-time* trace; probes are snapshotted after warm-up.
+    """
+    name = name or getattr(fn, "__name__", "fn")
+    lowered = jax.jit(traced(fn, name)).lower(*args)
+    compiled = lowered.compile()
+    _STATS["compiles"] += 1
+    avals = tuple(jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+                               if hasattr(x, "dtype") else x, a) for a in args)
+    return AotExecutor(name=name, in_avals=avals, _compiled=compiled)
+
+
+# --------------------------------------------------------------------------
+# MsdaPlan executors
+# --------------------------------------------------------------------------
+
+
+def plan_arg_structs(spec, batch_size: int = 1) -> Tuple[Any, Any, Any]:
+    """ShapeDtypeStructs for one plan call at ``batch_size``.
+
+    Locations stay fp32 regardless of the operand dtype — that is what
+    every call site passes (reference points + offsets are computed in
+    fp32; see ``core.msda.msda_attention``).
+    """
+    S, H, D = spec.total_pixels, spec.num_heads, spec.head_dim
+    Q, L, P = spec.num_queries, spec.num_levels, spec.num_points
+    return (
+        jax.ShapeDtypeStruct((batch_size, S, H, D), spec.dtype),
+        jax.ShapeDtypeStruct((batch_size, Q, H, L, P, 2), jnp.float32),
+        jax.ShapeDtypeStruct((batch_size, Q, H, L, P), spec.dtype),
+    )
+
+
+def compile_plan_executor(plan, batch_size: int = 1) -> AotExecutor:
+    """AOT-compile one warmed plan's executor for a fixed batch size."""
+    label = (f"msda[{plan.backend}|Q={plan.spec.num_queries}"
+             f"|L={plan.spec.num_levels}|B={batch_size}]")
+    return aot_compile(plan.__call__, *plan_arg_structs(plan.spec, batch_size),
+                       name=label)
+
+
+def compile_plan_executors(
+    plans: Sequence, batch_sizes: Sequence[int] = (1,)
+) -> Dict[Tuple[str, int], AotExecutor]:
+    """AOT-compile every warmed plan at every batch size.
+
+    Keyed by ``(spec.cache_token(), batch_size)`` so the serving engine
+    can look an executor up from the spec it is about to run.
+    """
+    out = {}
+    for plan in plans:
+        for b in batch_sizes:
+            out[(plan.spec.cache_token(), int(b))] = compile_plan_executor(plan, b)
+    return out

@@ -1,0 +1,211 @@
+"""Shape-bucketed continuous batching for pyramid (DETR/VLM) requests.
+
+The plan cache — and every compiled prefill program — is keyed by the
+pyramid's static level geometry.  A serving front end that traces one
+program per incoming image size churns both caches without bound.  This
+module pads variable image pyramids into a SMALL FIXED SET of bucket
+geometries, so the bounded plan cache holds one plan per bucket forever
+and every request reuses a boot-compiled executable.
+
+Correctness of the padding (the Deformable-DETR ``valid_ratios`` idiom):
+a level ``(h, w)`` is placed top-left into the bucket grid ``(H, W)``
+and the *reference points* are scaled by ``(w/W, h/H)``.  With the
+MMCV/grid_sample convention ``px = x * W - 0.5`` the scaled coordinate
+lands on exactly the same pixel as in the unpadded level —
+``(x * w/W) * W - 0.5 == x * w - 0.5`` — and out-of-range corners that
+contributed zero via ``padding_mode='zeros'`` now gather literal zeros
+from the pad region: same value.  ``tests/test_serving_runtime.py``
+checks bucketed outputs against the unbatched reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PyramidBucket:
+    """One fixed pyramid geometry requests are padded into."""
+
+    levels: Shapes
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "levels", tuple((int(h), int(w)) for h, w in self.levels))
+
+    @property
+    def tokens(self) -> int:
+        return sum(h * w for h, w in self.levels)
+
+    def fits(self, levels: Shapes) -> bool:
+        return len(levels) == len(self.levels) and all(
+            h <= H and w <= W for (h, w), (H, W) in zip(levels, self.levels))
+
+    @property
+    def key(self) -> str:
+        return "/".join(f"{h}x{w}" for h, w in self.levels)
+
+
+def default_buckets(max_levels: Shapes,
+                    scales: Sequence[float] = (1.0, 0.75, 0.5),
+                    multiple: int = 2) -> Tuple[PyramidBucket, ...]:
+    """A geometric ladder of buckets under the config's maximum pyramid.
+
+    Each scale shrinks every level dimension (rounded up to
+    ``multiple``), so small images don't pay full-pyramid padding waste.
+    Returned ascending by token count — :func:`bucket_for` picks the
+    smallest fit.
+    """
+    buckets = set()
+    for s in scales:
+        levels = tuple(
+            (max(multiple, math.ceil(h * s / multiple) * multiple),
+             max(multiple, math.ceil(w * s / multiple) * multiple))
+            for h, w in max_levels)
+        buckets.add(PyramidBucket(levels))
+    return tuple(sorted(buckets, key=lambda b: b.tokens))
+
+
+def bucket_for(levels: Shapes,
+               buckets: Sequence[PyramidBucket]) -> Optional[PyramidBucket]:
+    """Smallest bucket the pyramid fits in, or None (caller rejects)."""
+    for b in sorted(buckets, key=lambda b: b.tokens):
+        if b.fits(levels):
+            return b
+    return None
+
+
+def pad_pyramid(feats: np.ndarray, levels: Shapes, bucket_levels: Shapes) -> np.ndarray:
+    """Pad flattened per-level features ``(S, d)`` into the bucket grid.
+
+    Each level block is reshaped to its 2D grid, placed top-left in the
+    bucket's grid, zero-padded right/bottom, and re-flattened row-major
+    — so pixel ``(y, x)`` keeps its integer coordinates, which is what
+    makes the valid-ratio coordinate scaling exact (module docstring).
+    """
+    feats = np.asarray(feats)
+    total = sum(h * w for h, w in levels)
+    if feats.shape[0] != total:
+        raise ValueError(f"pyramid has {feats.shape[0]} rows, levels imply {total}")
+    d = feats.shape[-1]
+    parts, off = [], 0
+    for (h, w), (H, W) in zip(levels, bucket_levels):
+        grid = np.zeros((H, W, d), feats.dtype)
+        grid[:h, :w] = feats[off:off + h * w].reshape(h, w, d)
+        parts.append(grid.reshape(H * W, d))
+        off += h * w
+    return np.concatenate(parts, axis=0)
+
+
+def valid_ratios(levels: Shapes, bucket_levels: Shapes) -> np.ndarray:
+    """Per-level ``(x, y)`` valid fractions ``(w/W, h/H)``: shape (L, 2).
+
+    Axis order matches the sampling-location convention (last axis is
+    ``(x, y)``).
+    """
+    return np.asarray(
+        [(w / W, h / H) for (h, w), (H, W) in zip(levels, bucket_levels)],
+        np.float32)
+
+
+def scale_locations(loc, ratios):
+    """Map unpadded sampling locations onto the bucket grid.
+
+    ``loc``: (..., L, P, 2) normalised to the ORIGINAL levels; ``ratios``
+    from :func:`valid_ratios`.  Raw locations scale directly (the
+    refs-vs-offsets split only matters inside the model, where offsets
+    are normalised by the padded extents — see ``core.msda``).
+    """
+    return loc * ratios[..., :, None, :]
+
+
+# --------------------------------------------------------------------------
+# the batching front end
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PyramidBatch:
+    """One admitted batch: padded operands + the requests they carry."""
+
+    bucket: PyramidBucket
+    feats: np.ndarray  # (B, S_bucket, d)
+    ratios: np.ndarray  # (B, L, 2) float32
+    items: List[Any]  # caller payloads, batch order
+    real_tokens: int
+    padded_tokens: int
+
+    @property
+    def padding_frac(self) -> float:
+        return 1.0 - self.real_tokens / max(self.padded_tokens, 1)
+
+
+@dataclasses.dataclass
+class _Pending:
+    feats: np.ndarray
+    levels: Shapes
+    bucket: PyramidBucket
+    group_key: Any
+    payload: Any
+
+
+class PyramidBatcher:
+    """FIFO queue that drains same-bucket runs of pyramid requests.
+
+    ``group_key`` is an extra batching constraint supplied by the caller
+    (the serving engine uses the prompt length — prefill programs are
+    compiled per (bucket, prompt length, batch size)).  Head-of-line
+    order is preserved: ``next_batch`` always includes the OLDEST
+    pending request and only batches younger requests that share its
+    (bucket, group_key), so no bucket can starve another.
+    """
+
+    def __init__(self, buckets: Sequence[PyramidBucket]):
+        if not buckets:
+            raise ValueError("need at least one bucket")
+        self.buckets = tuple(sorted(buckets, key=lambda b: b.tokens))
+        self._queue: Deque[_Pending] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, feats: np.ndarray, levels: Shapes, payload: Any,
+               group_key: Any = None) -> PyramidBucket:
+        levels = tuple((int(h), int(w)) for h, w in levels)
+        bucket = bucket_for(levels, self.buckets)
+        if bucket is None:
+            raise ValueError(
+                f"pyramid {levels} fits no bucket "
+                f"(largest: {self.buckets[-1].levels})")
+        self._queue.append(_Pending(np.asarray(feats), levels, bucket,
+                                    group_key, payload))
+        return bucket
+
+    def next_batch(self, max_batch: int) -> Optional[PyramidBatch]:
+        """Drain up to ``max_batch`` requests batchable with the head."""
+        if not self._queue or max_batch <= 0:
+            return None
+        head = self._queue[0]
+        take: List[_Pending] = []
+        keep: List[_Pending] = []
+        for p in self._queue:
+            if (len(take) < max_batch and p.bucket is head.bucket
+                    and p.group_key == head.group_key):
+                take.append(p)
+            else:
+                keep.append(p)
+        self._queue = deque(keep)
+        bl = head.bucket.levels
+        feats = np.stack([pad_pyramid(p.feats, p.levels, bl) for p in take])
+        ratios = np.stack([valid_ratios(p.levels, bl) for p in take])
+        real = sum(p.feats.shape[0] for p in take)
+        return PyramidBatch(
+            bucket=head.bucket, feats=feats, ratios=ratios,
+            items=[p.payload for p in take], real_tokens=real,
+            padded_tokens=len(take) * head.bucket.tokens)

@@ -11,19 +11,59 @@ slots, each slot independently in {empty, prefilling, decoding}; new
 requests are admitted into free slots between decode steps (continuous
 batching).  Slot state is host-side; the device-side cache is a single
 batched pytree so every decode step is one fused program.
+
+The engine composes the serving-runtime subsystem:
+
+* ``serving.aot``         — ``warmup()`` AOT-compiles the decode step,
+  the prefill programs and every warmed ``MsdaPlan`` executor at boot;
+  the compile-count probe then asserts zero retraces at request time.
+* ``serving.persistence`` — ``store_path=`` restores the full plan set
+  (specs + autotune winners) from a previous process with zero autotune
+  races, and ``compile_cache_dir=`` wires JAX's persistent compilation
+  cache so the boot compiles themselves are disk hits.
+* ``serving.batcher``     — vlm requests carry variable image pyramids;
+  a shape-bucketed front end pads them into a fixed bucket ladder so
+  the bounded plan cache never churns and prefill programs are reused.
+* ``serving.metrics``     — per-bucket admission/padding/latency/retire
+  counters, surfaced by ``launch/serve.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import aot
+from repro.serving import batcher as batcher_mod
+from repro.serving import persistence
+from repro.serving.metrics import ServeMetrics
 
-def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
-    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+_LM_FAMILIES = ("dense", "moe", "hybrid", "ssm")
+
+
+def make_serve_fns(cfg, *, dtype_policy: Optional[str] = None,
+                   tune: Optional[str] = None,
+                   warm_plans: bool = True) -> Tuple[Callable, Callable]:
+    """The pure (prefill, decode) pair for a family.
+
+    This is the ONE place the per-family serving closures are defined —
+    the engine builds its jitted/AOT variants from the same pair, so a
+    plan axis added here (dtype_policy, tune, the vlm bucketing
+    ``levels``/``valid_ratios`` kwargs) reaches every consumer at once.
+
+    ``dtype_policy``/``tune`` thread the MSDA plan axes into BOTH the
+    plan warm-up and the vlm prefill itself, so the plans warmed at
+    build time are byte-for-byte the specs the first prefill trace asks
+    for (an override that only reached the warm-up would re-plan — and
+    possibly re-race — at request time).  ``warm_plans=False`` skips the
+    warm-up for callers that warm their own plan set (the engine warms
+    its bucket ladder instead of the single config geometry).
+    """
+    if cfg.family in _LM_FAMILIES:
         from repro.models import lm
 
         def prefill(params, tokens, capacity):
@@ -49,10 +89,14 @@ def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
         # Warm the MSDA resampler plan at engine-build time: backend
         # resolution + block planning (+ autotune, if configured) happen
         # here, once, instead of inside the first prefill's trace.
-        warmup_msda_plans(cfg)
+        if warm_plans:
+            warmup_msda_plans(cfg, dtype_policy=dtype_policy, tune=tune)
 
-        def prefill(params, pyramid, tokens, capacity):
-            return vlm.vlm_prefill(params, cfg, pyramid, tokens, capacity)
+        def prefill(params, pyramid, tokens, capacity, *,
+                    levels=None, valid_ratios=None):
+            return vlm.vlm_prefill(params, cfg, pyramid, tokens, capacity,
+                                   levels=levels, valid_ratios=valid_ratios,
+                                   dtype_policy=dtype_policy, tune=tune)
 
         def decode(params, cache, token):
             return vlm.vlm_decode_step(params, cfg, cache, token)
@@ -61,7 +105,8 @@ def make_serve_fns(cfg) -> Tuple[Callable, Callable]:
     raise ValueError(f"{cfg.family} has no serving path")
 
 
-def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None):
+def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None,
+                      tune: Optional[str] = None, buckets=None):
     """Pre-build every MsdaPlan a serving process will execute.
 
     Returns the plans (empty tuple for pure-LM families) so callers can
@@ -71,6 +116,10 @@ def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None):
     every warmed plan (e.g. force ``"bfloat16"`` slabs fleet-wide, or
     ``"auto"`` so the warm-up absorbs the autotune fp32-vs-bf16 race —
     and its winner-cache disk write — instead of the first request).
+    ``tune`` similarly overrides the config's tune mode (the sweep CLI
+    forces "autotune").  ``buckets`` (vlm): warm one resampler plan per
+    bucket geometry instead of the config's single pyramid — the set the
+    bucketed batcher actually serves.
     """
     plans = []
     if getattr(cfg, "vision", None) is not None:
@@ -78,16 +127,19 @@ def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None):
         from repro.models import vlm
 
         vc = cfg.vision
-        mc = vlm._msda_cfg(vc)
-        plans.append(msda_mod.attention_plan(
-            mc, num_queries=vc.num_visual_tokens,
-            head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype,
-            dtype_policy=dtype_policy))
+        geometries = [vc.levels] if not buckets else [b.levels for b in buckets]
+        for levels in geometries:
+            mc = vlm._msda_cfg(vc, levels, dtype_policy=dtype_policy)
+            plans.append(msda_mod.attention_plan(
+                mc, num_queries=vc.num_visual_tokens,
+                head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype,
+                dtype_policy=dtype_policy, tune=tune))
     if getattr(cfg, "msda", None) is not None:
         from repro.core import deformable_transformer as dt
 
         plans.extend(
-            dt.msda_plans(cfg, dtype=cfg.dtype, dtype_policy=dtype_policy).values())
+            dt.msda_plans(cfg, dtype=cfg.dtype, dtype_policy=dtype_policy,
+                          tune=tune).values())
     return tuple(plans)
 
 
@@ -108,46 +160,304 @@ class Request:
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
+    # vlm: per-request image pyramid, flattened (S_v, vision_dim) fp32,
+    # at its own geometry — the bucketed batcher pads it for admission
+    pyramid: Optional[np.ndarray] = None
+    levels: Optional[Tuple[Tuple[int, int], ...]] = None  # None -> config levels
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _pow2_batches(slots: int) -> Tuple[int, ...]:
+    """The fixed set of admitted batch sizes: powers of two, plus the
+    full slot count — bounds the number of compiled prefill variants."""
+    sizes = {slots}
+    b = 1
+    while b <= slots:
+        sizes.add(b)
+        b *= 2
+    return tuple(sorted(sizes))
+
+
+def _diff_axis(a, b) -> int:
+    """First axis where two cache-leaf avals differ (-1: no batch axis)."""
+    if a.shape == b.shape:
+        return -1
+    for ax in range(len(a.shape)):
+        if a.shape[ax] != b.shape[ax]:
+            return ax
+    return -1
+
+
 class ServeEngine:
-    """Continuous-batching engine over a fixed slot pool (LM families)."""
+    """Continuous-batching engine over a fixed slot pool (LM + VLM).
+
+    Boot sequence (everything traffic-latency-critical happens here):
+
+    1. plans   — restored from ``store_path`` when the store exists
+       (zero autotune races; winners seeded from the store), else warmed
+       fresh and persisted for the next boot.
+    2. ``warmup()`` — AOT-compiles decode/prefill/plan executors so the
+       first request triggers no trace and no XLA compile (with
+       ``compile_cache_dir`` even the boot compiles are disk hits on a
+       restart).
+    3. traffic — ``submit()`` + ``run()``/``step()``.  Each tick:
+       retire finished slots, admit queued requests into the freed
+       slots (same tick), one batched decode.
+    """
 
     def __init__(self, cfg, params, *, slots: int = 4, capacity: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 store_path: Optional[str] = None,
+                 compile_cache_dir: Optional[str] = None,
+                 dtype_policy: Optional[str] = None,
+                 tune: Optional[str] = None,
+                 buckets=None, metrics: Optional[ServeMetrics] = None):
         from repro.models import lm
 
+        if cfg.family not in _LM_FAMILIES + ("vlm",):
+            raise ValueError(f"{cfg.family} has no engine path")
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.capacity = capacity
         self.temperature = temperature
         self.rng = np.random.default_rng(seed)
+        self.metrics = metrics or ServeMetrics()
+        self.is_vlm = cfg.family == "vlm"
         self._occupant: List[Optional[Request]] = [None] * slots
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = deque()
+
+        if compile_cache_dir:
+            persistence.enable_jax_compilation_cache(compile_cache_dir)
+
+        # -- pyramid buckets (vlm) ----------------------------------------
+        self.batcher = None
+        self.buckets = ()
+        if self.is_vlm:
+            vc = cfg.vision
+            if buckets is None:
+                buckets = batcher_mod.default_buckets(
+                    vc.levels, getattr(vc, "bucket_scales", (1.0,)))
+            self.buckets = tuple(buckets)
+            self.batcher = batcher_mod.PyramidBatcher(self.buckets)
+
+        # -- plans: restore from the store, or warm fresh + persist -------
+        # The meta gate covers every axis that changes which SPECS the
+        # engine serves (arch, dtype policy, tune mode, bucket ladder):
+        # restoring a store written under different axes would AOT the
+        # wrong plans and re-race the right ones on a nominally warm boot.
+        self._store_meta = {
+            "arch": cfg.name,
+            "dtype_policy": dtype_policy or "follow",
+            "tune": tune or "heuristic",
+            "buckets": [b.key for b in self.buckets],
+        }
+        self.store = persistence.PlanStore(store_path) if store_path else None
+        self.restore_report = None
+        self.store_meta_mismatch = False
+        self.plans = ()
+        existing = self.store.load() if self.store is not None else None
+        if existing is not None:
+            stored_meta = existing.get("meta", {})
+            if all(stored_meta.get(k) == v for k, v in self._store_meta.items()):
+                self.restore_report = self.store.restore()
+                self.plans = tuple(self.restore_report.plans)
+            else:
+                self.store_meta_mismatch = True
+        if not self.plans:
+            self.plans = warmup_msda_plans(
+                cfg, dtype_policy=dtype_policy, tune=tune,
+                buckets=self.buckets or None)
+            # Persist only onto an empty/unreadable path: a loadable store
+            # whose meta doesn't match this boot belongs to a DIFFERENTLY
+            # CONFIGURED fleet (e.g. a sweep artifact) — overwriting it
+            # would silently destroy the plans every correctly-configured
+            # server restores from.  Pure-LM families warm no MSDA plans
+            # and never write a store at all.
+            if self.store is not None and self.plans and existing is None:
+                self.store.save_plans(self.plans, meta=self._store_meta)
+
+        # -- model fns + cache --------------------------------------------
         dt = jnp.dtype(cfg.dtype)
         self.cache = lm.init_cache(cfg, slots, capacity, dt)
-        self._prefill_one = jax.jit(
-            lambda p, t: lm.lm_prefill(p, cfg, t, capacity)
-        )
-        self._decode = jax.jit(lambda p, c, t: lm.lm_decode_step(p, cfg, c, t))
+        # per-leaf batch axis, identified structurally (B=1 vs B=2 avals)
+        # so splicing never guesses which axis is the slot axis
+        s1 = jax.eval_shape(lambda: lm.init_cache(cfg, 1, capacity, dt))
+        s2 = jax.eval_shape(lambda: lm.init_cache(cfg, 2, capacity, dt))
+        self._batch_axes = jax.tree.map(_diff_axis, s1, s2)
+
+        # one source of truth for the family closures (plans were warmed
+        # above, bucket-aware — so skip make_serve_fns' own warm-up)
+        self._serve_prefill, self._decode_model = make_serve_fns(
+            cfg, dtype_policy=dtype_policy, tune=tune, warm_plans=False)
+        if self.is_vlm:
+            self._vlm_prefill_jit: Dict[tuple, Callable] = {}
+        else:
+            self._prefill_model = lambda p, t: self._serve_prefill(p, t, capacity)
+            self._prefill_jit = jax.jit(aot.traced(self._prefill_model, "prefill"))
+        self._decode_jit = jax.jit(aot.traced(self._decode_model, "decode"))
+        self._aot: Dict[Any, aot.AotExecutor] = {}
+        self.plan_executors: Dict[Any, aot.AotExecutor] = {}
+        self._batch_ladder = _pow2_batches(slots)
+
+    # -- AOT warm-up -------------------------------------------------------
+    def _vlm_prefill_fn(self, bucket) -> Callable:
+        prefill, capacity, levels = self._serve_prefill, self.capacity, bucket.levels
+
+        def f(params, pyramid, ratios, tokens):
+            return prefill(params, pyramid, tokens, capacity,
+                           levels=levels, valid_ratios=ratios)
+
+        return f
+
+    def _vlm_prefill(self, bucket) -> Callable:
+        """Jit fallback for a bucket (counts as a request-time trace)."""
+        if bucket.levels not in self._vlm_prefill_jit:
+            self._vlm_prefill_jit[bucket.levels] = jax.jit(aot.traced(
+                self._vlm_prefill_fn(bucket), f"prefill[{bucket.key}]"))
+        return self._vlm_prefill_jit[bucket.levels]
+
+    def warmup(self, *, prompt_lengths: Tuple[int, ...] = (),
+               batch_sizes: Optional[Tuple[int, ...]] = None,
+               plan_batch_sizes: Tuple[int, ...] = (1,)) -> "ServeEngine":
+        """AOT-compile every request-time executor, before traffic.
+
+        Decode is always compiled; prefill per prompt length (vlm: per
+        (bucket, admitted batch size, prompt length)); plus every warmed
+        MsdaPlan's standalone executor (``self.plan_executors``).  After
+        this, requests matching the warmed signatures run with zero
+        traces/compiles — ``aot.probe()`` proves it.
+        """
+        tok = jax.ShapeDtypeStruct((self.slots,), jnp.int32)
+        self._aot["decode"] = aot.aot_compile(
+            self._decode_model, self.params, self.cache, tok, name="decode")
+        if batch_sizes is None:
+            batch_sizes = _pow2_batches(self.slots)
+        # admission pads to THIS ladder — it must be exactly the warmed
+        # set, or a padded batch size would miss the AOT table and hit
+        # the jit fallback at request time
+        self._batch_ladder = tuple(sorted({int(b) for b in batch_sizes}))
+        for L in prompt_lengths:
+            if self.is_vlm:
+                vd = self.cfg.vision.vision_dim
+                nl = len(self.cfg.vision.levels)
+                for bucket in self.buckets:
+                    for B in batch_sizes:
+                        self._aot[("prefill", bucket.levels, B, L)] = aot.aot_compile(
+                            self._vlm_prefill_fn(bucket), self.params,
+                            jax.ShapeDtypeStruct((B, bucket.tokens, vd), jnp.float32),
+                            jax.ShapeDtypeStruct((B, nl, 2), jnp.float32),
+                            jax.ShapeDtypeStruct((B, L), jnp.int32),
+                            name=f"prefill[{bucket.key}|B={B}|L={L}]")
+            else:
+                self._aot[("prefill", 1, L)] = aot.aot_compile(
+                    self._prefill_model, self.params,
+                    jax.ShapeDtypeStruct((1, L), jnp.int32), name=f"prefill[L={L}]")
+        self.plan_executors = aot.compile_plan_executors(self.plans, plan_batch_sizes)
+        return self
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request):
-        self._queue.append(req)
+        if self.is_vlm:
+            if req.pyramid is None:
+                raise ValueError("vlm requests need a pyramid")
+            levels = req.levels or self.cfg.vision.levels
+            # may reject (fits no bucket) — count only accepted requests
+            self.batcher.submit(req.pyramid, levels, req,
+                                group_key=len(req.prompt))
+        else:
+            self._queue.append(req)
+        self.metrics.record_submit(req.rid)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + (len(self.batcher) if self.batcher else 0)
+
+    def _free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self._occupant) if r is None]
+
+    def _retire(self):
+        """Free slots of finished requests — runs at the top of each
+        tick, before admission, so a freed slot is re-filled and decoded
+        in the SAME tick instead of idling one.  (Completion itself is
+        metered at done-marking time, so metrics don't need a trailing
+        tick to see the last requests finish.)"""
+        for s, req in enumerate(self._occupant):
+            if req is not None and req.done:
+                self._occupant[s] = None
+
+    def _finish(self, req: Request):
+        req.done = True
+        self.metrics.record_retire(req.rid)
+
+    def _splice_slot(self, new_cache, src_row: int, slot: int):
+        """Copy row ``src_row`` of a (possibly batched) prefill cache
+        into slot ``slot`` of the engine cache, axis-mapped per leaf."""
+
+        def splice(big, new, ax):
+            if ax < 0:
+                return new  # shared leaves (pos counters) track the prefill
+            src = [slice(None)] * new.ndim
+            src[ax] = slice(src_row, src_row + 1)
+            dst = [slice(None)] * big.ndim
+            dst[ax] = slice(slot, slot + 1)
+            return big.at[tuple(dst)].set(new[tuple(src)])
+
+        self.cache = jax.tree.map(splice, self.cache, new_cache, self._batch_axes)
 
     def _admit(self):
-        for s in range(self.slots):
-            if self._occupant[s] is None and self._queue:
-                req = self._queue.pop(0)
-                logits, cache1 = self._prefill_one(self.params, req.prompt[None, :])
-                # splice slot s of the batched cache with the fresh cache
-                self.cache = jax.tree.map(
-                    lambda big, one: _splice(big, one, s), self.cache, cache1
-                )
-                req.out.append(self._sample(np.asarray(logits)[0]))
+        if self.is_vlm:
+            return self._admit_vlm()
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue.popleft()
+            s = free.pop(0)
+            L = len(req.prompt)
+            fn = self._aot.get(("prefill", 1, L), self._prefill_jit)
+            logits, cache1 = fn(self.params, jnp.asarray(req.prompt[None, :]))
+            self._splice_slot(cache1, 0, s)
+            req.out.append(self._sample(np.asarray(logits)[0]))
+            if len(req.out) >= req.max_new:
+                self._finish(req)
+            self._occupant[s] = req
+            self.metrics.record_admit(req.rid, "lm",
+                                      real_tokens=L, padded_tokens=L)
+
+    def _admit_vlm(self):
+        free = self._free_slots()
+        while free and len(self.batcher):
+            batch = self.batcher.next_batch(min(len(free), max(self._batch_ladder)))
+            reqs = batch.items
+            B = len(reqs)
+            # pad the admitted batch to the next planned size so prefill
+            # executes one of the boot-compiled variants, never a fresh one
+            Bp = next(b for b in self._batch_ladder if b >= B)
+            feats, ratios = batch.feats, batch.ratios
+            tokens = np.stack([r.prompt for r in reqs]).astype(np.int32)
+            if Bp > B:
+                pad = Bp - B
+                feats = np.concatenate(
+                    [feats, np.zeros((pad,) + feats.shape[1:], feats.dtype)])
+                ratios = np.concatenate(
+                    [ratios, np.ones((pad,) + ratios.shape[1:], ratios.dtype)])
+                tokens = np.concatenate(
+                    [tokens, np.zeros((pad, tokens.shape[1]), tokens.dtype)])
+            key = ("prefill", batch.bucket.levels, Bp, tokens.shape[1])
+            fn = self._aot.get(key) or self._vlm_prefill(batch.bucket)
+            logits, cache_b = fn(self.params, jnp.asarray(feats),
+                                 jnp.asarray(ratios), jnp.asarray(tokens))
+            logits = np.asarray(logits)
+            for i, req in enumerate(reqs):
+                s = free.pop(0)
+                self._splice_slot(cache_b, i, s)
+                req.out.append(self._sample(logits[i]))
+                if len(req.out) >= req.max_new:
+                    self._finish(req)
                 self._occupant[s] = req
+            self.metrics.record_admit(
+                [r.rid for r in reqs], batch.bucket.key,
+                real_tokens=batch.real_tokens,
+                padded_tokens=Bp * batch.bucket.tokens)
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.temperature <= 0:
@@ -157,49 +467,34 @@ class ServeEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def step(self):
-        """One engine tick: admit, batched decode, retire."""
+        """One engine tick: retire, admit (into freed slots), batched decode."""
+        self._retire()
         self._admit()
         tok = np.zeros((self.slots,), np.int32)
-        active = []
-        for s, req in enumerate(self._occupant):
-            if req is not None:
-                tok[s] = req.out[-1]
-                active.append(s)
+        active = [s for s, r in enumerate(self._occupant)
+                  if r is not None and not r.done]
+        for s in active:
+            tok[s] = self._occupant[s].out[-1]
         if not active:
             return False
-        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tok))
+        fn = self._aot.get("decode", self._decode_jit)
+        logits, self.cache = fn(self.params, self.cache, jnp.asarray(tok))
         logits = np.asarray(logits)
+        self.metrics.record_tick()
+        self.metrics.record_decode(len(active))
         for s in active:
             req = self._occupant[s]
             req.out.append(self._sample(logits[s]))
             if len(req.out) >= req.max_new:
-                req.done = True
-                self._occupant[s] = None
+                self._finish(req)
         return True
 
     def run(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
-            if not self.step() and not self._queue:
+            if not self.step() and not self.pending:
                 break
+        self._retire()
 
     def shutdown(self) -> None:
         """Release compiled kernel plans (see :func:`clear_kernel_plans`)."""
         clear_kernel_plans()
-
-
-def _splice(big: jax.Array, one: jax.Array, s: int) -> jax.Array:
-    """Write the single-request cache leaf into slot s of the batched leaf.
-
-    Cache leaves are either stacked-over-layers (n, B, ...) or plain
-    (B, ...); the batch dim is the one where shapes differ by slots vs 1.
-    Scalars (pos counters) are shared across slots and taken from `one`.
-    """
-    if big.ndim == 0 or big.shape == one.shape:
-        return one
-    # find batch axis: first axis where big != one
-    for ax in range(big.ndim):
-        if big.shape[ax] != one.shape[ax]:
-            idx = [slice(None)] * big.ndim
-            idx[ax] = slice(s, s + 1)
-            return big.at[tuple(idx)].set(one)
-    return one

@@ -1,0 +1,108 @@
+"""Serving metrics: per-bucket admission / padding / latency / retire counters.
+
+Host-side only (plain Python ints — nothing here touches a trace).  The
+engine records one event per lifecycle transition; ``snapshot()`` is the
+machine-readable view the smoke job and benchmarks consume, and
+``format()`` is the human table ``launch/serve.py`` prints.
+
+Latency is measured in engine *ticks* (one batched decode step each),
+the natural unit for a continuous-batching engine: queue ticks count
+time spent waiting for a slot, decode ticks count time in service.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+
+def _bucket_row() -> Dict[str, int]:
+    return {"admitted": 0, "batches": 0, "real_tokens": 0, "padded_tokens": 0}
+
+
+class ServeMetrics:
+    """Counters for one engine's lifetime."""
+
+    def __init__(self):
+        self.ticks = 0
+        self.submitted = 0
+        self.admitted = 0
+        self.retired = 0
+        self.decode_tokens = 0
+        self.buckets: Dict[str, Dict[str, int]] = {}
+        self._submit_tick: Dict[int, int] = {}
+        self._admit_tick: Dict[int, int] = {}
+        self.latency_ticks: List[int] = []
+        self.queue_ticks: List[int] = []
+
+    # -- lifecycle events --------------------------------------------------
+    def record_tick(self) -> None:
+        self.ticks += 1
+
+    def record_submit(self, rid: int) -> None:
+        self.submitted += 1
+        self._submit_tick[rid] = self.ticks
+
+    def record_admit(self, rids, bucket_key: str = "lm", *,
+                     real_tokens: int = 0, padded_tokens: int = 0) -> None:
+        """One admitted batch (``rids`` may be a single id or a list)."""
+        rids = rids if isinstance(rids, (list, tuple)) else [rids]
+        row = self.buckets.setdefault(bucket_key, _bucket_row())
+        row["admitted"] += len(rids)
+        row["batches"] += 1
+        row["real_tokens"] += int(real_tokens)
+        row["padded_tokens"] += int(padded_tokens)
+        self.admitted += len(rids)
+        for rid in rids:
+            self._admit_tick[rid] = self.ticks
+            if rid in self._submit_tick:
+                self.queue_ticks.append(self.ticks - self._submit_tick[rid])
+
+    def record_decode(self, n_active: int) -> None:
+        self.decode_tokens += int(n_active)
+
+    def record_retire(self, rid: int) -> None:
+        self.retired += 1
+        start = self._admit_tick.get(rid, self._submit_tick.get(rid))
+        if start is not None:
+            self.latency_ticks.append(self.ticks - start)
+
+    # -- views -------------------------------------------------------------
+    @staticmethod
+    def _summ(xs: List[int]) -> Optional[Dict[str, float]]:
+        if not xs:
+            return None
+        s = sorted(xs)
+        return {"p50": float(s[len(s) // 2]), "max": float(s[-1]),
+                "mean": sum(s) / len(s)}
+
+    def snapshot(self) -> Dict[str, Any]:
+        buckets = {}
+        for key, row in self.buckets.items():
+            pad = row["padded_tokens"]
+            buckets[key] = dict(
+                row, padding_frac=1.0 - row["real_tokens"] / pad if pad else 0.0)
+        return {
+            "ticks": self.ticks, "submitted": self.submitted,
+            "admitted": self.admitted, "retired": self.retired,
+            "decode_tokens": self.decode_tokens, "buckets": buckets,
+            "latency_ticks": self._summ(self.latency_ticks),
+            "queue_ticks": self._summ(self.queue_ticks),
+        }
+
+    def format(self) -> str:
+        s = self.snapshot()
+        lines = [
+            f"serve metrics: {s['submitted']} submitted, {s['admitted']} admitted, "
+            f"{s['retired']} retired over {s['ticks']} ticks "
+            f"({s['decode_tokens']} decode tokens)"]
+        if s["latency_ticks"]:
+            lt, qt = s["latency_ticks"], s["queue_ticks"]
+            lines.append(
+                f"  latency ticks p50={lt['p50']:.0f} max={lt['max']:.0f}"
+                + (f"  queue p50={qt['p50']:.0f} max={qt['max']:.0f}" if qt else ""))
+        if s["buckets"]:
+            lines.append("  bucket                    admitted  batches  pad%")
+            for key, row in sorted(s["buckets"].items()):
+                lines.append(
+                    f"  {key:<25s} {row['admitted']:<9d} {row['batches']:<8d} "
+                    f"{100 * row['padding_frac']:.1f}")
+        return "\n".join(lines)

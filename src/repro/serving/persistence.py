@@ -1,0 +1,221 @@
+"""Persistent plan store: rebuild a server's full plan set across restarts.
+
+Three things make a cold serving boot slow: plan construction (block
+planning), the autotune candidate races (real timing runs), and XLA
+compilation.  This module removes all three from a *restarted* process:
+
+* :class:`PlanStore` — a versioned JSON file holding every warmed
+  :class:`~repro.kernels.plan.MsdaPlan`'s spec, backend, tune mode and
+  autotune winner.  ``restore()`` seeds the winners into the on-disk
+  autotune cache (``seed_autotune_winner`` — same ``cache_token()``
+  keying the race itself uses) and rebuilds each plan; ``tune="autotune"``
+  then resolves to ``autotune-cache`` with ZERO timing runs, which the
+  CI serving-smoke job asserts via ``plan.autotune_stats()``.
+* :func:`enable_jax_compilation_cache` — wires JAX's persistent
+  compilation cache to a directory, so the restarted process's AOT
+  ``lower().compile()`` calls at boot are disk hits, not fresh XLA
+  compiles (:func:`compilation_cache_entries` counts the artifacts for
+  the smoke job's no-recompilation assertion).
+
+The store is written atomically (tmp + rename) and refuses nothing at
+read time: a missing file, a version mismatch, or an entry written by a
+newer schema all degrade to a cold start for that entry, never an error
+— a stale store must not take a server down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.kernels import plan as plan_mod
+
+PLAN_STORE_VERSION = 1
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
+def _norm_describe(text: str) -> str:
+    """Canonical describe() for drift comparison: a plan autotuned live
+    and the same plan restored from its persisted winner differ only in
+    the tune-source tag ("autotune" vs "autotune-cache") — that is
+    provenance, not plan content."""
+    return text.replace("tune=autotune-cache", "tune=autotune")
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What a ``PlanStore.restore()`` actually did."""
+
+    plans: List[Any] = dataclasses.field(default_factory=list)
+    seeded_winners: int = 0
+    skipped: List[str] = dataclasses.field(default_factory=list)
+    describe_mismatches: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def cold(self) -> bool:
+        return not self.plans and not self.skipped
+
+
+class PlanStore:
+    """Versioned on-disk record of a serving process's warmed plans."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    # -- save --------------------------------------------------------------
+    def save_plans(self, plans: Sequence, *, meta: Optional[Dict[str, Any]] = None) -> int:
+        """Serialise every local plan; returns the number stored.
+
+        Mesh-carrying (sharded) plans are skipped: a mesh is a property
+        of the restarted process's device topology, not of the store.
+        Autotuned plans store their winner; heuristic plans re-derive
+        their blocks deterministically at restore (same spec, same
+        device kind -> same plan), so nothing extra is persisted.
+        """
+        entries = []
+        for plan in plans:
+            if plan.sharding_mode != "local":
+                continue
+            src = plan.tuning.source
+            entry: Dict[str, Any] = {
+                "spec": plan_mod.spec_to_json(plan.spec),
+                "backend": plan.backend,
+                "tune": "autotune" if src.startswith("autotune") else "heuristic",
+                "source": src,
+                "device_kind": _device_kind(),
+                "describe": plan.describe(),
+            }
+            if src == "override":
+                entry["block_q"] = [int(b) for b in plan.tuning.block_q]
+            if src.startswith("autotune"):
+                entry["winner"] = {
+                    "block_q": [int(b) for b in plan.tuning.block_q],
+                    "slab_dtypes": list(plan.tuning.slab_dtypes),
+                }
+            entries.append(entry)
+        payload = {
+            "version": PLAN_STORE_VERSION,
+            "jax": jax.__version__,
+            "device_kind": _device_kind(),
+            "created_unix": time.time(),
+            "meta": meta or {},
+            "entries": entries,
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        return len(entries)
+
+    # -- load / restore ----------------------------------------------------
+    def load(self) -> Optional[Dict[str, Any]]:
+        """Raw payload, or None when missing/corrupt/wrong version."""
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if not isinstance(data, dict) or data.get("version") != PLAN_STORE_VERSION:
+            return None
+        return data
+
+    def restore(self, *, verify_describe: bool = True) -> RestoreReport:
+        """Rebuild every stored plan; zero autotune races, by seeding.
+
+        For each entry: the persisted winner (if any, and if recorded on
+        this device kind) is seeded into the autotune disk cache first,
+        so the subsequent ``msda_plan(..., tune="autotune")`` is a cache
+        hit — plan construction runs, timing does not.  Entries that
+        fail to parse (newer schema, unknown backend) are recorded in
+        ``report.skipped`` and the boot proceeds cold for them.
+        """
+        report = RestoreReport()
+        data = self.load()
+        if data is None:
+            return report
+        here = _device_kind()
+        # pass 1: parse specs + batch-seed every winner (one cache write)
+        parsed = []
+        for i, entry in enumerate(data.get("entries", ())):
+            try:
+                parsed.append((i, entry, plan_mod.spec_from_json(entry["spec"])))
+            except Exception as e:  # noqa: BLE001 — degrade per entry, never die
+                report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
+        report.seeded_winners = plan_mod.seed_autotune_winners(
+            (spec, entry["backend"], entry["winner"])
+            for i, entry, spec in parsed
+            if entry.get("winner") is not None and entry.get("backend")
+            and entry.get("device_kind", here) == here)
+        # pass 2: rebuild the plans (autotune resolves via the seeds)
+        for i, entry, spec in parsed:
+            try:
+                block_q = entry.get("block_q")
+                plan = plan_mod.msda_plan(
+                    spec, backend=entry["backend"],
+                    tune=entry.get("tune", "heuristic"),
+                    block_q=tuple(block_q) if block_q else None)
+            except Exception as e:  # noqa: BLE001
+                report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
+                continue
+            if verify_describe and entry.get("describe"):
+                if _norm_describe(plan.describe()) != _norm_describe(entry["describe"]):
+                    report.describe_mismatches.append(
+                        f"entry {i}: plan.describe() differs from stored "
+                        f"(device_kind {entry.get('device_kind')} -> {here}?)")
+            report.plans.append(plan)
+        return report
+
+
+# --------------------------------------------------------------------------
+# JAX persistent compilation cache
+# --------------------------------------------------------------------------
+
+
+def enable_jax_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Thresholds are zeroed so even the CPU tier's fast compiles persist
+    (the default min-compile-time gate would skip them, and the smoke
+    job's no-recompilation assertion needs every executable cached).
+    Best-effort: an old jax without the knobs just serves cold.
+    """
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:
+        return False
+    try:
+        # jax latches cache initialisation at the process's FIRST compile
+        # and never re-reads the dir config: a boot that compiled anything
+        # (params init!) before reaching here would silently cache nothing.
+        # Drop the latched (empty-dir) state so the next compile re-reads.
+        from jax._src import compilation_cache as _cc
+
+        _cc.reset_cache()
+    except Exception:
+        pass  # private API moved: processes that set the dir early still cache
+    return True
+
+
+def compilation_cache_entries(cache_dir: str) -> int:
+    """Number of persisted executables (the smoke job's probe)."""
+    try:
+        return sum(1 for n in os.listdir(cache_dir) if n.endswith("-cache"))
+    except OSError:
+        return 0

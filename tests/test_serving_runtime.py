@@ -1,0 +1,422 @@
+"""Serving runtime: AOT zero-retrace, plan-store round-trip, bucketed batcher.
+
+The three contracts the subsystem promises:
+
+* requests whose signature was warmed NEVER trace or compile
+  (``aot.probe()`` counts both);
+* a restarted process rebuilds its full plan set from the store with
+  zero autotune timing runs and identical ``plan.describe()``;
+* pyramids padded into a bucket produce the same outputs as the
+  unbatched exact-geometry reference (valid-ratio coordinate scaling).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import MsdaSpec
+from repro.kernels.ref import msda_ref
+from repro.serving import aot
+from repro.serving import batcher as bm
+from repro.serving import persistence
+from repro.serving.engine import Request, ServeEngine, warmup_msda_plans
+from repro.serving.metrics import ServeMetrics
+
+
+@pytest.fixture(autouse=True)
+def _isolated(tmp_path, monkeypatch):
+    """Fresh plan cache + private autotune winner cache per test."""
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    plan_mod.clear_plans()
+    plan_mod.reset_autotune_stats()
+    aot.reset_stats()
+    yield
+    plan_mod.clear_plans()
+
+
+def _lm_engine(slots=2, capacity=32, arch="llama3-8b", **kw):
+    from repro.models import lm
+
+    cfg = reduced(get_config(arch))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params, ServeEngine(cfg, params, slots=slots,
+                                    capacity=capacity, **kw)
+
+
+def _vlm_engine(slots=2, capacity=64, **kw):
+    from repro.models import vlm
+
+    cfg = reduced(get_config("phi-3-vision-4.2b"))
+    params = vlm.init_vlm(jax.random.PRNGKey(0), cfg)
+    return cfg, params, ServeEngine(cfg, params, slots=slots,
+                                    capacity=capacity, **kw)
+
+
+def _pyr_request(rid, vc, levels, prompt_len=4, max_new=4, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    S = sum(h * w for h, w in levels)
+    return Request(
+        rid=rid, prompt=np.arange(prompt_len, dtype=np.int32) + rid,
+        max_new=max_new,
+        pyramid=rng.standard_normal((S, vc.vision_dim)).astype(np.float32),
+        levels=levels)
+
+
+# --------------------------------------------------------------------------
+# AOT: zero retraces at request time
+# --------------------------------------------------------------------------
+
+
+def test_aot_zero_retrace_lm():
+    _, _, eng = _lm_engine()
+    eng.warmup(prompt_lengths=(5, 3))
+    reqs = [Request(rid=i, prompt=np.arange(n, dtype=np.int32) + i, max_new=3)
+            for i, n in enumerate((5, 3, 5))]
+    with aot.probe() as p:
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    assert p.traces == 0 and p.compiles == 0, f"request-time retrace: {p}"
+    assert p.aot_calls > 0  # the compiled executors actually served
+
+
+def test_unwarmed_prompt_length_is_counted_as_retrace():
+    _, _, eng = _lm_engine()
+    eng.warmup(prompt_lengths=(5,))
+    with aot.probe() as p:
+        eng.submit(Request(rid=0, prompt=np.arange(7, dtype=np.int32),
+                           max_new=2))
+        eng.run()
+    assert p.traces >= 1  # the probe sees the jit fallback trace
+
+
+def test_aot_zero_retrace_vlm_bucketed():
+    cfg, _, eng = _vlm_engine()
+    eng.warmup(prompt_lengths=(4,))
+    vc = cfg.vision
+    half = tuple((h // 2, w // 2) for h, w in vc.levels)
+    reqs = [_pyr_request(0, vc, vc.levels), _pyr_request(1, vc, half),
+            _pyr_request(2, vc, half)]
+    with aot.probe() as p:
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+    assert all(r.done for r in reqs)
+    assert p.traces == 0 and p.compiles == 0, f"request-time retrace: {p}"
+
+
+def test_plan_executor_aot():
+    spec = MsdaSpec(spatial_shapes=((8, 8), (4, 4)), num_heads=2, head_dim=8,
+                    num_points=2, num_queries=16)
+    plan = plan_mod.msda_plan(spec, backend="ref")
+    ex = aot.compile_plan_executor(plan, batch_size=2)
+    v, l, a = (jnp.zeros(s.shape, s.dtype) for s in aot.plan_arg_structs(spec, 2))
+    with aot.probe() as p:
+        out = ex(v, l, a)
+    assert out.shape == (2, 16, 16)
+    assert p.traces == 0 and p.compiles == 0
+
+
+# --------------------------------------------------------------------------
+# plan store round-trip
+# --------------------------------------------------------------------------
+
+
+def test_spec_json_round_trip():
+    spec = MsdaSpec(spatial_shapes=((10, 6), (5, 3)), num_heads=2, head_dim=8,
+                    num_points=3, num_queries=21, train=True,
+                    slab_dtype="bfloat16")
+    again = plan_mod.spec_from_json(json.loads(json.dumps(plan_mod.spec_to_json(spec))))
+    assert again == spec
+    with pytest.raises(ValueError, match="unknown MsdaSpec fields"):
+        plan_mod.spec_from_json({**plan_mod.spec_to_json(spec), "future": 1})
+
+
+def test_plan_store_round_trip_identical_describe(tmp_path):
+    specs = [
+        MsdaSpec(spatial_shapes=((8, 8), (4, 4)), num_heads=2, head_dim=8,
+                 num_points=2, num_queries=32, slab_dtype="auto"),
+        MsdaSpec(spatial_shapes=((6, 6),), num_heads=2, head_dim=8,
+                 num_points=2, num_queries=16),
+    ]
+    plans = [plan_mod.msda_plan(s, backend="cpu", tune="autotune") for s in specs]
+    describes = [p.describe() for p in plans]
+    store = persistence.PlanStore(str(tmp_path / "plans.json"))
+    assert store.save_plans(plans) == 2
+
+    # simulated restart: in-process plan cache gone, winner cache gone
+    plan_mod.clear_plans()
+    os.environ["REPRO_MSDA_AUTOTUNE_CACHE"] = str(tmp_path / "autotune2.json")
+    plan_mod.reset_autotune_stats()
+    report = persistence.PlanStore(store.path).restore()
+    assert len(report.plans) == 2 and not report.skipped
+    assert report.describe_mismatches == []
+    for restored, before in zip(report.plans, describes):
+        assert (persistence._norm_describe(restored.describe())
+                == persistence._norm_describe(before))
+    stats = plan_mod.autotune_stats()
+    assert stats["raced"] == 0, "restore must not run autotune timing"
+    assert stats["seeded"] >= 1  # the autotuned winner was seeded
+
+
+def test_plan_store_version_and_corruption_degrade_cold(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 999, "entries": [{}]}))
+    store = persistence.PlanStore(str(path))
+    assert store.load() is None
+    report = store.restore()
+    assert report.cold and not report.plans
+    path.write_text("{not json")
+    assert persistence.PlanStore(str(path)).restore().cold
+
+
+def test_plan_store_skips_newer_schema_entries(tmp_path):
+    spec = MsdaSpec(spatial_shapes=((4, 4),), num_heads=2, head_dim=8,
+                    num_points=2, num_queries=8)
+    plan = plan_mod.msda_plan(spec, backend="ref")
+    store = persistence.PlanStore(str(tmp_path / "p.json"))
+    store.save_plans([plan])
+    data = json.loads(open(store.path).read())
+    data["entries"].append({"spec": {"mystery_field": 1}, "backend": "ref"})
+    open(store.path, "w").write(json.dumps(data))
+    report = store.restore()
+    assert len(report.plans) == 1 and len(report.skipped) == 1
+
+
+def test_engine_store_restart_zero_races(tmp_path):
+    store_path = str(tmp_path / "engine-plans.json")
+    cfg, params, eng = _vlm_engine(store_path=store_path, tune="autotune",
+                                   dtype_policy="auto")
+    assert eng.restore_report is None and os.path.exists(store_path)
+    n_plans = len(eng.plans)
+    assert plan_mod.autotune_stats()["raced"] >= 1  # cold boot really tuned
+
+    plan_mod.clear_plans()
+    plan_mod.reset_autotune_stats()
+    os.environ["REPRO_MSDA_AUTOTUNE_CACHE"] = str(tmp_path / "autotune2.json")
+    from repro.models import vlm  # params reused; fresh engine = new process
+
+    eng2 = ServeEngine(cfg, params, slots=2, capacity=64,
+                       store_path=store_path, tune="autotune",
+                       dtype_policy="auto")
+    assert eng2.restore_report is not None
+    assert len(eng2.restore_report.plans) == n_plans
+    assert eng2.restore_report.describe_mismatches == []
+    assert plan_mod.autotune_stats()["raced"] == 0
+    # restored plans serve requests end-to-end
+    eng2.warmup(prompt_lengths=(4,))
+    req = _pyr_request(0, cfg.vision, cfg.vision.levels)
+    with aot.probe() as p:
+        eng2.submit(req)
+        eng2.run()
+    assert req.done and p.traces == 0
+
+
+def test_engine_never_clobbers_mismatched_store(tmp_path):
+    """A store written under different plan axes (e.g. a sweep artifact)
+    must survive a mis-configured boot untouched — servers with the
+    right flags still restore it afterwards."""
+    store_path = str(tmp_path / "fleet.json")
+    cfg, params, _ = _vlm_engine(store_path=store_path, dtype_policy="bfloat16")
+    before = open(store_path).read()
+    plan_mod.clear_plans()
+    eng2 = ServeEngine(cfg, params, slots=2, capacity=64,
+                       store_path=store_path)  # default policy: gate fails
+    assert eng2.store_meta_mismatch and eng2.restore_report is None
+    assert eng2.plans  # still serves, from a fresh warm-up
+    assert open(store_path).read() == before
+
+
+# --------------------------------------------------------------------------
+# bucketed batcher: padding correctness
+# --------------------------------------------------------------------------
+
+
+def test_padded_bucket_matches_unbatched_reference():
+    """Kernel-level: pad value into a bigger grid + scale locations ==
+    the unpadded op (zeros padding == zero out-of-range corners)."""
+    levels = ((6, 5), (3, 2))
+    bucket = ((8, 8), (4, 4))
+    B, Q, H, D, P = 2, 9, 2, 8, 3
+    L = len(levels)
+    S = sum(h * w for h, w in levels)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    loc = jax.random.uniform(ks[1], (B, Q, H, L, P, 2), minval=-0.1, maxval=1.1)
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (B, Q, H, L, P)).reshape(B, Q, H, -1)
+    ).reshape(B, Q, H, L, P)
+
+    ref_out = msda_ref(value, levels, loc, attn)
+
+    ratios = bm.valid_ratios(levels, bucket)
+    vp = np.stack([
+        np.concatenate([
+            bm.pad_pyramid(np.asarray(value[b, :, h]), levels, bucket)[None]
+            for h in range(H)])
+        for b in range(B)])  # (B, H, S_b, D)
+    vp = jnp.asarray(np.transpose(vp, (0, 2, 1, 3)))  # (B, S_b, H, D)
+    loc_b = jnp.asarray(bm.scale_locations(np.asarray(loc), ratios))
+    pad_out = msda_ref(vp, bucket, loc_b, attn)
+    np.testing.assert_allclose(np.asarray(pad_out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_bucketed_engine_matches_exact_geometry_serving():
+    """Engine-level: a request padded into a bucket decodes the same
+    tokens as direct serving at its exact pyramid geometry."""
+    from repro.models import vlm
+
+    cfg, params, eng = _vlm_engine()
+    vc = cfg.vision
+    # power-of-two fractions make the valid-ratio rescale exact in fp32
+    # (quarter size: strictly inside the smallest bucket, so it pads)
+    levels = tuple((max(1, h // 4), max(1, w // 4)) for h, w in vc.levels)
+    req = _pyr_request(0, vc, levels, max_new=5)
+    bucket = bm.bucket_for(levels, eng.buckets)
+    assert bucket is not None and bucket.levels != levels  # really padded
+
+    eng.submit(req)
+    eng.run()
+    assert req.done
+
+    lp, cache = vlm.vlm_prefill(params, cfg, jnp.asarray(req.pyramid[None]),
+                                jnp.asarray(req.prompt[None]), 64,
+                                levels=levels)
+    outs = [int(np.asarray(lp)[0].argmax())]
+    for _ in range(req.max_new - 1):
+        ld, cache = vlm.vlm_decode_step(params, cfg, cache,
+                                        jnp.asarray([outs[-1]], jnp.int32))
+        outs.append(int(np.asarray(ld)[0].argmax()))
+    assert req.out == outs
+
+
+def test_batcher_utilities():
+    buckets = bm.default_buckets(((8, 8), (4, 4)), scales=(1.0, 0.5))
+    assert [b.key for b in buckets] == ["4x4/2x2", "8x8/4x4"]
+    assert bm.bucket_for(((3, 4), (2, 2)), buckets).key == "4x4/2x2"
+    assert bm.bucket_for(((5, 4), (2, 2)), buckets).key == "8x8/4x4"
+    assert bm.bucket_for(((9, 9), (4, 4)), buckets) is None
+
+    feats = np.arange(6 * 2, dtype=np.float32).reshape(6, 2)
+    padded = bm.pad_pyramid(feats, ((2, 3),), ((4, 4),))
+    assert padded.shape == (16, 2)
+    np.testing.assert_array_equal(padded.reshape(4, 4, 2)[:2, :3], feats.reshape(2, 3, 2))
+    assert padded.reshape(4, 4, 2)[2:].sum() == 0
+    np.testing.assert_allclose(bm.valid_ratios(((2, 3),), ((4, 4),)),
+                               [[0.75, 0.5]])  # (x=w/W, y=h/H)
+
+
+def test_batcher_groups_same_bucket_and_key():
+    buckets = bm.default_buckets(((4, 4),), scales=(1.0, 0.5))
+    q = bm.PyramidBatcher(buckets)
+    d = 3
+    small, big = ((2, 2),), ((4, 4),)
+    for i, (lv, key) in enumerate([(small, 5), (big, 5), (small, 5), (small, 7)]):
+        S = sum(h * w for h, w in lv)
+        q.submit(np.zeros((S, d), np.float32), lv, f"r{i}", group_key=key)
+    b1 = q.next_batch(4)  # head r0: small/5 -> r0 + r2 (NOT r1: bucket, r3: key)
+    assert b1.items == ["r0", "r2"] and b1.bucket.key == "2x2"
+    assert b1.feats.shape == (2, 4, d) and b1.ratios.shape == (2, 1, 2)
+    b2 = q.next_batch(4)
+    assert b2.items == ["r1"]
+    assert q.next_batch(4).items == ["r3"] and len(q) == 0
+
+
+# --------------------------------------------------------------------------
+# engine scheduling + metrics
+# --------------------------------------------------------------------------
+
+
+def test_retire_frees_slot_same_tick():
+    """slots=1, two requests: the slot freed by a finished request is
+    re-admitted before that tick's decode — zero idle decode ticks."""
+    _, _, eng = _lm_engine(slots=1, arch="stablelm-1.6b", capacity=16)
+    reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32) + 7 * i,
+                    max_new=3) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    # each request decodes (max_new - 1) ticks; any admit-after-retire
+    # lag would add idle ticks on top
+    assert eng.metrics.ticks == sum(r.max_new - 1 for r in reqs)
+    assert eng.metrics.retired == 2
+
+
+def test_queue_is_deque_fifo_over_capacity():
+    _, _, eng = _lm_engine(slots=2, arch="stablelm-1.6b", capacity=16)
+    reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32) + i * 7,
+                    max_new=3) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    s = eng.metrics.snapshot()
+    assert s["submitted"] == s["admitted"] == s["retired"] == 5
+
+
+def test_metrics_padding_and_latency():
+    m = ServeMetrics()
+    m.record_submit(0)
+    m.record_tick()
+    m.record_admit([0], "8x8", real_tokens=30, padded_tokens=64)
+    m.record_tick()
+    m.record_retire(0)
+    s = m.snapshot()
+    assert s["buckets"]["8x8"]["admitted"] == 1
+    assert abs(s["buckets"]["8x8"]["padding_frac"] - (1 - 30 / 64)) < 1e-9
+    assert s["queue_ticks"]["max"] == 1.0 and s["latency_ticks"]["max"] == 1.0
+    assert "8x8" in m.format()
+
+
+def test_make_serve_fns_threads_dtype_policy():
+    cfg = reduced(get_config("phi-3-vision-4.2b"))
+    plans = warmup_msda_plans(cfg, dtype_policy="bfloat16")
+    assert plans and all(p.spec.slab_dtype == "bfloat16" for p in plans)
+    # the prefill closure must build the SAME spec (policy reaches the
+    # resampler, not just the warm-up): tracing it adds no plan-cache miss
+    from repro.serving.engine import make_serve_fns
+
+    prefill, _ = make_serve_fns(cfg, dtype_policy="bfloat16")
+    misses0 = plan_mod.plan_cache_info()["misses"]
+    from repro.models import vlm
+
+    vd, nv = cfg.vision.vision_dim, sum(h * w for h, w in cfg.vision.levels)
+    params_avals = jax.eval_shape(lambda: vlm.init_vlm(jax.random.PRNGKey(0), cfg))
+    jax.eval_shape(lambda p, py, t: prefill(p, py, t, 32), params_avals,
+                   jax.ShapeDtypeStruct((1, nv, vd), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 4), jnp.int32))
+    assert plan_mod.plan_cache_info()["misses"] == misses0
+
+
+# --------------------------------------------------------------------------
+# sweep CLI
+# --------------------------------------------------------------------------
+
+
+def test_sweep_cli_populates_store(tmp_path, monkeypatch, capsys):
+    import benchmarks.sweep as sweep
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["sweep", "--smoke", "--archs", "phi-3-vision-4.2b",
+         "--policies", "follow", "--store-dir", str(tmp_path / "fleet")])
+    sweep.main()
+    out = capsys.readouterr().out
+    assert "phi-3-vision-4.2b-smoke,follow" in out
+    stores = list((tmp_path / "fleet").glob("*.json"))
+    assert len(stores) == 1
+    # the store restores with zero races in a "new" process
+    plan_mod.clear_plans()
+    plan_mod.reset_autotune_stats()
+    report = persistence.PlanStore(str(stores[0])).restore()
+    assert report.plans and not report.describe_mismatches
+    assert plan_mod.autotune_stats()["raced"] == 0
