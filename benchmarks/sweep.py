@@ -14,11 +14,19 @@ a fleet will serve, and persist the results twice over —
 VLM archs sweep their serving BUCKET geometries (the ladder the
 bucketed batcher actually admits), not just the config pyramid.
 
-    PYTHONPATH=src python -m benchmarks.sweep --smoke \
-        --store-dir /tmp/fleet-store --policies follow auto
+``--mesh-shapes`` adds a mesh-topology axis: for each 'DPxTP' entry the
+sweep builds a (data=DP, model=TP) mesh, warms DISTRIBUTED plans (the
+sharding ladder — including the 2D dp x tp query-tiling mode — commits
+per plan, and ``tune="autotune"`` races 1D vs 2D per topology), and
+persists one store per (arch, policy, mesh) that a server restores via
+``ServeEngine(store_path=..., mesh=...)``.
 
-Prints one CSV row per (arch, policy): plan count, tune sources, and
-the store path a server should be pointed at.
+    PYTHONPATH=src python -m benchmarks.sweep --smoke \
+        --store-dir /tmp/fleet-store --policies follow auto \
+        --mesh-shapes 1 2x2
+
+Prints one CSV row per (arch, policy, mesh): plan count, tune sources,
+and the store path a server should be pointed at.
 """
 from __future__ import annotations
 
@@ -27,27 +35,45 @@ import os
 from collections import Counter
 
 
-def sweep_one(cfg, policy: str, store_dir: str):
-    """Autotune + persist one (config, dtype policy) cell."""
+def parse_mesh_shape(token: str):
+    """'1' -> None; 'DPxTP' -> (dp, tp).  Canonical parser lives in
+    ``repro.launch.mesh``; bad tokens raise ValueError so the sweep loop
+    reports the cell as skipped and keeps going."""
+    from repro.launch.mesh import parse_mesh_shape as parse
+
+    return parse(token)
+
+
+def sweep_one(cfg, policy: str, store_dir: str, mesh_shape=None):
+    """Autotune + persist one (config, dtype policy, mesh shape) cell."""
+    from repro.kernels import plan as plan_mod
+    from repro.launch import mesh as mesh_lib
     from repro.serving import batcher as batcher_mod
     from repro.serving.engine import warmup_msda_plans
     from repro.serving.persistence import PlanStore
 
+    mesh = None
+    mtok = "local"
+    if mesh_shape is not None:
+        mesh = mesh_lib.make_mesh_2d(*mesh_shape)  # raises if too few devices
+        mtok = plan_mod.mesh_token(mesh)
     buckets = None
     if getattr(cfg, "vision", None) is not None:
         vc = cfg.vision
         buckets = batcher_mod.default_buckets(
             vc.levels, getattr(vc, "bucket_scales", (1.0,)))
     plans = warmup_msda_plans(cfg, dtype_policy=policy, tune="autotune",
-                              buckets=buckets)
-    path = os.path.join(store_dir, f"{cfg.name}-{policy}.json")
+                              buckets=buckets, mesh=mesh)
+    name = f"{cfg.name}-{policy}" + ("" if mesh is None else f"-{mtok}")
+    path = os.path.join(store_dir, name + ".json")
     # meta mirrors ServeEngine's store gate exactly, so a server booted
-    # with the same (arch, policy, tune, bucket ladder) restores this
-    # store directly via ServeEngine(store_path=...)
+    # with the same (arch, policy, tune, bucket ladder, mesh) restores
+    # this store directly via ServeEngine(store_path=..., mesh=...)
     meta = {"arch": cfg.name, "dtype_policy": policy, "tune": "autotune",
-            "buckets": [b.key for b in (buckets or ())]}
+            "buckets": [b.key for b in (buckets or ())],
+            "mesh": None if mesh is None else mtok}
     n = PlanStore(path).save_plans(plans, meta=meta)
-    return plans, path, n
+    return plans, path, n, mtok
 
 
 def main() -> None:
@@ -62,6 +88,13 @@ def main() -> None:
     ap.add_argument("--store-dir", default="experiments/plan-store")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs (CI / laptop sweeps)")
+    ap.add_argument("--mesh-shapes", nargs="+", default=["1"],
+                    help="mesh-topology axis: '1' (no mesh) and/or 'DPxTP' "
+                         "entries like 2x2 1x4 — each sweeps the full "
+                         "(arch x policy) grid with distributed plans, "
+                         "racing 1D vs 2D sharding where both are legal; "
+                         "shapes needing more devices than the host has "
+                         "are reported and skipped")
     args = ap.parse_args()
 
     archs = args.archs
@@ -71,18 +104,27 @@ def main() -> None:
                  or get_config(n).vision is not None]
     os.makedirs(args.store_dir, exist_ok=True)
 
-    print("arch,policy,plans,stored,sources,store_path")
+    print("arch,policy,mesh,plans,stored,sources,store_path")
     for name in archs:
         cfg = get_config(name)
         if args.smoke:
             cfg = reduced(cfg)
         for policy in args.policies:
-            plans, path, stored = sweep_one(cfg, policy, args.store_dir)
-            sources = "+".join(
-                f"{k}:{v}" for k, v in sorted(
-                    Counter(p.tuning.source for p in plans).items()))
-            print(f"{cfg.name},{policy},{len(plans)},{stored},{sources},{path}",
-                  flush=True)
+            for mtoken in args.mesh_shapes:
+                try:
+                    shape = parse_mesh_shape(mtoken)
+                    plans, path, stored, mtok = sweep_one(
+                        cfg, policy, args.store_dir, mesh_shape=shape)
+                except ValueError as e:  # bad token / more devices than host
+                    reason = str(e).replace(",", ";")  # keep the CSV parseable
+                    print(f"{cfg.name},{policy},{mtoken},0,0,skipped:{reason},-",
+                          flush=True)
+                    continue
+                sources = "+".join(
+                    f"{k}:{v}" for k, v in sorted(
+                        Counter(p.tuning.source for p in plans).items()))
+                print(f"{cfg.name},{policy},{mtok},{len(plans)},{stored},"
+                      f"{sources},{path}", flush=True)
     stats = plan_mod.autotune_stats()
     print(f"# autotune: {stats['raced']} raced, {stats['cache_hits']} cache "
           f"hits; winner cache at {plan_mod.autotune_cache_path()}")

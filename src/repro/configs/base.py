@@ -82,6 +82,14 @@ class MSDAConfig:
     vmem_budget: int = 0
     # shard queries (not heads) over 'tp' in the encoder's huge-Q layers
     query_parallel: bool = True
+    # distribution family when a mesh is installed: 'auto' walks the
+    # ladder (and autotune races 1D vs 2D), '1d' pins the classic
+    # query/head/batch ladder, '2d' forces dp x tp query tiling
+    sharding: str = "auto"
+    # grad_value reduction for query-sharded plans: 'auto' (-> ring),
+    # 'ring' (ppermute ring over tp), 'psum' (shard_map transpose
+    # all-reduce — ablation / parity baseline)
+    grad_reduce: str = "auto"
     # msda dtype policy — the planned precision axis:
     #   'follow'   value-slab dtype tracks the operand dtype (default)
     #   'float32'  force fp32 slabs
@@ -99,6 +107,14 @@ class MSDAConfig:
             raise ValueError(
                 f"unknown msda dtype_policy {self.dtype_policy!r}; one of "
                 "'follow' | 'float32' | 'bfloat16' | 'auto'")
+        if self.sharding not in ("auto", "1d", "2d"):
+            raise ValueError(
+                f"unknown msda sharding {self.sharding!r}; one of "
+                "'auto' | '1d' | '2d'")
+        if self.grad_reduce not in ("auto", "ring", "psum"):
+            raise ValueError(
+                f"unknown msda grad_reduce {self.grad_reduce!r}; one of "
+                "'auto' | 'ring' | 'psum'")
 
 
 # --------------------------------------------------------------------------

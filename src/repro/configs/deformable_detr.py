@@ -32,8 +32,13 @@ CONFIG = register(ModelConfig(
     # does pick bf16 for the 256x256 level its slab halves to ~4 MiB and
     # block re-planning widens the encoder's vec-len; accumulation stays
     # fp32 either way.
+    # sharding="auto": on a real mesh the 87k-query encoder clears the
+    # 2D threshold (87040 / 16 = 5440 queries per shard on a 4x4 slice),
+    # so its plan commits dp x tp query tiling with ring-reduced
+    # grad_value slabs; the 300-query decoder stays on the 1D ladder.
     msda=MSDAConfig(levels=PAPER_LEVELS, num_points=4, num_heads=8,
                     backend="auto", tune="heuristic", vmem_budget=0,
-                    query_parallel=True, dtype_policy="auto"),
+                    query_parallel=True, dtype_policy="auto",
+                    sharding="auto", grad_reduce="auto"),
     source="arXiv:2010.04159 (Deformable DETR) + paper §3 input spec",
 ))

@@ -112,9 +112,11 @@ def encode_pyramid(params, cfg, pyramid: jax.Array, *, train: bool = False,
 
     def step(x, lp):
         h = layers.apply_norm(lp["norm1"], x, cfg.norm_eps)
-        # 87k pixel queries: shard queries over 'model' (value replicated
-        # per shard; grad_value psum'd — the staggered-scatter analogue).
-        # The sharding mode is committed on the cached MsdaPlan.
+        # 87k pixel queries: shard queries over 'model' — or dp x tp
+        # jointly when the mesh + Q clear the 2D threshold (value
+        # replicated per shard; grad_value ring-reduced — the
+        # staggered-scatter analogue, see docs/sharding.md).  The
+        # sharding mode is committed on the cached MsdaPlan.
         y = msda_mod.msda_attention(lp["msda"], mc, h, h, refs, train=train,
                                     query_parallel=mc.query_parallel)
         x = x + y

@@ -15,12 +15,17 @@ Distribution is baked into the plan when a mesh is installed —
 
 * batch over the 'dp' axes, heads over 'tp' (value sharded, no
   reduction needed: each shard owns its heads' slice of grad_value);
-* optionally queries over 'tp' instead (``query_parallel=True``) for
-  huge-Q workloads (the DETR encoder's 87k pixel queries). The value
-  tensor is then replicated over 'tp' and shard_map's reverse-mode
-  transpose emits the **psum of per-shard partial grad_value slabs** —
-  the TPU-idiomatic realisation of the paper's staggered-scatter idea
-  (contention eliminated via partial accumulators + reduction, §4.2).
+* queries over 'tp' instead (``query_parallel=True``) for huge-Q
+  workloads (the DETR encoder's 87k pixel queries), or tiled over
+  **dp x tp jointly** (the 2D 'query2d' mode — picked automatically
+  when Q amortises both axes, forceable via ``sharding="2d"``).  The
+  value tensor is then replicated over the query axes and the
+  per-shard partial grad_value slabs are reduced explicitly: a
+  ppermute **ring** over 'tp' (one slab shard resident per hop) plus a
+  psum over 'dp' — the TPU-idiomatic realisation of the paper's
+  staggered-scatter idea (contention eliminated via partial
+  accumulators + reduction, §4.2), QUILL-style cache-resident.  See
+  ``docs/sharding.md``.
 
 ``distributed_msda`` survives as a thin compatibility wrapper over a
 mesh-carrying plan.
@@ -82,6 +87,8 @@ def attention_plan(
     query_parallel: bool = False,
     dtype_policy: Optional[str] = None,
     tune: Optional[str] = None,
+    sharding: Optional[str] = None,
+    grad_reduce: Optional[str] = None,
 ) -> plan_mod.MsdaPlan:
     """The module's :class:`MsdaPlan` for one static geometry (cached).
 
@@ -94,7 +101,10 @@ def attention_plan(
     default (0 = auto), and ``msda_cfg.dtype_policy`` (overridable per
     call) picks the mixed-precision plan variant — 'follow' | 'float32'
     | 'bfloat16' | 'auto' (see
-    :func:`repro.kernels.plan.resolve_dtype_policy`).
+    :func:`repro.kernels.plan.resolve_dtype_policy`).  When a mesh is
+    given, ``msda_cfg.sharding`` / ``msda_cfg.grad_reduce`` (both
+    overridable per call) select the distribution family and the
+    grad_value reduction — see ``docs/sharding.md``.
     """
     policy = dtype_policy or getattr(msda_cfg, "dtype_policy", "follow")
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
@@ -116,6 +126,8 @@ def attention_plan(
         tune=tune or getattr(msda_cfg, "tune", "heuristic"),
         mesh=mesh,
         query_parallel=query_parallel,
+        sharding=sharding or getattr(msda_cfg, "sharding", "auto"),
+        grad_reduce=grad_reduce or getattr(msda_cfg, "grad_reduce", "auto"),
     )
 
 
@@ -184,17 +196,22 @@ def distributed_msda(
     *,
     mesh=None,
     query_parallel: bool = False,
+    sharding: str = "auto",
+    grad_reduce: str = "auto",
     backend: str = "auto",
     train: bool = False,
 ) -> jax.Array:
     """shard_map-distributed MSDA (see module docstring).
 
     Thin wrapper: builds/fetches the mesh-carrying plan and executes it.
-    The sharding-mode ladder (query-parallel -> head-parallel ->
-    batch-only) now lives in ``plan._plan_sharding``.
+    The sharding-mode ladder (2D dp x tp query tiling -> query-parallel
+    -> head-parallel -> batch-only) lives in ``plan._plan_sharding``;
+    ``sharding``/``grad_reduce`` pass straight through to
+    :func:`repro.kernels.plan.msda_plan`.
     """
     mesh = mesh or rules.current_mesh()
     spec = plan_mod.spec_from_arrays(value, levels, loc, attn, train=train)
     plan = plan_mod.msda_plan(
-        spec, backend=backend, mesh=mesh, query_parallel=query_parallel)
+        spec, backend=backend, mesh=mesh, query_parallel=query_parallel,
+        sharding=sharding, grad_reduce=grad_reduce)
     return plan(value, loc, attn)

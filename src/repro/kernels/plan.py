@@ -1,5 +1,15 @@
 """Plan/execute API for multi-scale deformable attention.
 
+Contract (the one rule of the system — ``docs/architecture.md``):
+every hardware-aware decision is committed HERE, at plan time, and
+execution only executes.  ``MsdaSpec`` (frozen geometry) resolves via
+``msda_plan`` into an ``MsdaPlan`` carrying the backend, per-level
+blocks + slab dtypes (heuristic or autotuned, winners persisted per
+device kind), and — when a mesh is given — the sharding mode: the 1D
+query/head/batch ladder or the 2D dp x tp query tiling with
+ring-reduced grad_value slabs (``docs/sharding.md``).  Plans live in a
+bounded LRU; ``plan.describe()`` states everything that was committed.
+
 The paper's central observation is that MSDA gets fast only when the
 *static* problem geometry — level shapes, points, head dim, the VMEM
 budget — is exploited ahead of time: adaptive vec-len planning (Fig. 7),
@@ -406,15 +416,18 @@ def _store_autotune_cache(cache: Dict[str, Any]) -> None:
         pass  # read-only FS: autotune still works, winners just aren't kept
 
 
-def _autotune_inputs(spec: MsdaSpec):
+def _autotune_inputs(spec: MsdaSpec, batch: int = 1):
     """Deterministic synthetic operands at the spec's exact geometry.
 
     All three operands honour ``spec.dtype``: timing a bf16 spec with
     fp32 operands would trace (and cache a winner for) a *different*
     program than the one real calls execute — the casts, slab residency
     and gather widths all change with the operand dtype.
+
+    ``batch``: the sharding race times full shard_mapped executors, and
+    the 1D candidate shards batch over dp — so it asks for B = dp_size.
     """
-    B = 1
+    B = batch
     S, H, D = spec.total_pixels, spec.num_heads, spec.head_dim
     Q, L, P = spec.num_queries, spec.num_levels, spec.num_points
     dt = jnp.dtype(spec.dtype)
@@ -458,10 +471,13 @@ _SLAB_DTYPE_CANDIDATES = ("float32", "bfloat16")
 
 
 def _parse_cache_entry(hit, spec: MsdaSpec):
-    """Decode a winner-cache entry -> (block_q, slab_dtypes) or None.
+    """Decode a winner-cache entry -> (block_q, slab_dtypes, sharding).
 
-    Two on-disk schemas: the current ``{"block_q": [...], "slab_dtypes":
-    [...]}`` dict, and a flat ``[block_q...]`` list accepted for
+    Three on-disk schemas, newest first: ``{"block_q": [...],
+    "slab_dtypes": [...], "sharding": "1d"|"2d"}`` (mesh-keyed entries
+    for distributed plans — the sharding field is OPTIONAL, so every
+    pre-2D entry still parses and yields ``sharding=None``), the plain
+    block/dtype dict, and a flat ``[block_q...]`` list accepted for
     hand-authored caches (offline sweep tooling / the pre-dtype-policy
     format — note old entries won't *hit* anyway, since adding the
     policy fields to the spec changed ``cache_token()``).  Anything
@@ -471,60 +487,109 @@ def _parse_cache_entry(hit, spec: MsdaSpec):
     L = spec.num_levels
     try:
         if isinstance(hit, list) and len(hit) == L:
-            return tuple(int(b) for b in hit), _default_slab_dtypes(spec)
+            return tuple(int(b) for b in hit), _default_slab_dtypes(spec), None
         if isinstance(hit, dict):
             bq = hit.get("block_q")
             dts = hit.get("slab_dtypes")
+            sharding = hit.get("sharding")
+            if sharding is not None and sharding not in ("1d", "2d"):
+                return None
             if not (isinstance(bq, list) and len(bq) == L):
                 return None
             if not (isinstance(dts, list) and len(dts) == L):
                 dts = _default_slab_dtypes(spec)
             dts = tuple(str(jnp.dtype(d)) for d in dts)
-            return tuple(int(b) for b in bq), dts
+            return tuple(int(b) for b in bq), dts, sharding
     except (TypeError, ValueError):  # hand-edited / corrupted entries
         return None
     return None
 
 
+def mesh_token_from(axes, shape) -> str:
+    """'data2xmodel2'-style token from bare (axis names, shape) tuples."""
+    return "x".join(f"{a}{s}" for a, s in zip(axes, shape))
+
+
+def mesh_token(mesh) -> str:
+    """Stable 'data2xmodel2'-style token for a mesh's (axes, shape).
+
+    The canonical mesh name wherever device objects can't travel: the
+    winner-cache key suffix for distributed plans, the plan store's
+    sharded entries, and the serving store meta gate.  Deliberately
+    ignores device *ids* — a winner tuned on one 2x2 slice applies to
+    any other 2x2 slice of the same part.
+    """
+    return mesh_token_from(mesh.axis_names, mesh.devices.shape)
+
+
+def mesh_winner_suffix(mesh, query_parallel: bool) -> str:
+    """Winner-cache key suffix for (mesh topology, query-parallel flag) —
+    the two inputs besides the spec that change which sharding modes are
+    even legal to race."""
+    return f"mesh[{mesh_token(mesh)}]|qp{int(bool(query_parallel))}"
+
+
 def autotune_winner_key(spec: MsdaSpec, backend: str,
-                        device_kind: Optional[str] = None) -> str:
-    """The on-disk winner-cache key for (device kind, backend, spec)."""
+                        device_kind: Optional[str] = None,
+                        mesh_suffix: Optional[str] = None) -> str:
+    """The on-disk winner-cache key for (device kind, backend, spec).
+
+    ``mesh_suffix`` (see :func:`mesh_winner_suffix`) keys the
+    *distributed* winner — the 1D-vs-2D sharding race — separately from
+    the local block/dtype winner of the same spec.
+    """
     if device_kind is None:
         device_kind = jax.devices()[0].device_kind
-    return f"{device_kind}|{registry.resolve_backend(backend)}|{spec.cache_token()}"
+    key = f"{device_kind}|{registry.resolve_backend(backend)}|{spec.cache_token()}"
+    if mesh_suffix:
+        key += f"|{mesh_suffix}"
+    return key
 
 
 def get_autotune_winner(spec: MsdaSpec, backend: str,
-                        device_kind: Optional[str] = None) -> Optional[Dict[str, Any]]:
+                        device_kind: Optional[str] = None,
+                        mesh_suffix: Optional[str] = None) -> Optional[Dict[str, Any]]:
     """Read (and normalise) the persisted winner for a spec, or None."""
-    hit = _load_autotune_cache().get(autotune_winner_key(spec, backend, device_kind))
+    hit = _load_autotune_cache().get(
+        autotune_winner_key(spec, backend, device_kind, mesh_suffix))
     parsed = _parse_cache_entry(hit, spec)
     if parsed is None:
         return None
-    return {"block_q": [int(b) for b in parsed[0]], "slab_dtypes": list(parsed[1])}
+    out = {"block_q": [int(b) for b in parsed[0]], "slab_dtypes": list(parsed[1])}
+    if parsed[2] is not None:
+        out["sharding"] = parsed[2]
+    return out
 
 
 def seed_autotune_winners(entries, device_kind: Optional[str] = None) -> int:
     """Install winners into the on-disk cache WITHOUT racing (batch).
 
-    ``entries``: iterable of ``(spec, backend, winner)``.  The restore
-    path of the serving plan store and the offline sweep CLI use this to
-    pre-populate the cache a fleet (or a restarted server) reads, so
-    ``tune="autotune"`` resolves to ``autotune-cache`` with zero timing
-    runs.  One cache read + one atomic write for the whole batch.  Each
-    winner is validated with the same parser the cache reader uses;
-    malformed winners are skipped (returns the number actually written)
-    rather than written where they would poison future boots.
+    ``entries``: iterable of ``(spec, backend, winner)`` or ``(spec,
+    backend, winner, mesh_suffix)`` — the 4-tuple form seeds the
+    mesh-keyed 1D-vs-2D sharding winner of a distributed plan (see
+    :func:`mesh_winner_suffix`).  The restore path of the serving plan
+    store and the offline sweep CLI use this to pre-populate the cache a
+    fleet (or a restarted server) reads, so ``tune="autotune"`` resolves
+    to ``autotune-cache`` with zero timing runs.  One cache read + one
+    atomic write for the whole batch.  Each winner is validated with the
+    same parser the cache reader uses; malformed winners are skipped
+    (returns the number actually written) rather than written where they
+    would poison future boots.
     """
     disk = _load_autotune_cache()
     n = 0
-    for spec, backend, winner in entries:
+    for entry in entries:
+        spec, backend, winner = entry[:3]
+        mesh_suffix = entry[3] if len(entry) > 3 else None
         parsed = _parse_cache_entry(winner, spec)
         if parsed is None:
             continue
-        disk[autotune_winner_key(spec, backend, device_kind)] = {
+        stored: Dict[str, Any] = {
             "block_q": [int(b) for b in parsed[0]],
             "slab_dtypes": list(parsed[1])}
+        if parsed[2] is not None and mesh_suffix:
+            stored["sharding"] = parsed[2]
+        disk[autotune_winner_key(spec, backend, device_kind, mesh_suffix)] = stored
         n += 1
     if n:
         _store_autotune_cache(disk)
@@ -564,7 +629,7 @@ def _autotune_plan(
     onehot = _onehot_levels(spec)
     heur = _heuristic_block_q(spec)
     base_dts = _default_slab_dtypes(spec)
-    key = f"{jax.devices()[0].device_kind}|{backend_name}|{spec.cache_token()}"
+    key = autotune_winner_key(spec, backend_name)
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
     if parsed is not None:
@@ -656,6 +721,93 @@ def _autotune_plan(
     return best, best_dts, "autotune"
 
 
+def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
+                       query_parallel: bool, grad_reduce: str,
+                       build_local: Callable):
+    """Race the 1D ladder vs the 2D (dp x tp) mode.
+
+    Returns ``(choice, built)`` where ``choice`` is ``'1d' | '2d'`` and
+    ``built`` is the winner's already-constructed ``(sharded_exec,
+    tuning, resolution)`` — or None on a cache hit / degenerate race —
+    so the caller never rebuilds what the race just built.
+
+    The sharding mode joined the autotune space in the same spirit as
+    block_q and the slab dtypes: which side wins is geometry- and
+    topology-dependent (2D buys a dp_size-wider query fan-out but pays
+    value replication over dp plus the dp-psum leg of the grad
+    reduction), so under ``tune="autotune"`` + ``sharding="auto"`` both
+    full sharded executors are built — each at its OWN tuned local
+    geometry, the nested block/dtype races caching per local spec as
+    usual — and timed interleaved on synthetic operands at the GLOBAL
+    geometry.  **Train specs time forward + backward**: the modes
+    differ mostly in backward cost (the grad_value reduction), so a
+    forward-only race would crown the wrong mode for training.  The
+    winner persists in the standard winner-cache schema grown by a
+    ``"sharding"`` field (old entries parse unchanged), keyed by
+    (device kind, backend, spec, mesh topology, qp flag) so a 2x2
+    winner never mis-tunes a 1x4 mesh.
+    """
+    from repro.sharding import rules
+
+    r1 = _plan_sharding(spec, mesh, query_parallel, "1d")
+    r2 = _plan_sharding(spec, mesh, query_parallel, "2d")
+    if r2[0] != "query2d":
+        return "1d", None  # no 2D candidate on this (spec, mesh)
+    key = autotune_winner_key(
+        spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
+    disk = _load_autotune_cache()
+    parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is not None and parsed[2] in ("1d", "2d"):
+        _AUTOTUNE_STATS["cache_hits"] += 1
+        return parsed[2], None
+
+    _AUTOTUNE_STATS["raced"] += 1
+    # batch must divide dp for the 1D candidate (dp shards batch there)
+    batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
+    args = _autotune_inputs(spec, batch=batch)
+    fns: Dict[str, Callable] = {}
+    built: Dict[str, tuple] = {}
+    for name, r in (("1d", r1), ("2d", r2)):
+        mode, dp, tp, tp_size, local = r
+        try:
+            inner_exec, tuning = build_local(local)
+            exec_fn = _build_sharded_exec(
+                spec, inner_exec, local, mesh, mode, dp, tp, tp_size,
+                grad_reduce)
+            if spec.train:
+                # time what training executes: fwd + full VJP (the
+                # ring/psum grad_value legs live in the backward)
+                f = jax.jit(jax.grad(
+                    lambda v, l, a, e=exec_fn: jnp.sum(e(v, l, a)),
+                    argnums=(0, 1, 2)))
+            else:
+                f = jax.jit(exec_fn)
+            jax.block_until_ready(f(*args))  # compile + warm (may raise)
+            fns[name] = f
+            built[name] = (exec_fn, tuning, r)
+        except Exception:
+            continue  # candidate doesn't build on this mesh: skip
+    if not fns:
+        return "1d", None  # nothing raced: fall back, persist nothing
+    if len(fns) < 2:
+        # lone survivor: use it for THIS process but do NOT persist — a
+        # transient compile failure on the other candidate must not
+        # become a permanent (never re-raced) fleet-wide tuning decision
+        winner = next(iter(fns))
+        return winner, built[winner]
+    times = _time_executors(fns, args)
+    # the incumbent is the 1D ladder; 2D must clear the noise margin
+    winner = ("2d" if times["2d"] < times["1d"] * (1 - _AUTOTUNE_MARGIN)
+              else "1d")
+    t = built[winner][1]
+    disk = _load_autotune_cache()
+    disk[key] = {"block_q": list(t.block_q),
+                 "slab_dtypes": list(t.slab_dtypes or _default_slab_dtypes(spec)),
+                 "sharding": winner}
+    _store_autotune_cache(disk)
+    return winner, built[winner]
+
+
 # --------------------------------------------------------------------------
 # sharding (baked into the plan; collapses the old distributed_msda fork)
 # --------------------------------------------------------------------------
@@ -681,12 +833,34 @@ def _mesh_cache_key(mesh) -> Optional[tuple]:
     )
 
 
-def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool):
+# below this per-shard query count the 2D mode stops amortising the
+# second axis (ring hops + replicated-value HBM cost what the extra way
+# of parallelism buys back); 'auto' then stays on the 1D ladder.  The
+# 87k-query Deformable-DETR encoder clears it on any realistic mesh
+# (87040 / 16 devices = 5440 per shard).  sharding="2d" overrides.
+QUERY2D_MIN_LOCAL_Q = 2048
+
+SHARDING_CHOICES = ("auto", "1d", "2d")
+GRAD_REDUCE_CHOICES = ("auto", "ring", "psum")
+
+
+def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
+                   sharding: str = "auto"):
     """Resolve the legal sharding mode for this spec on this mesh.
 
     Returns (mode, dp_axis, tp_axis, tp_size, inner_spec) where ``mode``
-    is one of 'replicated' | 'batch' | 'head' | 'query'.  Query-parallel
-    needs Q % tp == 0, head-parallel H % tp == 0; otherwise tp idles
+    is one of 'replicated' | 'batch' | 'head' | 'query' | 'query2d'.
+
+    The 2D mode ('query2d') tiles QUERIES over dp x tp jointly — heads,
+    batch and the value tensor are replicated — and is taken when both
+    axes are real (dp > 1 and tp > 1), Q divides by dp*tp, and either
+    ``sharding="2d"`` forces it or Q is large enough to amortise both
+    axes (``QUERY2D_MIN_LOCAL_Q`` per shard; the 87k-query encoder).
+    On a 1xN or Nx1 mesh one of the axes is trivial, so a 2D request
+    resolves to the equivalent 1D rung instead of pretending.
+
+    The 1D ladder below it is unchanged: query-parallel needs
+    Q % tp == 0, head-parallel H % tp == 0; otherwise tp idles
     (batch-only) — same degradation ladder the old distributed_msda had,
     now committed once at plan time instead of re-derived per call.
     """
@@ -696,8 +870,18 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool):
     tp = rules.resolve_axis("tp", mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     tp_size = sizes.get("model", 1)
+    dp_size = rules.axis_size(dp, mesh)
     H, Q = spec.num_heads, spec.num_queries
-    if query_parallel and Q % tp_size == 0 and tp is not None and tp_size > 1:
+    want_query = query_parallel or sharding == "2d"
+    if (sharding != "1d" and want_query
+            and dp is not None and dp_size > 1
+            and tp is not None and tp_size > 1
+            and Q % (dp_size * tp_size) == 0):
+        local_q = Q // (dp_size * tp_size)
+        if sharding == "2d" or local_q >= QUERY2D_MIN_LOCAL_Q:
+            inner = dataclasses.replace(spec, num_queries=local_q)
+            return "query2d", dp, tp, tp_size, inner
+    if want_query and Q % tp_size == 0 and tp is not None and tp_size > 1:
         inner = dataclasses.replace(spec, num_queries=Q // tp_size)
         return "query", dp, tp, tp_size, inner
     if tp is not None and tp_size > 1 and H % tp_size == 0:
@@ -708,14 +892,52 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool):
     return mode, dp, None, 1, spec
 
 
-def _build_sharded_exec(spec, inner_exec, inner_spec, mesh, mode, dp, tp):
+def resolve_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
+                     sharding: str = "auto") -> Tuple[str, MsdaSpec]:
+    """Public probe: the (mode, per-shard spec) a plan would commit.
+
+    Used by the plan store to re-derive a persisted distributed plan's
+    local geometry (whose autotune winner is keyed on the LOCAL spec)
+    and by tests/docs that assert on the ladder without building a plan.
+    """
+    mode, _, _, _, inner = _plan_sharding(spec, mesh, query_parallel, sharding)
+    return mode, inner
+
+
+def _resolve_grad_reduce(grad_reduce: str, mode: str, tp_size: int) -> str:
+    """'auto' -> ring for the query-sharded modes (where grad_value is a
+    cross-shard reduction), psum-via-AD everywhere else.  Modes whose
+    value tensor is sharded ('head', 'batch') have nothing to reduce and
+    always report 'none'."""
+    if mode not in ("query", "query2d") or tp_size <= 1:
+        return "none"
+    if grad_reduce == "auto":
+        return "ring"
+    return grad_reduce
+
+
+def _build_sharded_exec(spec, inner_exec, inner_spec, mesh, mode, dp, tp,
+                        tp_size: int, grad_reduce: str):
+    from repro.sharding import rules
+
     from jax.sharding import PartitionSpec as P
 
-    if mode == "query":
-        # value replicated over tp; queries split.  Backward: shard_map's
-        # transpose psums the per-shard partial grad_value slabs — the
-        # TPU-idiomatic realisation of the paper's staggered scatter
-        # (contention eliminated via partial accumulators + reduction).
+    if mode == "query2d":
+        # queries tiled over dp x tp jointly; heads, batch and the value
+        # tensor replicated — the whole mesh works one huge-Q problem
+        # (the 87k-query encoder) instead of only the tp slice of it.
+        qaxes = rules.flat_axes(dp) + rules.flat_axes(tp)
+        vspec = P(None, None, None, None)
+        qspec = P(None, qaxes, None, None, None, None)
+        wspec = P(None, qaxes, None, None, None)
+        ospec = P(None, qaxes, None)
+    elif mode == "query":
+        # value replicated over tp; queries split.  Backward: the
+        # per-shard partial grad_value slabs are reduced over tp — by
+        # the explicit ppermute ring below (default), or by shard_map's
+        # transpose psum when grad_reduce="psum" — the TPU-idiomatic
+        # realisation of the paper's staggered scatter (contention
+        # eliminated via partial accumulators + reduction).
         vspec = P(dp, None, None, None)
         qspec = P(dp, tp, None, None, None, None)
         wspec = P(dp, tp, None, None, None)
@@ -732,7 +954,60 @@ def _build_sharded_exec(spec, inner_exec, inner_spec, mesh, mode, dp, tp):
         out = inner_exec(v, l, a)
         return out.reshape(l.shape[0], l.shape[1], Hd)
 
-    return _shard_map_compat(run, mesh, (vspec, qspec, wspec), ospec)
+    fwd_sharded = _shard_map_compat(run, mesh, (vspec, qspec, wspec), ospec)
+    reduce = _resolve_grad_reduce(grad_reduce, mode, tp_size)
+    if reduce == "none":
+        return fwd_sharded
+
+    # Explicit grad_value reduction: shard_map's transpose would emit
+    # one monolithic all-reduce of the full fp32 slab per backward.
+    # Instead the backward runs as its own shard_map whose body computes
+    # the per-shard partial slab and reduces it hierarchically — over
+    # the tp axis first, then psum over the dp axes when value is
+    # replicated there too (2D mode), matching the ICI-ring-then-DCN
+    # topology.  The tp leg is the raced axis: a ppermute ring
+    # (``msda_bwd.ring_allreduce`` — one slab shard resident per hop,
+    # QUILL-style) by default, or a plain psum under
+    # ``grad_reduce="psum"`` (the ablation/parity baseline — identical
+    # structure, so the two paths differ ONLY in the tp reduction).
+    # The per-shard forward is recomputed inside the backward (remat at
+    # the shard_map boundary): at dp x tp scale the residual slabs would
+    # otherwise sit resident across the whole ring schedule.
+    from repro.kernels import msda_bwd
+
+    dp_axes = rules.flat_axes(dp)
+    accum = jnp.dtype(spec.accum_dtype)
+
+    def bwd_shard(v, l, a, g):
+        _, vjp = jax.vjp(run, v, l, a)
+        gv, gl, ga = vjp(g)
+        vdt = gv.dtype
+        # reduce the slab in the widened accum dtype: cross-shard adds
+        # must not round through a narrow operand dtype between hops
+        gv = gv.astype(accum)
+        if reduce == "ring":
+            gv = msda_bwd.ring_allreduce(gv, tp, tp_size, axis=1)
+        else:
+            gv = jax.lax.psum(gv, tp)
+        if mode == "query2d" and dp_axes:
+            gv = jax.lax.psum(gv, dp_axes)
+        return gv.astype(vdt), gl, ga
+
+    bwd_sharded = _shard_map_compat(
+        bwd_shard, mesh, (vspec, qspec, wspec, ospec), (vspec, qspec, wspec))
+
+    @jax.custom_vjp
+    def op(v, l, a):
+        return fwd_sharded(v, l, a)
+
+    def op_fwd(v, l, a):
+        return fwd_sharded(v, l, a), (v, l, a)
+
+    def op_bwd(res, g):
+        return bwd_sharded(*res, g)
+
+    op.defvjp(op_fwd, op_bwd)
+    return op
 
 
 # --------------------------------------------------------------------------
@@ -751,11 +1026,20 @@ class MsdaPlan:
     spec: MsdaSpec
     backend: str
     tuning: PlanTuning
-    sharding_mode: str  # 'local' | 'replicated' | 'batch' | 'head' | 'query'
+    # 'local' | 'replicated' | 'batch' | 'head' | 'query' | 'query2d'
+    sharding_mode: str
     # the per-shard geometry the tuning was computed for (== spec for
-    # unsharded plans; Q or H divided by tp for query-/head-parallel ones)
+    # unsharded plans; Q or H divided by the sharded axes otherwise)
     local_spec: MsdaSpec
     _exec: Callable = dataclasses.field(repr=False, compare=False)
+    # -- distribution record (how the mode above maps onto the mesh) ------
+    # kept as plain tuples/strings (no device objects) so the plan store
+    # can persist them and a restored process can validate its own mesh
+    mesh_axes: Tuple[str, ...] = ()
+    mesh_shape: Tuple[int, ...] = ()
+    query_parallel: bool = False
+    # 'none' (no cross-shard grad_value reduction) | 'ring' | 'psum'
+    grad_reduce: str = "none"
 
     def __call__(self, value: jax.Array, sampling_locations: jax.Array,
                  attention_weights: jax.Array) -> jax.Array:
@@ -822,20 +1106,72 @@ class MsdaPlan:
             })
         return rows
 
+    def sharding_report(self) -> Dict[str, Any]:
+        """Structured record of the committed distribution.
+
+        Which mesh axes shard which operand dims, plus the grad_value
+        reduction strategy — the facts ``describe()``'s mesh line prints
+        and the plan store persists.  Empty-axes dict for local plans.
+        """
+        sizes = dict(zip(self.mesh_axes, self.mesh_shape))
+        dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+        tp = "model" if "model" in sizes else None
+        mode = self.sharding_mode
+        q_axes: Tuple[str, ...] = ()
+        h_axes: Tuple[str, ...] = ()
+        b_axes: Tuple[str, ...] = ()
+        if mode == "query2d":
+            q_axes = dp_axes + ((tp,) if tp else ())
+        elif mode == "query":
+            q_axes, b_axes = ((tp,) if tp else ()), dp_axes
+        elif mode == "head":
+            h_axes, b_axes = ((tp,) if tp else ()), dp_axes
+        elif mode == "batch":
+            b_axes = dp_axes
+        return {
+            "mode": mode,
+            "mesh": sizes,
+            "query_axes": q_axes,
+            "head_axes": h_axes,
+            "batch_axes": b_axes,
+            "query_parallel": self.query_parallel,
+            "grad_reduce": self.grad_reduce,
+        }
+
     def describe(self) -> str:
         """Human-readable plan report.
 
-        One line per level with the committed ``block_q``, slab bytes /
-        VMEM occupancy, the gather path, and — the mixed-precision axis —
-        the **chosen slab dtype variant** per level (``slab_dt`` column:
-        fp32, or bf16 when the policy/autotune committed a narrow slab;
-        accumulation stays in ``accum_dtype``, shown in the header).
+        The header states the resolved sharding MODE; mesh-carrying
+        plans add a ``mesh:`` line with the topology, which mesh axes
+        shard which operand dims, the per-shard geometry, and the
+        committed grad_value reduction (``ring`` / ``psum`` / ``local``)
+        — so the report is the full distribution contract, not just the
+        mode name.  Then one line per level with the committed
+        ``block_q``, slab bytes / VMEM occupancy, the gather path, and —
+        the mixed-precision axis — the **chosen slab dtype variant** per
+        level (``slab_dt`` column: fp32, or bf16 when the policy /
+        autotune committed a narrow slab; accumulation stays in
+        ``accum_dtype``, shown in the header).
         """
         s = self.spec
         shard_note = ""
+        if self.mesh_axes:
+            r = self.sharding_report()
+            dims = []
+            if r["batch_axes"]:
+                dims.append("B->" + "+".join(r["batch_axes"]))
+            if r["query_axes"]:
+                dims.append("Q->" + "+".join(r["query_axes"]))
+            if r["head_axes"]:
+                dims.append("H->" + "+".join(r["head_axes"]))
+            gr = self.grad_reduce if self.grad_reduce != "none" else "local"
+            shard_note = (
+                f"  mesh: {mesh_token_from(self.mesh_axes, self.mesh_shape)}  "
+                f"{'  '.join(dims) if dims else 'replicated'}  "
+                f"grad_value={gr}\n")
         if self.local_spec is not self.spec:
-            shard_note = (f"  per-shard: Q={self.local_spec.num_queries} "
-                          f"H={self.local_spec.num_heads} (levels below are per shard)\n")
+            shard_note += (f"  per-shard: Q={self.local_spec.num_queries} "
+                           f"H={self.local_spec.num_heads} (levels below are per shard)\n")
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
             f"sharding={self.sharding_mode}, train={s.train}, dtype={s.dtype}, "
@@ -894,6 +1230,8 @@ def msda_plan(
     tune: str = "heuristic",
     mesh=None,
     query_parallel: bool = False,
+    sharding: str = "auto",
+    grad_reduce: str = "auto",
     block_q: Optional[Tuple[int, ...]] = None,
     interpret: Optional[bool] = None,
 ) -> MsdaPlan:
@@ -903,11 +1241,24 @@ def msda_plan(
     (Fig. 7); ``"autotune"`` times candidate block plans on synthetic
     operands and persists winners per (device kind, spec) on disk.
     ``block_q`` overrides both (ablation hook).  ``mesh`` bakes the
-    shard_map wiring (dp over batch, tp over heads — or queries with
-    ``query_parallel=True``) into the returned plan.
+    shard_map wiring into the returned plan; ``sharding`` picks the
+    distribution family — ``"auto"`` walks the ladder (and, under
+    ``tune="autotune"``, RACES 1D vs 2D and persists the winner per
+    mesh topology), ``"1d"`` pins the classic query/head/batch ladder,
+    ``"2d"`` forces dp x tp query tiling when legal.  ``grad_reduce``
+    picks the query-sharded backward's grad_value reduction:
+    ``"ring"`` (default via "auto") circulates the fp32 slab over the
+    tp axis with ppermute, ``"psum"`` keeps shard_map's transpose
+    all-reduce (ablation / parity baseline).
     """
     if tune not in ("heuristic", "autotune"):
         raise ValueError(f"unknown tune mode {tune!r}; use 'heuristic' or 'autotune'")
+    if sharding not in SHARDING_CHOICES:
+        raise ValueError(
+            f"unknown sharding {sharding!r}; one of {SHARDING_CHOICES}")
+    if grad_reduce not in GRAD_REDUCE_CHOICES:
+        raise ValueError(
+            f"unknown grad_reduce {grad_reduce!r}; one of {GRAD_REDUCE_CHOICES}")
     backend_name = registry.resolve_backend(backend)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -915,7 +1266,8 @@ def msda_plan(
         mesh = None  # single-device mesh: sharding is a no-op
 
     key = (spec, backend_name, tune, tuple(block_q) if block_q else None,
-           bool(interpret), _mesh_cache_key(mesh), bool(query_parallel))
+           bool(interpret), _mesh_cache_key(mesh), bool(query_parallel),
+           sharding, grad_reduce)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _CACHE_STATS["hits"] += 1
@@ -943,14 +1295,36 @@ def msda_plan(
 
     if mesh is None:
         exec_fn, tuning = build_local(spec)
-        mode, local_spec = "local", spec
+        plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
+                        sharding_mode="local", local_spec=spec, _exec=exec_fn)
     else:
-        mode, dp, tp, tp_size, local_spec = _plan_sharding(spec, mesh, query_parallel)
-        inner_exec, tuning = build_local(local_spec)
-        exec_fn = _build_sharded_exec(spec, inner_exec, local_spec, mesh, mode, dp, tp)
-
-    plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
-                    sharding_mode=mode, local_spec=local_spec, _exec=exec_fn)
+        shard_choice, prebuilt = sharding, None
+        # the 1D-vs-2D race rides on query-parallel INTENT: 2D is the
+        # huge-Q encoder's axis, so plans that never asked to tile
+        # queries (head/batch users) are not surprise-resharded by a
+        # timing run
+        if tune == "autotune" and sharding == "auto" and query_parallel:
+            shard_choice, prebuilt = _autotune_sharding(
+                spec, backend_name, mesh, query_parallel, grad_reduce,
+                build_local)
+        if prebuilt is not None:
+            # the race already built (and block-planned) the winner
+            exec_fn, tuning, (mode, dp, tp, tp_size, local_spec) = prebuilt
+        else:
+            mode, dp, tp, tp_size, local_spec = _plan_sharding(
+                spec, mesh, query_parallel, shard_choice)
+            inner_exec, tuning = build_local(local_spec)
+            exec_fn = _build_sharded_exec(
+                spec, inner_exec, local_spec, mesh, mode, dp, tp, tp_size,
+                grad_reduce)
+        plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
+                        sharding_mode=mode, local_spec=local_spec,
+                        _exec=exec_fn,
+                        mesh_axes=tuple(mesh.axis_names),
+                        mesh_shape=tuple(int(s) for s in mesh.devices.shape),
+                        query_parallel=bool(query_parallel),
+                        grad_reduce=_resolve_grad_reduce(
+                            grad_reduce, mode, tp_size))
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)

@@ -31,6 +31,41 @@ def make_debug_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def parse_mesh_shape(token: str):
+    """'1'/'none'/'local' -> None (no mesh); 'DPxTP' (e.g. '2x2') -> (dp, tp).
+
+    The one parser for mesh-shape CLI tokens (``launch/serve.py
+    --mesh``, ``benchmarks/sweep.py --mesh-shapes``) — raises ValueError
+    naming the offending token so callers can report-and-continue.
+    """
+    if token in ("1", "none", "local"):
+        return None
+    parts = str(token).lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() and int(p) > 0 for p in parts):
+        raise ValueError(
+            f"bad mesh shape {token!r}: use '1' (no mesh) or 'DPxTP' like 2x2")
+    return int(parts[0]), int(parts[1])
+
+
+def make_mesh_2d(dp: int, tp: int):
+    """(data=dp, model=tp) mesh over the first dp*tp local devices.
+
+    The small-mesh constructor behind the 2D (dp x tp) MSDA sharding
+    tests and the benchmark sweep's mesh axis: on a host split into N
+    virtual CPU devices it yields a real multi-device mesh whose
+    collectives (ring ppermute, psum) actually execute, and on TPU it is
+    just a sub-slice mesh.  Raises if fewer than dp*tp devices exist.
+    """
+    n = dp * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"mesh {dp}x{tp} needs {n} devices, have {len(devs)}")
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(dp, tp), ("data", "model"))
+
+
 def chips(mesh) -> int:
     n = 1
     for s in mesh.devices.shape:

@@ -137,6 +137,11 @@ def main() -> None:
     ap.add_argument("--tune", default=None, choices=("heuristic", "autotune"))
     ap.add_argument("--warm-lengths", type=int, nargs="*", default=None,
                     help="prompt lengths to AOT-compile prefill for at boot")
+    ap.add_argument("--mesh", default=None, metavar="DPxTP",
+                    help="build a (data=DP, model=TP) mesh and warm "
+                         "DISTRIBUTED plans (e.g. 2x2; needs DP*TP local "
+                         "devices); the plan store then records/restores "
+                         "the sharding modes — see docs/sharding.md")
     ap.add_argument("--serving-smoke", action="store_true",
                     help="self-asserting double-boot CI smoke (see docstring)")
     args = ap.parse_args()
@@ -154,12 +159,23 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    mesh = None
+    if args.mesh:
+        from repro.launch import mesh as mesh_lib
+
+        try:
+            shape = mesh_lib.parse_mesh_shape(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
+        if shape is not None:
+            mesh = mesh_lib.make_mesh_2d(*shape)
     params = train_state.init_model(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, slots=args.slots or 4,
                       capacity=args.capacity or 128,
                       temperature=args.temperature, store_path=args.store,
                       compile_cache_dir=args.compile_cache,
-                      dtype_policy=args.dtype_policy, tune=args.tune)
+                      dtype_policy=args.dtype_policy, tune=args.tune,
+                      mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = []
     for i, p in enumerate(args.prompts):

@@ -1,5 +1,14 @@
 """Serving engine: batched prefill + decode with continuous batching.
 
+Contract (``docs/serving.md``): all latency-shaped work — plan
+construction, autotune races, XLA compilation — happens at boot, never
+at request time.  Plans restore from a ``PlanStore`` (zero races; a
+mesh-carrying boot passes ``mesh=`` and gets identical distributed
+plans), ``warmup()`` AOT-compiles every request-shape executor, and the
+``aot.probe()`` counters prove zero request-time traces.  Requests then
+flow through a fixed slot pool: retire, admit (vlm: bucket-padded
+pyramid batches), one fused decode per tick.
+
 ``make_serve_fns(cfg)`` returns the pure jittable pair used by both the
 engine and the dry-run cells:
 
@@ -106,7 +115,7 @@ def make_serve_fns(cfg, *, dtype_policy: Optional[str] = None,
 
 
 def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None,
-                      tune: Optional[str] = None, buckets=None):
+                      tune: Optional[str] = None, buckets=None, mesh=None):
     """Pre-build every MsdaPlan a serving process will execute.
 
     Returns the plans (empty tuple for pure-LM families) so callers can
@@ -119,7 +128,9 @@ def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None,
     ``tune`` similarly overrides the config's tune mode (the sweep CLI
     forces "autotune").  ``buckets`` (vlm): warm one resampler plan per
     bucket geometry instead of the config's single pyramid — the set the
-    bucketed batcher actually serves.
+    bucketed batcher actually serves.  ``mesh``: warm DISTRIBUTED plans
+    (the sharding ladder — incl. the 2D dp x tp mode — commits per plan
+    at warm-up, exactly like blocks and slab dtypes).
     """
     plans = []
     if getattr(cfg, "vision", None) is not None:
@@ -133,13 +144,13 @@ def warmup_msda_plans(cfg, *, dtype_policy: Optional[str] = None,
             plans.append(msda_mod.attention_plan(
                 mc, num_queries=vc.num_visual_tokens,
                 head_dim=vc.vision_dim // mc.num_heads, dtype=cfg.dtype,
-                dtype_policy=dtype_policy, tune=tune))
+                dtype_policy=dtype_policy, tune=tune, mesh=mesh))
     if getattr(cfg, "msda", None) is not None:
         from repro.core import deformable_transformer as dt
 
         plans.extend(
             dt.msda_plans(cfg, dtype=cfg.dtype, dtype_policy=dtype_policy,
-                          tune=tune).values())
+                          tune=tune, mesh=mesh).values())
     return tuple(plans)
 
 
@@ -179,6 +190,29 @@ def _pow2_batches(slots: int) -> Tuple[int, ...]:
     return tuple(sorted(sizes))
 
 
+def _batch_quantum(mesh) -> int:
+    """Smallest legal batch for mesh-carrying plans (1 without a mesh).
+
+    The 1D sharded modes ('query', 'head', 'batch') shard BATCH over the
+    dp axes, so every batch that reaches a distributed plan must be a
+    multiple of the dp width — the engine quantizes its admitted batch
+    ladder to it rather than letting shard_map reject a size-1 prefill
+    at request time."""
+    if mesh is None:
+        return 1
+    from repro.sharding import rules
+
+    return rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
+
+
+def _quantize_batches(sizes, quantum: int, slots: int) -> Tuple[int, ...]:
+    """Round each admitted batch size up to the quantum, capped at the
+    slot count (slots is asserted to be a multiple of the quantum)."""
+    q = max(1, int(quantum))
+    out = {min(slots, -(-int(b) // q) * q) for b in sizes}
+    return tuple(sorted(out))
+
+
 def _diff_axis(a, b) -> int:
     """First axis where two cache-leaf avals differ (-1: no batch axis)."""
     if a.shape == b.shape:
@@ -212,7 +246,8 @@ class ServeEngine:
                  compile_cache_dir: Optional[str] = None,
                  dtype_policy: Optional[str] = None,
                  tune: Optional[str] = None,
-                 buckets=None, metrics: Optional[ServeMetrics] = None):
+                 buckets=None, metrics: Optional[ServeMetrics] = None,
+                 mesh=None):
         from repro.models import lm
 
         if cfg.family not in _LM_FAMILIES + ("vlm",):
@@ -243,14 +278,24 @@ class ServeEngine:
 
         # -- plans: restore from the store, or warm fresh + persist -------
         # The meta gate covers every axis that changes which SPECS the
-        # engine serves (arch, dtype policy, tune mode, bucket ladder):
-        # restoring a store written under different axes would AOT the
-        # wrong plans and re-race the right ones on a nominally warm boot.
+        # engine serves (arch, dtype policy, tune mode, bucket ladder,
+        # mesh topology): restoring a store written under different axes
+        # would AOT the wrong plans and re-race the right ones on a
+        # nominally warm boot.
+        from repro.kernels import plan as plan_mod
+
+        self.mesh = mesh
+        self._batch_q = _batch_quantum(mesh)
+        if self.is_vlm and slots % self._batch_q:
+            raise ValueError(
+                f"slots={slots} must be a multiple of the mesh's dp width "
+                f"{self._batch_q}: distributed plans shard batch over dp")
         self._store_meta = {
             "arch": cfg.name,
             "dtype_policy": dtype_policy or "follow",
             "tune": tune or "heuristic",
             "buckets": [b.key for b in self.buckets],
+            "mesh": plan_mod.mesh_token(mesh) if mesh is not None else None,
         }
         self.store = persistence.PlanStore(store_path) if store_path else None
         self.restore_report = None
@@ -259,15 +304,17 @@ class ServeEngine:
         existing = self.store.load() if self.store is not None else None
         if existing is not None:
             stored_meta = existing.get("meta", {})
+            # v1 stores carry no "mesh" key: treat absent as None so a
+            # mesh-less boot keeps restoring its pre-2D stores unchanged
             if all(stored_meta.get(k) == v for k, v in self._store_meta.items()):
-                self.restore_report = self.store.restore()
+                self.restore_report = self.store.restore(mesh=mesh)
                 self.plans = tuple(self.restore_report.plans)
             else:
                 self.store_meta_mismatch = True
         if not self.plans:
             self.plans = warmup_msda_plans(
                 cfg, dtype_policy=dtype_policy, tune=tune,
-                buckets=self.buckets or None)
+                buckets=self.buckets or None, mesh=mesh)
             # Persist only onto an empty/unreadable path: a loadable store
             # whose meta doesn't match this boot belongs to a DIFFERENTLY
             # CONFIGURED fleet (e.g. a sweep artifact) — overwriting it
@@ -298,15 +345,29 @@ class ServeEngine:
         self._decode_jit = jax.jit(aot.traced(self._decode_model, "decode"))
         self._aot: Dict[Any, aot.AotExecutor] = {}
         self.plan_executors: Dict[Any, aot.AotExecutor] = {}
-        self._batch_ladder = _pow2_batches(slots)
+        self._batch_ladder = _quantize_batches(
+            _pow2_batches(slots), self._batch_q, slots)
 
     # -- AOT warm-up -------------------------------------------------------
     def _vlm_prefill_fn(self, bucket) -> Callable:
         prefill, capacity, levels = self._serve_prefill, self.capacity, bucket.levels
+        mesh = self.mesh
 
         def f(params, pyramid, ratios, tokens):
-            return prefill(params, pyramid, tokens, capacity,
-                           levels=levels, valid_ratios=ratios)
+            if mesh is None:
+                return prefill(params, pyramid, tokens, capacity,
+                               levels=levels, valid_ratios=ratios)
+            # install the mesh at TRACE time: attention_plan resolves
+            # the mesh via rules.current_mesh(), so without this the
+            # request path would silently build fresh LOCAL plans while
+            # the distributed plans the boot warmed/restored never
+            # serve — the zero-retrace contract requires the prefill
+            # trace to fetch exactly the warmed mesh-carrying plans
+            from repro.sharding import rules
+
+            with rules.use_mesh(mesh):
+                return prefill(params, pyramid, tokens, capacity,
+                               levels=levels, valid_ratios=ratios)
 
         return f
 
@@ -335,8 +396,15 @@ class ServeEngine:
             batch_sizes = _pow2_batches(self.slots)
         # admission pads to THIS ladder — it must be exactly the warmed
         # set, or a padded batch size would miss the AOT table and hit
-        # the jit fallback at request time
-        self._batch_ladder = tuple(sorted({int(b) for b in batch_sizes}))
+        # the jit fallback at request time.  Quantized to the mesh's dp
+        # width: sizes a distributed plan cannot execute are never
+        # compiled or admitted.
+        batch_sizes = _quantize_batches(batch_sizes, self._batch_q, self.slots)
+        self._batch_ladder = batch_sizes
+        # standalone plan executors obey the same quantum (uncapped)
+        plan_batch_sizes = tuple(sorted(
+            {-(-int(b) // self._batch_q) * self._batch_q
+             for b in plan_batch_sizes}))
         for L in prompt_lengths:
             if self.is_vlm:
                 vd = self.cfg.vision.vision_dim
@@ -446,6 +514,13 @@ class ServeEngine:
             fn = self._aot.get(key) or self._vlm_prefill(batch.bucket)
             logits, cache_b = fn(self.params, jnp.asarray(feats),
                                  jnp.asarray(ratios), jnp.asarray(tokens))
+            if self.mesh is not None:
+                # a mesh-carrying prefill commits its outputs to the
+                # mesh (NamedSharding); decode is a single-device AOT
+                # executable, so pull the (replicated) cache rows back
+                # before they are spliced into the decode cache
+                dev = jax.devices()[0]
+                cache_b = jax.tree.map(lambda x: jax.device_put(x, dev), cache_b)
             logits = np.asarray(logits)
             for i, req in enumerate(reqs):
                 s = free.pop(0)

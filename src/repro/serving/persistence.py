@@ -34,7 +34,12 @@ import jax
 
 from repro.kernels import plan as plan_mod
 
-PLAN_STORE_VERSION = 1
+# v2 grew the optional per-entry "sharding" record (distributed plans:
+# mode, mesh axes/shape, query_parallel, grad_reduce) and the mesh-keyed
+# winner seeding that goes with it.  v1 stores (local plans only) load
+# unchanged; entries a NEWER schema writes still degrade per entry.
+PLAN_STORE_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 def _device_kind() -> str:
@@ -77,18 +82,23 @@ class PlanStore:
 
     # -- save --------------------------------------------------------------
     def save_plans(self, plans: Sequence, *, meta: Optional[Dict[str, Any]] = None) -> int:
-        """Serialise every local plan; returns the number stored.
+        """Serialise every plan — local AND distributed; returns the count.
 
-        Mesh-carrying (sharded) plans are skipped: a mesh is a property
-        of the restarted process's device topology, not of the store.
         Autotuned plans store their winner; heuristic plans re-derive
         their blocks deterministically at restore (same spec, same
         device kind -> same plan), so nothing extra is persisted.
+
+        Mesh-carrying plans store their distribution record (mode, mesh
+        axes + shape, query_parallel, grad_reduce) — NOT device objects;
+        a restarted process supplies its own mesh to ``restore(mesh=...)``
+        and the entry only applies when the topology matches, so a store
+        written on a 2x2 slice never silently mis-shards a 1x4 boot.
+        The winner of a sharded plan is keyed on its LOCAL (per-shard)
+        spec plus a mesh-keyed 1D-vs-2D entry; both are re-seeded at
+        restore so the rebuild races nothing.
         """
         entries = []
         for plan in plans:
-            if plan.sharding_mode != "local":
-                continue
             src = plan.tuning.source
             entry: Dict[str, Any] = {
                 "spec": plan_mod.spec_to_json(plan.spec),
@@ -98,6 +108,14 @@ class PlanStore:
                 "device_kind": _device_kind(),
                 "describe": plan.describe(),
             }
+            if plan.sharding_mode != "local":
+                entry["sharding"] = {
+                    "mode": plan.sharding_mode,
+                    "mesh_axes": list(plan.mesh_axes),
+                    "mesh_shape": [int(s) for s in plan.mesh_shape],
+                    "query_parallel": bool(plan.query_parallel),
+                    "grad_reduce": plan.grad_reduce,
+                }
             if src == "override":
                 entry["block_q"] = [int(b) for b in plan.tuning.block_q]
             if src.startswith("autotune"):
@@ -129,11 +147,11 @@ class PlanStore:
                 data = json.load(f)
         except (OSError, ValueError):
             return None
-        if not isinstance(data, dict) or data.get("version") != PLAN_STORE_VERSION:
+        if not isinstance(data, dict) or data.get("version") not in _READABLE_VERSIONS:
             return None
         return data
 
-    def restore(self, *, verify_describe: bool = True) -> RestoreReport:
+    def restore(self, *, mesh=None, verify_describe: bool = True) -> RestoreReport:
         """Rebuild every stored plan; zero autotune races, by seeding.
 
         For each entry: the persisted winner (if any, and if recorded on
@@ -142,6 +160,15 @@ class PlanStore:
         hit — plan construction runs, timing does not.  Entries that
         fail to parse (newer schema, unknown backend) are recorded in
         ``report.skipped`` and the boot proceeds cold for them.
+
+        ``mesh``: the restarting process's mesh.  A distributed entry is
+        rebuilt only when the mesh's (axis names, shape) match the
+        entry's record — its winner is then ALSO seeded under the
+        mesh-keyed 1D-vs-2D race key and its local (per-shard) spec key,
+        and the plan is rebuilt with the stored mode PINNED, so the
+        restore performs zero sharding races and zero block races.
+        Distributed entries with no/mismatched mesh are skipped
+        (degrade, never die — same contract as every other field).
         """
         report = RestoreReport()
         data = self.load()
@@ -150,24 +177,81 @@ class PlanStore:
         here = _device_kind()
         # pass 1: parse specs + batch-seed every winner (one cache write)
         parsed = []
+        seeds = []
         for i, entry in enumerate(data.get("entries", ())):
             try:
-                parsed.append((i, entry, plan_mod.spec_from_json(entry["spec"])))
+                spec = plan_mod.spec_from_json(entry["spec"])
+                shard = entry.get("sharding")
+                choice = None
+                if shard is not None:
+                    if mesh is None:
+                        raise ValueError(
+                            f"distributed entry ({shard.get('mode')}) needs a mesh")
+                    if (list(mesh.axis_names) != list(shard["mesh_axes"])
+                            or [int(s) for s in mesh.devices.shape]
+                            != [int(s) for s in shard["mesh_shape"]]):
+                        raise ValueError(
+                            f"mesh mismatch: store has "
+                            f"{plan_mod.mesh_token_from(shard['mesh_axes'], shard['mesh_shape'])}, "
+                            f"process has {plan_mod.mesh_token(mesh)}")
+                    choice = "2d" if shard["mode"] == "query2d" else "1d"
+                parsed.append((i, entry, spec, shard, choice))
             except Exception as e:  # noqa: BLE001 — degrade per entry, never die
                 report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
-        report.seeded_winners = plan_mod.seed_autotune_winners(
-            (spec, entry["backend"], entry["winner"])
-            for i, entry, spec in parsed
-            if entry.get("winner") is not None and entry.get("backend")
-            and entry.get("device_kind", here) == here)
+                continue
+            if (entry.get("winner") is not None and entry.get("backend")
+                    and entry.get("device_kind", here) == here):
+                if shard is None:
+                    seeds.append((spec, entry["backend"], entry["winner"]))
+                else:
+                    qp = bool(shard.get("query_parallel"))
+                    # the block/dtype winner belongs to the LOCAL spec
+                    # (the geometry the race actually timed) ...
+                    _, local_spec = plan_mod.resolve_sharding(
+                        spec, mesh, qp, choice)
+                    seeds.append((local_spec, entry["backend"], entry["winner"]))
+                    # ... and the sharding choice to the mesh-keyed race
+                    seeds.append((spec, entry["backend"],
+                                  dict(entry["winner"], sharding=choice),
+                                  plan_mod.mesh_winner_suffix(mesh, qp)))
+        report.seeded_winners = plan_mod.seed_autotune_winners(seeds)
         # pass 2: rebuild the plans (autotune resolves via the seeds)
-        for i, entry, spec in parsed:
+        for i, entry, spec, shard, choice in parsed:
             try:
                 block_q = entry.get("block_q")
-                plan = plan_mod.msda_plan(
-                    spec, backend=entry["backend"],
+                kwargs: Dict[str, Any] = {}
+                if shard is not None:
+                    kwargs = dict(
+                        mesh=mesh,
+                        query_parallel=bool(shard.get("query_parallel")),
+                        grad_reduce=shard.get("grad_reduce") or "auto")
+                    if kwargs["grad_reduce"] == "none":
+                        kwargs["grad_reduce"] = "auto"
+                common = dict(
+                    backend=entry["backend"],
                     tune=entry.get("tune", "heuristic"),
-                    block_q=tuple(block_q) if block_q else None)
+                    block_q=tuple(block_q) if block_q else None, **kwargs)
+                if shard is not None:
+                    # try sharding="auto" FIRST: the request path
+                    # (attention_plan with the config default) asks for
+                    # "auto", and the plan cache keys on the sharding
+                    # string — restoring under "auto" lets requests hit
+                    # THIS plan object.  The seeded mesh-race winner
+                    # pins "auto" to the stored mode with zero timing;
+                    # if the ladder still resolves differently (e.g. a
+                    # 2d-forced plan below the auto threshold), retry
+                    # with the mode pinned so the rebuild stays exact.
+                    plan = plan_mod.msda_plan(spec, sharding="auto", **common)
+                    if plan.sharding_mode != shard["mode"]:
+                        plan = plan_mod.msda_plan(
+                            spec, sharding=choice, **common)
+                else:
+                    plan = plan_mod.msda_plan(spec, **common)
+                if shard is not None and plan.sharding_mode != shard["mode"]:
+                    report.skipped.append(
+                        f"entry {i}: sharding mode drifted "
+                        f"({shard['mode']} -> {plan.sharding_mode})")
+                    continue
             except Exception as e:  # noqa: BLE001
                 report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
                 continue

@@ -1,5 +1,14 @@
 """Logical-axis sharding rules -> physical PartitionSpecs.
 
+Contract: this module owns the mapping from *logical* axes ('dp', 'tp',
+'ep', 'sp') to *physical* mesh axes, and derives parameter
+PartitionSpecs from leaf names — models never name physical axes, and
+anything that does not divide a physical axis degrades to replicated
+rather than erroring.  The MSDA planner (``repro.kernels.plan``) builds
+its 1D/2D sharding ladder on :func:`resolve_axis` / :func:`axis_size` /
+:func:`flat_axes`, so a mesh-topology change lands here, once.  See
+``docs/sharding.md`` for the full ladder and the 2D (dp x tp) mode.
+
 Logical axes:
   'dp' — data/FSDP axis: batch and the fsdp-sharded dim of weights.
          Maps to ('pod', 'data') on the multi-pod mesh, ('data',) single-pod.
@@ -58,6 +67,27 @@ def resolve_axis(logical: Optional[str], mesh: Mesh):
     raise ValueError(f"unknown logical axis {logical!r}")
 
 
+def flat_axes(axis) -> Tuple[str, ...]:
+    """A resolved physical axis (name | tuple | None) as a flat tuple."""
+    if axis is None:
+        return ()
+    return tuple(axis) if isinstance(axis, tuple) else (axis,)
+
+
+def axis_size(axis, mesh: Mesh) -> int:
+    """Total device count along a resolved physical axis (1 for None).
+
+    Accepts the same name | tuple | None shapes :func:`resolve_axis`
+    returns, so ``axis_size(resolve_axis('dp', mesh), mesh)`` is the
+    data-parallel width even on the multi-pod ('pod', 'data') mesh.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in flat_axes(axis):
+        total *= sizes[a]
+    return total
+
+
 def spec(*logical: Optional[str], mesh: Optional[Mesh] = None) -> P:
     mesh = mesh or current_mesh()
     if mesh is None:
@@ -68,11 +98,7 @@ def spec(*logical: Optional[str], mesh: Optional[Mesh] = None) -> P:
 def _divisible(n: int, axis, mesh: Mesh) -> bool:
     if axis is None:
         return False
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    total = 1
-    for a in axis if isinstance(axis, tuple) else (axis,):
-        total *= sizes[a]
-    return n % total == 0
+    return n % axis_size(axis, mesh) == 0
 
 
 def hint(x: jax.Array, *logical: Optional[str]) -> jax.Array:

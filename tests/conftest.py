@@ -1,8 +1,15 @@
 import os
 
-# Tests run on the single real CPU device (the 512-device override is
-# strictly dryrun.py's, per the assignment).
+# Tests run on CPU (the 512-device override is strictly dryrun.py's, per
+# the assignment).  The host platform is split into 4 virtual devices so
+# the distribution tests can build real 2x2 / 1x4 / 4x1 meshes and run
+# shard_map + ppermute collectives for the 2D (dp x tp) sharding mode;
+# everything else still executes on device 0 as before.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
 
 import jax
 import numpy as np

@@ -153,11 +153,16 @@ cache_entries = st.dictionaries(
     st.text(st.characters(min_codepoint=33, max_codepoint=126), min_size=1, max_size=40),
     st.one_of(
         st.lists(st.integers(8, 2048), min_size=1, max_size=5),  # legacy
-        st.fixed_dictionaries({
-            "block_q": st.lists(st.integers(8, 2048), min_size=2, max_size=2),
-            "slab_dtypes": st.lists(
-                st.sampled_from(["float32", "bfloat16"]), min_size=2, max_size=2),
-        }),
+        st.fixed_dictionaries(
+            {
+                "block_q": st.lists(st.integers(8, 2048), min_size=2, max_size=2),
+                "slab_dtypes": st.lists(
+                    st.sampled_from(["float32", "bfloat16"]), min_size=2, max_size=2),
+            },
+            # mesh-keyed entries grew an OPTIONAL sharding field (the
+            # 1D-vs-2D race winner); plain entries must keep parsing
+            optional={"sharding": st.sampled_from(["1d", "2d"])},
+        ),
     ),
     max_size=4,
 )
@@ -184,9 +189,10 @@ def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entr
         for hit in entries.values():
             parsed = plan_mod._parse_cache_entry(hit, spec)
             if isinstance(hit, dict):  # current schema always parses
-                assert parsed == (tuple(hit["block_q"]), tuple(hit["slab_dtypes"]))
+                assert parsed == (tuple(hit["block_q"]), tuple(hit["slab_dtypes"]),
+                                  hit.get("sharding"))
             elif len(hit) == spec.num_levels:  # legacy: level count must match
-                assert parsed == (tuple(hit), ("float32",) * 2)
+                assert parsed == (tuple(hit), ("float32",) * 2, None)
             else:
                 assert parsed is None
     finally:

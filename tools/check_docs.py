@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs link checker: documented paths must exist, or CI fails.
+
+Scans README.md + docs/**.md for
+
+* inline markdown links ``[text](target)`` — relative targets must
+  resolve to a real file/dir (anchors stripped; http(s) links are not
+  fetched, CI must stay hermetic);
+* fenced-code / backtick references to repo paths (``src/...``,
+  ``tests/...``, ``docs/...``, ``benchmarks/...``, ``examples/...``,
+  ``tools/...``) — a doc naming a module that was moved/renamed rots
+  silently otherwise.
+
+Run from the repo root (CI: the ``docs`` job, which also executes the
+README quickstart via ``examples/quickstart.py``):
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path`-style references to tracked top-level trees
+PATH_RE = re.compile(
+    r"`((?:src|tests|docs|benchmarks|examples|tools)/[A-Za-z0-9_./-]+)`")
+
+
+def doc_files():
+    yield os.path.join(ROOT, "README.md")
+    docs = os.path.join(ROOT, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            yield os.path.join(docs, name)
+
+
+def check_file(path: str):
+    errors = []
+    text = open(path).read()
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue  # pure-anchor link within the page
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            errors.append(f"broken link: ({m.group(1)})")
+    for m in PATH_RE.finditer(text):
+        if not os.path.exists(os.path.join(ROOT, m.group(1))):
+            errors.append(f"dangling path reference: `{m.group(1)}`")
+    return errors
+
+
+def main() -> int:
+    total = 0
+    for path in doc_files():
+        rel = os.path.relpath(path, ROOT)
+        for err in check_file(path):
+            print(f"{rel}: {err}")
+            total += 1
+    n_files = len(list(doc_files()))
+    if total:
+        print(f"FAILED: {total} problem(s) across {n_files} docs")
+        return 1
+    print(f"OK: {n_files} docs, all links and path references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
