@@ -277,6 +277,82 @@ def backend_dtype_matrix():
 
 
 # --------------------------------------------------------------------------
+# fused whole-pyramid vs per-level launches (PR 5 tentpole ablation)
+# --------------------------------------------------------------------------
+
+
+def fused_vs_per_level(out_path=None):
+    """Fused single-launch pyramid vs per-level launches, fwd and train.
+
+    Interpret-mode wall time is NOT a TPU prediction (the kernel body
+    runs in Python per grid step); what transfers is the STRUCTURE this
+    row reports: launches per direction (1 vs L), gout streams in the
+    backward (1 vs L), and HBM round-trips of fp32 partial outputs
+    (0 vs L-1).  Writes the ``BENCH_kernels.json`` trajectory file at
+    the repo root (CI uploads it per commit) and prints the CSV rows.
+    """
+    import dataclasses
+    import json
+    import os
+
+    levels = ((16, 16), (8, 8), (4, 4))
+    q, b, h = 64, 1, 2
+    S = sum(hh * ww for hh, ww in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    value = jax.random.normal(ks[0], (b, S, h, D))
+    loc = jax.random.uniform(ks[1], (b, q, h, L, P, 2))
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (b, q, h, L, P)).reshape(b, q, h, -1)
+    ).reshape(b, q, h, L, P)
+    gout = jax.random.normal(ks[3], (b, q, h * D))
+
+    print("# Fused whole-pyramid vs per-level launches (interpret mode)")
+    results = {}
+    for train in (False, True):
+        spec = plan_mod.MsdaSpec(
+            spatial_shapes=levels, num_heads=h, head_dim=D, num_points=P,
+            num_queries=q, dtype="float32", train=train)
+        plans = {fuse: plan_mod.msda_plan(
+            dataclasses.replace(spec, fuse_levels=fuse), backend="pallas")
+            for fuse in ("on", "off")}
+        if train:
+            fns = {fuse: jax.jit(jax.grad(
+                lambda v, l, a, p=p: jnp.vdot(p(v, l, a), gout),
+                argnums=(0, 1, 2))) for fuse, p in plans.items()}
+        else:
+            fns = {fuse: jax.jit(lambda v, l, a, p=p: p(v, l, a))
+                   for fuse, p in plans.items()}
+        t = _time_interleaved(fns, (value, loc, attn), iters=3)
+        tag = "train" if train else "fwd"
+        for fuse, us in t.items():
+            mode = "fused" if fuse == "on" else "per_level"
+            launches = (2 if fuse == "on" else 2 * L) if train else (
+                1 if fuse == "on" else L)
+            results[f"{tag}.{mode}"] = {"us": us, "launches_per_call": launches}
+            row(f"kernels.{tag}.{mode}", us, f"launches={launches}")
+        row(f"kernels.{tag}.fused_speedup", 0.0,
+            f"x{t['off'] / t['on']:.2f}_vs_per_level")
+        results[f"{tag}.fused_speedup_x"] = t["off"] / t["on"]
+
+    if out_path is None:
+        out_path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_kernels.json")
+    payload = {
+        "bench": "fused_vs_per_level",
+        "geometry": {"levels": [list(hw) for hw in levels], "Q": q, "B": b,
+                     "H": h, "D": D, "P": P},
+        "note": "interpret-mode wall time; structural counters transfer",
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {out_path}")
+    return results
+
+
+# --------------------------------------------------------------------------
 # end-to-end: paper host model (reduced) train step
 # --------------------------------------------------------------------------
 

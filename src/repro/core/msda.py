@@ -101,10 +101,13 @@ def attention_plan(
     default (0 = auto), and ``msda_cfg.dtype_policy`` (overridable per
     call) picks the mixed-precision plan variant — 'follow' | 'float32'
     | 'bfloat16' | 'auto' (see
-    :func:`repro.kernels.plan.resolve_dtype_policy`).  When a mesh is
-    given, ``msda_cfg.sharding`` / ``msda_cfg.grad_reduce`` (both
-    overridable per call) select the distribution family and the
-    grad_value reduction — see ``docs/sharding.md``.
+    :func:`repro.kernels.plan.resolve_dtype_policy`).
+    ``msda_cfg.fuse_levels`` ('auto' | 'on' | 'off') commits the
+    whole-pyramid kernel-fusion rung (one pallas launch per direction
+    when the packed pyramid fits VMEM).  When a mesh is given,
+    ``msda_cfg.sharding`` / ``msda_cfg.grad_reduce`` (both overridable
+    per call) select the distribution family and the grad_value
+    reduction — see ``docs/sharding.md``.
     """
     policy = dtype_policy or getattr(msda_cfg, "dtype_policy", "follow")
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
@@ -119,6 +122,7 @@ def attention_plan(
         vmem_budget=getattr(msda_cfg, "vmem_budget", 0),
         slab_dtype=slab_dtype,
         accum_dtype=accum_dtype,
+        fuse_levels=getattr(msda_cfg, "fuse_levels", "auto"),
     )
     return plan_mod.msda_plan(
         spec,

@@ -30,6 +30,14 @@ Mixed precision: when the plan commits a bf16 value slab, the *inputs*
 genuine **widened accumulator** — allocated and scatter-added in
 ``accum_dtype`` inside the kernel, not a bf16 slab cast afterwards —
 so Q-many scatter contributions never round through bf16.
+
+**Fused whole-pyramid variant** (``msda_bwd_fused``): under the
+planner's fusion rung the whole pyramid's grad slab is the residency
+unit — one ``pallas_call`` streams ``gout`` once, scatter-adds every
+level into a single packed grad super-slab (disjoint row ranges per
+level, so the merged scatter is contention-free), and writes it to HBM
+exactly once, instead of re-streaming ``gout`` and re-launching per
+level.
 """
 from __future__ import annotations
 
@@ -41,6 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import msda_fwd
 from repro.kernels.msda_fwd import _CompilerParams, corner_indices
 
 Shapes = Tuple[Tuple[int, int], ...]
@@ -202,6 +211,211 @@ def msda_bwd_level(
             jax.ShapeDtypeStruct((B, Hh, hwp_rows, D), jnp.dtype(accum_dtype)),
             jax.ShapeDtypeStruct((B, Hh, Q, P, 2), loc_l.dtype),
             jax.ShapeDtypeStruct((B, Hh, Q, P), attn_l.dtype),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+    return gval, gloc, gattn
+
+
+# --------------------------------------------------------------------------
+# fused whole-pyramid backward: ONE pallas launch for all L levels
+# --------------------------------------------------------------------------
+
+
+def _bwd_fused_kernel(
+    value_ref,  # (1, 1, R, D) packed super-slab (None when saved given)
+    loc_ref,    # (1, 1, Qb, L, P, 2)
+    attn_ref,   # (1, 1, Qb, L, P)
+    gout_ref,   # (1, 1, Qb, D)
+    saved_ref,  # (1, 1, Qb, L*4P, D) packed corners (None if regather)
+    gval_ref,   # out: (1, 1, R, D) accum dtype, accumulated across q
+    gloc_ref,   # out: (1, 1, Qb, L, P, 2)
+    gattn_ref,  # out: (1, 1, Qb, L, P)
+    *,
+    hws: Shapes,
+    row_offsets: Tuple[int, ...],
+    fuse_scatter: bool,
+    onehot_levels: Tuple[bool, ...] = (),
+):
+    """Whole-pyramid backward step.
+
+    Phase 1 (grad loc/attn) is the per-level vector math looped over the
+    packed levels; phase 2 scatter-adds EVERY level's corner
+    contribution into the one resident grad super-slab — for the VPU
+    levels via a single merged ``.at[idx].add`` whose indices are lifted
+    by the static per-level row offsets (levels occupy disjoint row
+    ranges, so the merge is contention-free by construction), for
+    one-hot levels via the MXU matmul against their own sub-slab rows.
+    ``gout`` is streamed ONCE for the whole pyramid instead of once per
+    level, and the grad super-slab goes to HBM exactly once.
+    """
+    q_idx = pl.program_id(2)
+
+    loc = loc_ref[0, 0].astype(jnp.float32)  # (Qb, L, P, 2)
+    attn = attn_ref[0, 0].astype(jnp.float32)  # (Qb, L, P)
+    gout = gout_ref[0, 0].astype(jnp.float32)  # (Qb, D)
+    Qb, L, P, _ = loc.shape
+    D = gout.shape[-1]
+
+    cidx, geom = msda_fwd.fused_level_corner_indices(loc, hws)
+    onehot = tuple(onehot_levels) if onehot_levels else (False,) * L
+
+    def _corner_idx(l):
+        return cidx[l]
+
+    # ---- corners: saved by fwd (packed, no gather) or re-gathered --------
+    if saved_ref is not None:
+        packed = saved_ref[0, 0].astype(jnp.float32)  # (Qb, L*4P, D)
+        corners = [
+            [c.reshape(Qb * P, D)
+             for c in jnp.split(packed[:, l * 4 * P:(l + 1) * 4 * P], 4, axis=1)]
+            for l in range(L)
+        ]
+    else:
+        # same routing as the forward: shared helper, directions can't drift
+        corners = msda_fwd.fused_gather_corners(
+            value_ref[0, 0], cidx, row_offsets, onehot, fuse_gather=True)
+
+    # ---- phase 1 per level + collect phase-2 scatter contributions -------
+    glocs, gattns = [], []
+    contribs = [None] * L  # per level: (c00, c10, c01, c11) each (Qb*P, D)
+    for l, (Hl, Wl) in enumerate(hws):
+        lx, ly, (m00, m10, m01, m11) = geom[l]
+        v00, v10, v01, v11 = (c.reshape(Qb, P, D) for c in corners[l])
+        v00 = v00 * m00[..., None]
+        v10 = v10 * m10[..., None]
+        v01 = v01 * m01[..., None]
+        v11 = v11 * m11[..., None]
+        w00 = ((1 - lx) * (1 - ly))[..., None]
+        w10 = (lx * (1 - ly))[..., None]
+        w01 = ((1 - lx) * ly)[..., None]
+        w11 = (lx * ly)[..., None]
+
+        sampled = v00 * w00 + v10 * w10 + v01 * w01 + v11 * w11
+        gattns.append(jnp.einsum("qd,qpd->qp", gout, sampled))
+
+        g_s = attn[:, l][..., None] * gout[:, None, :]  # (Qb,P,D)
+        dpx = ((v10 - v00) * (1 - ly)[..., None] + (v11 - v01) * ly[..., None])
+        dpy = ((v01 - v00) * (1 - lx)[..., None] + (v11 - v10) * lx[..., None])
+        glx = jnp.einsum("qpd,qpd->qp", g_s, dpx) * Wl
+        gly = jnp.einsum("qpd,qpd->qp", g_s, dpy) * Hl
+        glocs.append(jnp.stack([glx, gly], axis=-1))
+
+        contribs[l] = (
+            (g_s * w00 * m00[..., None]).reshape(-1, D),
+            (g_s * w10 * m10[..., None]).reshape(-1, D),
+            (g_s * w01 * m01[..., None]).reshape(-1, D),
+            (g_s * w11 * m11[..., None]).reshape(-1, D),
+        )
+    gattn_ref[0, 0] = jnp.stack(gattns, axis=1).astype(gattn_ref.dtype)
+    gloc_ref[0, 0] = jnp.stack(glocs, axis=1).astype(gloc_ref.dtype)
+
+    # ---- phase 2: scatter-add into the ONE resident grad super-slab ------
+    @pl.when(q_idx == 0)
+    def _init():
+        gval_ref[0, 0] = jnp.zeros_like(gval_ref[0, 0])
+
+    slab = gval_ref[0, 0]
+    vpu = [l for l in range(L) if not onehot[l]]
+    if vpu:
+        if fuse_scatter:
+            # one merged scatter across corners, points AND levels
+            big = jnp.concatenate(
+                [c + row_offsets[l] for l in vpu for c in _corner_idx(l)])
+            upd = jnp.concatenate([c for l in vpu for c in contribs[l]], axis=0)
+            slab = slab.at[big].add(upd.astype(slab.dtype))
+        else:
+            # ablation: four merged per-corner scatters
+            for c in range(4):
+                big = jnp.concatenate(
+                    [_corner_idx(l)[c] + row_offsets[l] for l in vpu])
+                upd = jnp.concatenate([contribs[l][c] for l in vpu], axis=0)
+                slab = slab.at[big].add(upd.astype(slab.dtype))
+    for l in range(L):
+        if not onehot[l]:
+            continue
+        end = row_offsets[l + 1] if l + 1 < L else slab.shape[0]
+        rows = end - row_offsets[l]
+        all_idx = jnp.concatenate(_corner_idx(l))
+        contrib = jnp.concatenate(contribs[l], axis=0)
+        oh = (jnp.arange(rows)[:, None] == all_idx[None, :]).astype(jnp.float32)
+        slab = slab.at[row_offsets[l]:end].add((oh @ contrib).astype(slab.dtype))
+    gval_ref[0, 0] = slab
+
+
+def msda_bwd_fused(
+    value_p: Optional[jax.Array],  # (B, H, R, D) or None when saved given
+    loc_f: jax.Array,              # (B, H, Q, L, P, 2)
+    attn_f: jax.Array,             # (B, H, Q, L, P)
+    gout: jax.Array,               # (B, H, Q, D)
+    saved_p: Optional[jax.Array],  # (B, H, Q, L*4P, D) or None
+    *,
+    hws: Shapes,
+    row_offsets: Tuple[int, ...],
+    total_rows: int,
+    block_q: int,
+    fuse_scatter: bool = True,
+    onehot_levels: Tuple[bool, ...] = (),
+    interpret: bool = False,
+    accum_dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole-pyramid backward: ONE ``pallas_call`` for all levels.
+
+    Returns ``(grad_value super-slab in accum_dtype, grad_loc,
+    grad_attn)`` — the grad slab covers every level (packed layout,
+    written back to HBM exactly once when the (batch, head) block
+    retires); grad_loc/grad_attn come back ``(B, H, Q, L, P, ...)``.
+    """
+    B, Hh, Q, L, P, _ = loc_f.shape
+    D = gout.shape[-1]
+    assert Q % block_q == 0, (Q, block_q)
+    nq = Q // block_q
+
+    kernel = functools.partial(
+        _bwd_fused_kernel, hws=tuple(hws), row_offsets=tuple(row_offsets),
+        fuse_scatter=fuse_scatter, onehot_levels=tuple(onehot_levels),
+    )
+
+    in_specs = []
+    operands = []
+    if saved_p is None:
+        assert value_p is not None
+        in_specs.append(
+            pl.BlockSpec((1, 1, total_rows, D), lambda b, h, q: (b, h, 0, 0)))
+        operands.append(value_p)
+        kernel_fn = functools.partial(_regather_wrap, kernel)
+    else:
+        in_specs.append(
+            pl.BlockSpec((1, 1, block_q, L * 4 * P, D),
+                         lambda b, h, q: (b, h, q, 0, 0)))
+        operands.append(saved_p)
+        kernel_fn = functools.partial(_saved_wrap, kernel)
+    in_specs += [
+        pl.BlockSpec((1, 1, block_q, L, P, 2),
+                     lambda b, h, q: (b, h, q, 0, 0, 0)),
+        pl.BlockSpec((1, 1, block_q, L, P), lambda b, h, q: (b, h, q, 0, 0)),
+        pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0)),
+    ]
+    operands += [loc_f, attn_f, gout]
+
+    gval, gloc, gattn = pl.pallas_call(
+        kernel_fn,
+        grid=(B, Hh, nq),
+        in_specs=in_specs,
+        out_specs=[
+            # grad super-slab: accumulated across q, written back once
+            pl.BlockSpec((1, 1, total_rows, D), lambda b, h, q: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, L, P, 2),
+                         lambda b, h, q: (b, h, q, 0, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, L, P), lambda b, h, q: (b, h, q, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hh, total_rows, D), jnp.dtype(accum_dtype)),
+            jax.ShapeDtypeStruct((B, Hh, Q, L, P, 2), loc_f.dtype),
+            jax.ShapeDtypeStruct((B, Hh, Q, L, P), attn_f.dtype),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")

@@ -34,6 +34,15 @@ Paper mapping (xMSDA §4.1 → TPU):
 
 Grid: ``(B, H, num_q_blocks)`` — ``q`` innermost so the value slab block
 ``(1, 1, HW_pad, D)`` is revisited (stays in VMEM) across query blocks.
+
+**Fused whole-pyramid variant** (``msda_fwd_fused``): when the packed
+slabs of ALL levels fit the VMEM budget (the planner's fusion rung,
+``MsdaSpec.fuse_levels``), the pyramid — not the level — becomes the
+residency unit: one ``pallas_call`` gathers every level from a single
+row-major super-slab (per-level row offsets static), accumulates the
+cross-level sum in-kernel, and writes the output to HBM exactly once.
+The merged gather then spans corners x points x LEVELS — another factor
+of L of effective vector length on top of the pixel-pair merge.
 """
 from __future__ import annotations
 
@@ -215,3 +224,191 @@ def msda_fwd_level(
 
 def _nosave_wrap(kernel, value_ref, loc_ref, attn_ref, out_ref):
     kernel(value_ref, loc_ref, attn_ref, out_ref, None)
+
+
+# --------------------------------------------------------------------------
+# fused whole-pyramid forward: ONE pallas launch for all L levels
+# --------------------------------------------------------------------------
+
+
+def fused_level_corner_indices(loc, hws: Shapes):
+    """Per-level corner bookkeeping for the fused kernels.
+
+    ``loc``: (Qb, L, P, 2).  Returns ``(cidx, geom)`` where ``cidx[l]``
+    is the tuple of 4 LOCAL corner index vectors ``(Qb*P,)`` (x-pair
+    partner ``+1``, y-pair partner ``+Wp`` — see :func:`corner_indices`)
+    and ``geom[l] = (lx, ly, masks)``.
+    """
+    cidx, geom = [], []
+    for l, (Hl, Wl) in enumerate(hws):
+        Wp = Wl + 2
+        idx00, lx, ly, masks = corner_indices(loc[:, l], Hl, Wl, Wp)
+        i00 = idx00.reshape(-1)
+        cidx.append((i00, i00 + 1, i00 + Wp, i00 + Wp + 1))
+        geom.append((lx, ly, masks))
+    return cidx, geom
+
+
+def fused_gather_corners(v, cidx, row_offsets: Tuple[int, ...],
+                         onehot: Tuple[bool, ...], fuse_gather: bool):
+    """Gather every level's bilinear corners from the packed super-slab.
+
+    Shared by the fused forward and the fused backward's regather
+    branch — the routing logic must never diverge between directions.
+    VPU levels share ONE merged index vector across corners, points and
+    levels (``row_offsets`` lift local indices into the super-slab;
+    ``fuse_gather=False`` degrades to four merged per-corner gathers);
+    one-hot levels ride the MXU against their own sub-slab rows.
+    Returns ``corners[l]``: list of 4 ``(Qb*P, D)`` fp32 arrays.
+    """
+    L = len(cidx)
+    n = cidx[0][0].shape[0]  # Qb*P
+    corners = [None] * L
+    vpu = [l for l in range(L) if not onehot[l]]
+    if vpu:
+        if fuse_gather:
+            big = jnp.concatenate(
+                [c + row_offsets[l] for l in vpu for c in cidx[l]])
+            g = jnp.take(v, big, axis=0).astype(jnp.float32)
+            for i, l in enumerate(vpu):
+                corners[l] = jnp.split(g[i * 4 * n:(i + 1) * 4 * n], 4, axis=0)
+        else:
+            per_corner = [
+                jnp.take(v, jnp.concatenate(
+                    [cidx[l][c] + row_offsets[l] for l in vpu]),
+                    axis=0).astype(jnp.float32)
+                for c in range(4)
+            ]
+            for i, l in enumerate(vpu):
+                sl = slice(i * n, (i + 1) * n)
+                corners[l] = [pc[sl] for pc in per_corner]
+    for l in range(L):
+        if not onehot[l]:
+            continue
+        end = row_offsets[l + 1] if l + 1 < L else v.shape[0]
+        sub = v[row_offsets[l]:end]
+        all_idx = jnp.concatenate(cidx[l])
+        oh = (all_idx[:, None] == jnp.arange(sub.shape[0])[None, :]).astype(
+            jnp.float32)
+        corners[l] = jnp.split(oh @ sub.astype(jnp.float32), 4, axis=0)
+    return corners
+
+
+def _fwd_fused_kernel(
+    value_ref,  # (1, 1, R, D)   VMEM-resident packed pyramid super-slab
+    loc_ref,    # (1, 1, Qb, L, P, 2)
+    attn_ref,   # (1, 1, Qb, L, P)
+    out_ref,    # (1, 1, Qb, D)
+    saved_ref,  # (1, 1, Qb, L*4P, D) or None
+    *,
+    hws: Shapes,
+    row_offsets: Tuple[int, ...],
+    fuse_gather: bool,
+    onehot_levels: Tuple[bool, ...] = (),
+):
+    """Whole-pyramid forward step: cross-level accumulation in-kernel.
+
+    The per-level kernel's math, run over every level of the packed
+    super-slab inside one grid step — the output block is written to HBM
+    exactly once, instead of L fp32 partials round-tripping through HBM
+    and being summed by XLA.  Gather fusion goes one step further than
+    the per-level kernel: all VPU levels' corners ride ONE merged index
+    vector (per-level row offsets lift local indices into the
+    super-slab), so the effective gather vector length grows by another
+    factor of L on top of the paper's pixel-pair merge.  Levels routed
+    to the MXU one-hot path keep it, against their own sub-slab rows.
+    """
+    v = value_ref[0, 0]  # (R, D)
+    loc = loc_ref[0, 0].astype(jnp.float32)  # (Qb, L, P, 2)
+    attn = attn_ref[0, 0].astype(jnp.float32)  # (Qb, L, P)
+    Qb, L, P, _ = loc.shape
+    D = v.shape[-1]
+
+    cidx, geom = fused_level_corner_indices(loc, hws)
+    onehot = tuple(onehot_levels) if onehot_levels else (False,) * L
+    corners = fused_gather_corners(v, cidx, row_offsets, onehot, fuse_gather)
+
+    out = jnp.zeros((Qb, D), jnp.float32)
+    saved_parts = []
+    for l in range(L):
+        lx, ly, (m00, m10, m01, m11) = geom[l]
+        v00, v10, v01, v11 = (c.reshape(Qb, P, D) for c in corners[l])
+        shape = (Qb, P, 1)
+        w00 = ((1 - lx) * (1 - ly) * m00).reshape(shape)
+        w10 = (lx * (1 - ly) * m10).reshape(shape)
+        w01 = ((1 - lx) * ly * m01).reshape(shape)
+        w11 = (lx * ly * m11).reshape(shape)
+        sampled = v00 * w00 + v10 * w10 + v01 * w01 + v11 * w11  # (Qb,P,D)
+        out = out + jnp.einsum("qpd,qp->qd", sampled, attn[:, l])
+        if saved_ref is not None:
+            saved_parts.append(jnp.concatenate([v00, v10, v01, v11], axis=1))
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+    if saved_ref is not None:
+        # train mode: corners packed (Qb, L*4P, D), streamed once
+        saved_ref[0, 0] = jnp.concatenate(saved_parts, axis=1).astype(
+            saved_ref.dtype)
+
+
+def msda_fwd_fused(
+    value_p: jax.Array,  # (B, H, R, D) packed pyramid super-slab
+    loc_f: jax.Array,    # (B, H, Q, L, P, 2)
+    attn_f: jax.Array,   # (B, H, Q, L, P)
+    *,
+    hws: Shapes,
+    row_offsets: Tuple[int, ...],
+    block_q: int,
+    fuse_gather: bool = True,
+    save_sampled: bool = False,
+    onehot_levels: Tuple[bool, ...] = (),
+    interpret: bool = False,
+    out_dtype=None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Whole-pyramid forward: ONE ``pallas_call`` for all levels.
+
+    The packed super-slab stays VMEM-resident across query blocks;
+    loc/attn are streamed once as ``(Qb, L, P, ...)`` blocks with a
+    single shared ``block_q``; the output (and, in train mode, the
+    packed saved corners ``(Qb, L*4P, D)``) are written to HBM exactly
+    once.  ``out_dtype`` is the in-kernel cross-level accumulator dtype.
+    """
+    B, Hh, R, D = value_p.shape
+    out_dtype = value_p.dtype if out_dtype is None else jnp.dtype(out_dtype)
+    _, _, Q, L, P, _ = loc_f.shape
+    assert Q % block_q == 0, (Q, block_q)
+    nq = Q // block_q
+
+    kernel = functools.partial(
+        _fwd_fused_kernel, hws=tuple(hws), row_offsets=tuple(row_offsets),
+        fuse_gather=fuse_gather, onehot_levels=tuple(onehot_levels),
+    )
+    out_shapes = [jax.ShapeDtypeStruct((B, Hh, Q, D), out_dtype)]
+    out_specs = [pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0))]
+    if save_sampled:
+        out_shapes.append(
+            jax.ShapeDtypeStruct((B, Hh, Q, L * 4 * P, D), value_p.dtype))
+        out_specs.append(
+            pl.BlockSpec((1, 1, block_q, L * 4 * P, D),
+                         lambda b, h, q: (b, h, q, 0, 0)))
+    else:
+        kernel = functools.partial(_nosave_wrap, kernel)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(B, Hh, nq),
+        in_specs=[
+            # packed pyramid: revisited across q (resident per (b, h))
+            pl.BlockSpec((1, 1, R, D), lambda b, h, q: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, L, P, 2),
+                         lambda b, h, q: (b, h, q, 0, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, L, P), lambda b, h, q: (b, h, q, 0, 0)),
+        ],
+        out_specs=out_specs if save_sampled else out_specs[:1],
+        out_shape=out_shapes if save_sampled else out_shapes[:1],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(value_p, loc_f, attn_f)
+    if save_sampled:
+        return outs[0], outs[1]
+    return outs[0], None

@@ -4,9 +4,12 @@ The *planning* surface lives in ``repro.kernels.plan`` (``MsdaSpec`` →
 ``msda_plan`` → ``MsdaPlan``) and the backend registry in
 ``repro.kernels.registry``; this module keeps
 
-* the layout/padding contract and per-level kernel drivers
+* the layout/padding contract and the kernel drivers
   (``_fwd_impl`` / ``_bwd_impl`` / ``build_kernel_op``) the pallas
-  backend builder compiles into an executor,
+  backend builder compiles into an executor — per-level launches, or
+  the fused whole-pyramid pair (``MSDAParams.fuse_levels``: all levels
+  packed into one super-slab via ``_pack_pyramid`` /
+  ``pyramid_row_offsets``, ONE pallas launch per direction),
 * the heuristic block planner (``plan_blocks`` — the paper's adaptive
   vec-len model, Fig. 7) and the MXU one-hot routing rule
   (``plan_onehot``), both invoked once per plan, and
@@ -50,14 +53,83 @@ def slab_rows(hw: Tuple[int, int]) -> int:
     return _round_up((h + 2) * (w + 2), _SUBLANE)
 
 
-def per_query_bytes(num_points: int, head_dim: int) -> int:
+def per_query_bytes(num_points: int, head_dim: int, *, train: bool = False,
+                    slab_itemsize: int = 4, levels: int = 1) -> int:
     """Per-query VMEM working set: 4 corners x P points x D lanes in fp32,
     ~4 concurrent copies (gathered, weighted, contribs, temporaries).
+
+    ``train=True`` adds the saved-corner OUTPUT block the forward kernel
+    keeps resident per step (``4P x D`` rows per query in the slab
+    dtype, streamed to HBM for the backward) — omitting it made train
+    plans overshoot the budget.  ``levels > 1`` scales the whole set for
+    the fused whole-pyramid kernels, whose every query step touches all
+    L levels.
 
     Single source of truth for the paper's occupancy model — used by the
     block planner below and by ``MsdaPlan.level_report``.
     """
-    return 4 * num_points * head_dim * 4 * 4 + num_points * 64
+    per_level = 4 * num_points * head_dim * 4 * 4 + num_points * 64
+    if train:  # saved-corner output block: (block_q, 4P, D) slab dtype
+        per_level += 4 * num_points * head_dim * slab_itemsize
+    return levels * per_level
+
+
+def pyramid_row_offsets(spatial_shapes: Shapes) -> Tuple[Tuple[int, ...], int]:
+    """Static row offsets of each level inside the packed super-slab.
+
+    Returns ``(offsets, total_rows)``: level ``l`` occupies rows
+    ``[offsets[l], offsets[l] + slab_rows(hw_l))`` of the row-major
+    ``(total_rows, D)`` super-slab (every level's slab is already padded
+    to a sublane multiple, so the offsets stay aligned).
+    """
+    offs, total = [], 0
+    for hw in spatial_shapes:
+        offs.append(total)
+        total += slab_rows(hw)
+    return tuple(offs), total
+
+
+def fused_resident_bytes(spatial_shapes: Shapes, head_dim: int, *,
+                         slab_itemsize: int = 4, train: bool = True,
+                         accum_itemsize: int = 4) -> int:
+    """VMEM-resident bytes of the fused whole-pyramid kernels.
+
+    Σ slab_rows(hw) x D in the (uniform, widest-committed) slab dtype,
+    plus — in train mode — the same extent again in the accum dtype for
+    the resident grad super-slab.  The ONE definition of the packed
+    pyramid's residency: the fitting rung, the fused block planner and
+    ``MsdaPlan.level_report`` all read it from here.
+    """
+    _, total = pyramid_row_offsets(spatial_shapes)
+    resident = total * head_dim * slab_itemsize
+    if train:
+        resident += total * head_dim * accum_itemsize
+    return resident
+
+
+def fused_pyramid_fits(
+    spatial_shapes: Shapes,
+    num_points: int,
+    head_dim: int,
+    *,
+    value_itemsize: int = 4,
+    train: bool = True,
+    vmem_budget: int = VMEM_BUDGET,
+    accum_itemsize: int = 4,
+) -> bool:
+    """The planner's fusion-rung fitting model.
+
+    Fused when the whole packed pyramid (:func:`fused_resident_bytes`)
+    AND a minimal (one-sublane) query step's working set fit the VMEM
+    budget together.
+    """
+    resident = fused_resident_bytes(
+        spatial_shapes, head_dim, slab_itemsize=value_itemsize,
+        train=train, accum_itemsize=accum_itemsize)
+    per_q = per_query_bytes(num_points, head_dim, train=train,
+                            slab_itemsize=value_itemsize,
+                            levels=len(spatial_shapes))
+    return resident + _SUBLANE * per_q <= vmem_budget
 
 
 def plan_blocks(
@@ -71,6 +143,7 @@ def plan_blocks(
     vmem_budget: int = VMEM_BUDGET,
     adaptive: bool = True,
     accum_itemsize: int = 4,
+    fused: bool = False,
 ) -> Tuple[int, ...]:
     """Per-level query-block sizes (the paper's adaptive vec-len, Fig. 7).
 
@@ -81,8 +154,31 @@ def plan_blocks(
     ``value_itemsize`` is the itemsize of the dtype the value slab is
     *stored* in (a bf16-slab plan halves residency and widens blocks);
     ``accum_itemsize`` sizes the train-mode grad slab, which stays wide
-    (fp32) regardless of the slab dtype.
+    (fp32) regardless of the slab dtype.  The per-step working set
+    includes the train-mode saved-corner output block (see
+    :func:`per_query_bytes`).
+
+    ``fused=True`` plans the whole-pyramid kernel instead: the resident
+    set is the PACKED super-slab (all levels, plus the train grad
+    super-slab) and one shared block serves every level — returned
+    replicated per level so the tuple shape stays uniform.
     """
+    def _clamp(bq: int) -> int:
+        bq = max(_SUBLANE, min(2048, (bq // _SUBLANE) * _SUBLANE))
+        return min(bq, _round_up(num_queries, _SUBLANE))
+
+    if fused:
+        L = len(spatial_shapes)
+        if not adaptive:
+            return (_SUBLANE,) * L
+        resident = fused_resident_bytes(
+            spatial_shapes, head_dim, slab_itemsize=value_itemsize,
+            train=train, accum_itemsize=accum_itemsize)
+        avail = max(vmem_budget - resident, 1 * 2**20)
+        per_q = per_query_bytes(num_points, head_dim, train=train,
+                                slab_itemsize=value_itemsize, levels=L)
+        return (int(_clamp(avail // per_q)),) * L
+
     out = []
     for hw in spatial_shapes:
         if not adaptive:
@@ -92,11 +188,9 @@ def plan_blocks(
         if train:  # bwd keeps a widened (accum-dtype) grad slab too
             resident += slab_rows(hw) * head_dim * accum_itemsize
         avail = max(vmem_budget - resident, 1 * 2**20)
-        per_q = per_query_bytes(num_points, head_dim)
-        bq = avail // per_q
-        bq = max(_SUBLANE, min(2048, (bq // _SUBLANE) * _SUBLANE))
-        bq = min(bq, _round_up(num_queries, _SUBLANE))
-        out.append(int(bq))
+        per_q = per_query_bytes(num_points, head_dim, train=train,
+                                slab_itemsize=value_itemsize)
+        out.append(int(_clamp(avail // per_q)))
     return tuple(out)
 
 
@@ -123,11 +217,23 @@ class MSDAParams:
     # the primal); '' -> infer from the residual slab (legacy behaviour,
     # only correct when slab dtype == operand dtype)
     io_dtype: str = ""
+    # fused whole-pyramid kernels: all levels packed into ONE super-slab,
+    # one pallas launch per direction with a single shared block_q
+    # (block_q[0]; the planner replicates it per level)
+    fuse_levels: bool = False
 
     def slab_dtype(self, level: int) -> str:
         if self.slab_dtypes and self.slab_dtypes[level]:
             return self.slab_dtypes[level]
         return ""
+
+    def fused_slab_dtype(self, operand_dtype) -> str:
+        """Uniform storage dtype of the packed super-slab (one array, one
+        dtype): the WIDEST committed per-level dtype, so fusing a plan
+        never narrows any level below what the planner committed."""
+        names = [self.slab_dtype(l) or str(operand_dtype)
+                 for l in range(len(self.spatial_shapes))]
+        return max(names, key=lambda n: jnp.dtype(n).itemsize)
 
 
 # levels with padded slabs up to this many rows use the MXU one-hot path
@@ -170,8 +276,108 @@ def _pad_q(x: jax.Array, q_axis: int, qpad: int, fill=0.0) -> jax.Array:
     return jnp.pad(x, pads, constant_values=fill)
 
 
+def _pack_pyramid(value_t: jax.Array, spatial_shapes: Shapes,
+                  dtype=None) -> jax.Array:
+    """(B,H,S,D) -> packed super-slab (B,H,total_rows,D), every level
+    zero-padded to its ``slab_rows`` extent at its static row offset."""
+    parts = []
+    offset = 0
+    for hw in spatial_shapes:
+        parts.append(_pad_level(value_t, offset, hw))
+        offset += hw[0] * hw[1]
+    slab = jnp.concatenate(parts, axis=2)
+    if dtype is not None and slab.dtype != jnp.dtype(dtype):
+        slab = slab.astype(dtype)
+    return slab
+
+
+def _unpack_grad_pyramid(slab: jax.Array, spatial_shapes: Shapes) -> jax.Array:
+    """Inverse of :func:`_pack_pyramid` for the grad super-slab:
+    (B,H,total_rows,D) -> (B,H,S,D)."""
+    outs = []
+    r = 0
+    for hw in spatial_shapes:
+        rows = slab_rows(hw)
+        outs.append(_unpad_grad(slab[:, :, r:r + rows], hw))
+        r += rows
+    return jnp.concatenate(outs, axis=2)
+
+
+def _fwd_impl_fused(p: MSDAParams, value, loc, attn):
+    """Fused whole-pyramid forward: ONE pallas launch. Returns (out, res)."""
+    B, S, Hh, D = value.shape
+    _, Q, _, L, P, _ = loc.shape
+    # (B,S,H,D) -> (B,H,S,D); (B,Q,H,L,P,2) -> (B,H,Q,L,P,2)
+    value_t = jnp.transpose(value, (0, 2, 1, 3))
+    loc_f = jnp.transpose(loc, (0, 2, 1, 3, 4, 5))
+    attn_f = jnp.transpose(attn, (0, 2, 1, 3, 4))
+
+    accum = jnp.dtype(p.accum_dtype)
+    slab = _pack_pyramid(value_t, p.spatial_shapes,
+                         dtype=p.fused_slab_dtype(value.dtype))
+    row_offsets, _ = pyramid_row_offsets(p.spatial_shapes)
+    bq = p.block_q[0]
+    qpad = _round_up(Q, bq)
+    loc_f = _pad_q(loc_f, 2, qpad, 0.5)
+    attn_f = _pad_q(attn_f, 2, qpad, 0.0)
+    out, saved = msda_fwd.msda_fwd_fused(
+        slab,
+        loc_f,
+        attn_f,
+        hws=p.spatial_shapes,
+        row_offsets=row_offsets,
+        block_q=bq,
+        fuse_gather=p.fuse_gather,
+        save_sampled=p.save_sampled,
+        onehot_levels=p.onehot_levels,
+        interpret=p.interpret,
+        out_dtype=accum,
+    )
+    out = jnp.transpose(out[:, :, :Q], (0, 2, 1, 3)).reshape(B, Q, Hh * D)
+    out = out.astype(value.dtype)
+    if p.save_sampled:
+        residuals = (None, saved, loc_f, attn_f)
+    else:
+        residuals = (slab, None, loc_f, attn_f)
+    return out, residuals
+
+
+def _bwd_impl_fused(p: MSDAParams, residuals, gout):
+    """Fused whole-pyramid backward: ONE pallas launch."""
+    slab, saved, loc_f, attn_f = residuals
+    B, Hh, Qpad, L, P, _ = loc_f.shape
+    HD = gout.shape[-1]
+    D = HD // Hh
+    Q = gout.shape[1]
+    gout_t = jnp.transpose(gout.reshape(B, Q, Hh, D), (0, 2, 1, 3))
+    gout_t = _pad_q(gout_t, 2, Qpad, 0.0)
+    row_offsets, total_rows = pyramid_row_offsets(p.spatial_shapes)
+    gval, gloc, gattn = msda_bwd.msda_bwd_fused(
+        slab,
+        loc_f,
+        attn_f,
+        gout_t,
+        saved,
+        hws=p.spatial_shapes,
+        row_offsets=row_offsets,
+        total_rows=total_rows,
+        block_q=p.block_q[0],
+        fuse_scatter=p.fuse_scatter,
+        onehot_levels=p.onehot_levels,
+        interpret=p.interpret,
+        accum_dtype=p.accum_dtype,
+    )
+    gvalue = _unpack_grad_pyramid(gval, p.spatial_shapes)  # (B,H,S,D)
+    gvalue = jnp.transpose(gvalue, (0, 2, 1, 3))
+    gloc = jnp.transpose(gloc[:, :, :Q], (0, 2, 1, 3, 4, 5))  # (B,Q,H,L,P,2)
+    gattn = jnp.transpose(gattn[:, :, :Q], (0, 2, 1, 3, 4))  # (B,Q,H,L,P)
+    return gvalue, gloc, gattn
+
+
 def _fwd_impl(p: MSDAParams, value, loc, attn):
     """Kernel-backed forward. Returns (out, residuals)."""
+    if p.fuse_levels:
+        return _fwd_impl_fused(p, value, loc, attn)
     B, S, Hh, D = value.shape
     _, Q, _, L, P, _ = loc.shape
     # (B,S,H,D) -> (B,H,S,D); (B,Q,H,L,P,2) -> (B,H,L,Q,P,2)
@@ -219,6 +425,8 @@ def _fwd_impl(p: MSDAParams, value, loc, attn):
 
 
 def _bwd_impl(p: MSDAParams, residuals, gout):
+    if p.fuse_levels:
+        return _bwd_impl_fused(p, residuals, gout)
     slabs, saved_all, loc_t, attn_t = residuals
     B, Hh, L, Q, P, _ = loc_t.shape
     HD = gout.shape[-1]
@@ -322,6 +530,7 @@ def msda(
     backend: str = "auto",
     train: bool = False,
     dtype_policy: str = "follow",
+    fuse_levels: str = "auto",
     block_q=_UNSET,
     fuse_gather=_UNSET,
     fuse_scatter=_UNSET,
@@ -340,7 +549,10 @@ def msda(
     identical spec never re-run block planning.  ``dtype_policy``
     ('follow' | 'float32' | 'bfloat16' | 'auto') commits the
     mixed-precision plan variant (bf16 slab + fp32 accumulate; see
-    ``plan.resolve_dtype_policy``).  The per-call tuning kwargs
+    ``plan.resolve_dtype_policy``).  ``fuse_levels``
+    ('auto' | 'on' | 'off') commits the whole-pyramid kernel fusion
+    rung (one pallas launch per direction when the packed pyramid fits
+    VMEM).  The per-call tuning kwargs
     (``block_q``, ``fuse_gather``, ``fuse_scatter``,
     ``adaptive_block``, ``onehot_small_levels``, ``interpret``) are
     deprecated; put them on the spec / plan instead.
@@ -348,7 +560,8 @@ def msda(
     from repro.kernels import plan as plan_mod
 
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(dtype_policy)
-    overrides = {"slab_dtype": slab_dtype, "accum_dtype": accum_dtype}
+    overrides = {"slab_dtype": slab_dtype, "accum_dtype": accum_dtype,
+                 "fuse_levels": fuse_levels}
     for name, val in (("fuse_gather", fuse_gather), ("fuse_scatter", fuse_scatter),
                       ("adaptive_block", adaptive_block),
                       ("onehot_small_levels", onehot_small_levels)):

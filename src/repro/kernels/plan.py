@@ -4,11 +4,14 @@ Contract (the one rule of the system — ``docs/architecture.md``):
 every hardware-aware decision is committed HERE, at plan time, and
 execution only executes.  ``MsdaSpec`` (frozen geometry) resolves via
 ``msda_plan`` into an ``MsdaPlan`` carrying the backend, per-level
-blocks + slab dtypes (heuristic or autotuned, winners persisted per
-device kind), and — when a mesh is given — the sharding mode: the 1D
-query/head/batch ladder or the 2D dp x tp query tiling with
-ring-reduced grad_value slabs (``docs/sharding.md``).  Plans live in a
-bounded LRU; ``plan.describe()`` states everything that was committed.
+blocks + slab dtypes, the whole-pyramid fusion decision
+(``fuse_levels`` — one pallas launch per direction when the packed
+pyramid fits VMEM; heuristic fitting model or autotuned race, winners
+persisted per device kind), and — when a mesh is given — the sharding
+mode: the 1D query/head/batch ladder or the 2D dp x tp query tiling
+with ring-reduced grad_value slabs, plus the raced ring-vs-psum
+grad_value reduction (``docs/sharding.md``).  Plans live in a bounded
+LRU; ``plan.describe()`` states everything that was committed.
 
 The paper's central observation is that MSDA gets fast only when the
 *static* problem geometry — level shapes, points, head dim, the VMEM
@@ -66,6 +69,8 @@ from repro.kernels import registry
 Shapes = Tuple[Tuple[int, int], ...]
 
 _SUBLANE = 8
+
+FUSE_LEVELS_CHOICES = ("auto", "on", "off")
 
 
 def _round_up(x: int, m: int) -> int:
@@ -142,6 +147,13 @@ class MsdaSpec:
     # reduced-precision-sampling / wide-accumulation observation.
     slab_dtype: str = ""
     accum_dtype: str = "float32"
+    # -- whole-pyramid kernel fusion (the third planned axis) -------------
+    # 'auto' fuses when the packed pyramid (all level slabs + the train
+    # grad super-slab) fits the VMEM budget (ops.fused_pyramid_fits);
+    # tune="autotune" races fused vs per-level instead of trusting the
+    # model.  'on'/'off' pin the decision.  Only kernel backends that
+    # understand fusion (pallas) honour it; others stay per-level.
+    fuse_levels: str = "auto"
 
     def __post_init__(self):
         shapes = tuple((int(h), int(w)) for h, w in self.spatial_shapes)
@@ -150,6 +162,10 @@ class MsdaSpec:
         if self.slab_dtype not in ("", "auto"):
             object.__setattr__(self, "slab_dtype", str(jnp.dtype(self.slab_dtype)))
         object.__setattr__(self, "accum_dtype", str(jnp.dtype(self.accum_dtype)))
+        if self.fuse_levels not in FUSE_LEVELS_CHOICES:
+            raise ValueError(
+                f"unknown fuse_levels {self.fuse_levels!r}; "
+                f"one of {FUSE_LEVELS_CHOICES}")
         if self.vmem_budget <= 0:
             object.__setattr__(self, "vmem_budget", default_vmem_budget())
 
@@ -269,10 +285,48 @@ class PlanTuning:
     # per-level committed slab storage dtype; () -> the spec's resolved
     # slab dtype for every level (autotune may mix fp32/bf16 per level)
     slab_dtypes: Tuple[str, ...] = ()
+    # committed whole-pyramid fusion decision: one pallas launch per
+    # direction (block_q is then one shared value, replicated per level)
+    fuse_levels: bool = False
 
 
 def _default_slab_dtypes(spec: MsdaSpec) -> Tuple[str, ...]:
     return (spec.resolved_slab_dtype(),) * spec.num_levels
+
+
+# backends whose builders understand the whole-pyramid fused kernels;
+# everyone else gets (truthful) per-level plans regardless of the policy
+_FUSABLE_BACKENDS = frozenset({"pallas"})
+
+
+def _fused_slab_itemsize(slab_dtypes: Tuple[str, ...]) -> int:
+    """Itemsize of the packed super-slab's uniform storage dtype (the
+    widest committed per-level dtype — see MSDAParams.fused_slab_dtype)."""
+    return max(jnp.dtype(d).itemsize for d in slab_dtypes)
+
+
+def _resolve_fuse_levels(spec: MsdaSpec, slab_dtypes: Tuple[str, ...],
+                         backend_name: str) -> bool:
+    """The planner's fusion rung (heuristic side).
+
+    ``'on'``/``'off'`` pin the decision; ``'auto'`` fuses exactly when
+    the packed pyramid plus the per-query working set fits the spec's
+    VMEM budget (``ops.fused_pyramid_fits``) — single-level pyramids
+    stay per-level (already one launch, nothing to fuse).
+    """
+    from repro.kernels import ops
+
+    if backend_name not in _FUSABLE_BACKENDS or spec.fuse_levels == "off":
+        return False
+    if spec.fuse_levels == "on":
+        return True
+    if spec.num_levels < 2:
+        return False
+    return ops.fused_pyramid_fits(
+        spec.spatial_shapes, spec.num_points, spec.head_dim,
+        value_itemsize=_fused_slab_itemsize(slab_dtypes),
+        train=spec.train, vmem_budget=spec.vmem_budget,
+        accum_itemsize=spec.accum_itemsize)
 
 
 # --------------------------------------------------------------------------
@@ -309,6 +363,7 @@ def _build_pallas(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
         slab_dtypes=tuple(tuning.slab_dtypes) or _default_slab_dtypes(spec),
         accum_dtype=spec.accum_dtype,
         io_dtype=spec.dtype,
+        fuse_levels=bool(tuning.fuse_levels),
     )
     return ops.build_kernel_op(params)
 
@@ -326,7 +381,8 @@ def _build_cpu(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
 # --------------------------------------------------------------------------
 
 
-def _heuristic_block_q(spec: MsdaSpec) -> Tuple[int, ...]:
+def _heuristic_block_q(spec: MsdaSpec, *, fused: bool = False,
+                       value_itemsize: Optional[int] = None) -> Tuple[int, ...]:
     from repro.kernels import ops
 
     return ops.plan_blocks(
@@ -334,11 +390,13 @@ def _heuristic_block_q(spec: MsdaSpec) -> Tuple[int, ...]:
         spec.num_points,
         spec.head_dim,
         spec.num_queries,
-        value_itemsize=spec.slab_itemsize,
+        value_itemsize=(spec.slab_itemsize if value_itemsize is None
+                        else value_itemsize),
         train=spec.train,
         vmem_budget=spec.vmem_budget,
         adaptive=spec.adaptive_block,
         accum_itemsize=spec.accum_itemsize,
+        fused=fused,
     )
 
 
@@ -470,36 +528,56 @@ _BLOCKLESS_BACKENDS = frozenset({"ref", "cpu"})
 _SLAB_DTYPE_CANDIDATES = ("float32", "bfloat16")
 
 
-def _parse_cache_entry(hit, spec: MsdaSpec):
-    """Decode a winner-cache entry -> (block_q, slab_dtypes, sharding).
+def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
+    """Decode a winner-cache entry into the normalised winner dict.
 
-    Three on-disk schemas, newest first: ``{"block_q": [...],
-    "slab_dtypes": [...], "sharding": "1d"|"2d"}`` (mesh-keyed entries
-    for distributed plans — the sharding field is OPTIONAL, so every
-    pre-2D entry still parses and yields ``sharding=None``), the plain
-    block/dtype dict, and a flat ``[block_q...]`` list accepted for
-    hand-authored caches (offline sweep tooling / the pre-dtype-policy
-    format — note old entries won't *hit* anyway, since adding the
-    policy fields to the spec changed ``cache_token()``).  Anything
-    malformed is treated as a miss, never an error: a corrupt cache file
-    must degrade to re-tuning.
+    Returns ``{"block_q": tuple, "slab_dtypes": tuple, "sharding":
+    None|'1d'|'2d', "onehot_levels": None|tuple, "fuse_levels":
+    None|bool, "grad_reduce": None|'ring'|'psum'}`` or ``None`` on a
+    miss.  The ``sharding``/``grad_reduce`` fields live on mesh-keyed
+    entries (the 1D-vs-2D and ring-vs-psum races of distributed plans);
+    ``fuse_levels`` records the whole-pyramid fusion race;
+    ``onehot_levels`` the per-level MXU-routing race.  All four are
+    OPTIONAL, so every pre-existing entry still parses with ``None``
+    there.  A flat ``[block_q...]`` list is accepted for hand-authored
+    caches (offline sweep tooling / the pre-dtype-policy format).
+    Anything malformed is treated as a miss, never an error: a corrupt
+    cache file must degrade to re-tuning.
     """
     L = spec.num_levels
+
+    def _out(bq, dts, sharding=None, onehot=None, fused=None, gr=None):
+        return {"block_q": bq, "slab_dtypes": dts, "sharding": sharding,
+                "onehot_levels": onehot, "fuse_levels": fused,
+                "grad_reduce": gr}
+
     try:
         if isinstance(hit, list) and len(hit) == L:
-            return tuple(int(b) for b in hit), _default_slab_dtypes(spec), None
+            return _out(tuple(int(b) for b in hit), _default_slab_dtypes(spec))
         if isinstance(hit, dict):
             bq = hit.get("block_q")
             dts = hit.get("slab_dtypes")
             sharding = hit.get("sharding")
             if sharding is not None and sharding not in ("1d", "2d"):
                 return None
+            gr = hit.get("grad_reduce")
+            if gr is not None and gr not in ("ring", "psum"):
+                return None
             if not (isinstance(bq, list) and len(bq) == L):
                 return None
             if not (isinstance(dts, list) and len(dts) == L):
                 dts = _default_slab_dtypes(spec)
             dts = tuple(str(jnp.dtype(d)) for d in dts)
-            return tuple(int(b) for b in bq), dts, sharding
+            onehot = hit.get("onehot_levels")
+            if onehot is not None:
+                if not (isinstance(onehot, list) and len(onehot) == L):
+                    return None
+                onehot = tuple(bool(x) for x in onehot)
+            fused = hit.get("fuse_levels")
+            if fused is not None:
+                fused = bool(fused)
+            return _out(tuple(int(b) for b in bq), dts, sharding, onehot,
+                        fused, gr)
     except (TypeError, ValueError):  # hand-edited / corrupted entries
         return None
     return None
@@ -555,9 +633,22 @@ def get_autotune_winner(spec: MsdaSpec, backend: str,
     parsed = _parse_cache_entry(hit, spec)
     if parsed is None:
         return None
-    out = {"block_q": [int(b) for b in parsed[0]], "slab_dtypes": list(parsed[1])}
-    if parsed[2] is not None:
-        out["sharding"] = parsed[2]
+    return _winner_entry(parsed)
+
+
+def _winner_entry(parsed: Dict[str, Any]) -> Dict[str, Any]:
+    """Parsed winner dict -> the JSON entry shape (optional fields only
+    when present — old schemas round-trip unchanged)."""
+    out = {"block_q": [int(b) for b in parsed["block_q"]],
+           "slab_dtypes": list(parsed["slab_dtypes"])}
+    if parsed.get("sharding") is not None:
+        out["sharding"] = parsed["sharding"]
+    if parsed.get("onehot_levels") is not None:
+        out["onehot_levels"] = [bool(x) for x in parsed["onehot_levels"]]
+    if parsed.get("fuse_levels") is not None:
+        out["fuse_levels"] = bool(parsed["fuse_levels"])
+    if parsed.get("grad_reduce") is not None:
+        out["grad_reduce"] = parsed["grad_reduce"]
     return out
 
 
@@ -584,11 +675,9 @@ def seed_autotune_winners(entries, device_kind: Optional[str] = None) -> int:
         parsed = _parse_cache_entry(winner, spec)
         if parsed is None:
             continue
-        stored: Dict[str, Any] = {
-            "block_q": [int(b) for b in parsed[0]],
-            "slab_dtypes": list(parsed[1])}
-        if parsed[2] is not None and mesh_suffix:
-            stored["sharding"] = parsed[2]
+        if not mesh_suffix:  # sharding/grad_reduce live on mesh-keyed entries
+            parsed = dict(parsed, sharding=None, grad_reduce=None)
+        stored = _winner_entry(parsed)
         disk[autotune_winner_key(spec, backend, device_kind, mesh_suffix)] = stored
         n += 1
     if n:
@@ -605,10 +694,10 @@ def seed_autotune_winner(spec: MsdaSpec, backend: str, winner: Any,
 
 def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
-) -> Tuple[Tuple[int, ...], Tuple[str, ...], str]:
+) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, str]:
     """Measure candidate plans; persist the winner per (device, spec).
 
-    Two raced axes:
+    Four raced axes:
 
     * ``block_q`` — the heuristic plan scaled by {1/2, 1, 2} per level
       (uniformly — the per-level cross product explodes), snapped to the
@@ -617,64 +706,100 @@ def _autotune_plan(
       is raced PER LEVEL (greedy marginal flips on the block winner): a
       bf16 slab halves VMEM residency but pays cast/precision overhead,
       and which side wins is level-size- and backend-dependent.
+    * MXU one-hot routing — under ``onehot_small_levels=True``, the
+      static ``ONEHOT_MAX_ROWS`` threshold is only the STARTING point:
+      each level's routing is raced with greedy flips, so a level moves
+      between the VPU gather and the MXU matmul on measurement, not on a
+      hand-picked row count.
+    * whole-pyramid fusion — under ``fuse_levels="auto"``, the fused
+      single-launch plan (its own shared block, packed super-slab) races
+      the per-level incumbent.  **Train specs time forward + full VJP**:
+      fusion changes the backward's launch count and gout re-streaming,
+      so a forward-only race would crown the wrong side for training.
 
     All timings are interleaved medians (see :func:`_time_executors`)
     and a challenger must beat the incumbent by ``_AUTOTUNE_MARGIN`` —
-    load jitter must never pick a precision.
+    load jitter must never pick a winner.
 
-    Winners ``{"block_q": [...], "slab_dtypes": [...]}`` are keyed by
-    spec + device kind so a cache produced on one part never mis-tunes
-    another.  Returns ``(block_q, slab_dtypes, source)``.
+    Winners ``{"block_q", "slab_dtypes"}`` (+ optional ``onehot_levels``
+    / ``fuse_levels``) are keyed by spec + device kind so a cache
+    produced on one part never mis-tunes another.  Returns
+    ``(block_q, slab_dtypes, onehot_levels, fuse_levels, source)``.
     """
     onehot = _onehot_levels(spec)
     heur = _heuristic_block_q(spec)
     base_dts = _default_slab_dtypes(spec)
+    fusable = backend_name in _FUSABLE_BACKENDS
     key = autotune_winner_key(spec, backend_name)
     disk = _load_autotune_cache()
+    pin_fused = fusable and spec.fuse_levels == "on"
     parsed = _parse_cache_entry(disk.get(key), spec)
     if parsed is not None:
         _AUTOTUNE_STATS["cache_hits"] += 1
-        return parsed[0], parsed[1], "autotune-cache"
+        oh = parsed["onehot_levels"] if parsed["onehot_levels"] is not None else onehot
+        # entries without the field (hand-authored / pre-fusion schema)
+        # must not override an explicit 'on' pin
+        fused = (bool(parsed["fuse_levels"])
+                 if parsed["fuse_levels"] is not None else pin_fused)
+        return parsed["block_q"], parsed["slab_dtypes"], oh, fused, "autotune-cache"
 
     qcap = _round_up(spec.num_queries, _SUBLANE)
+    race_fuse = fusable and spec.fuse_levels == "auto" and spec.num_levels >= 2
     candidates = []
     if backend_name not in _BLOCKLESS_BACKENDS:
+        # pin_fused: the only plan family is fused, so the block race
+        # scales the SHARED whole-pyramid block instead of per-level ones
+        base_bq = (_heuristic_block_q(
+            spec, fused=True,
+            value_itemsize=_fused_slab_itemsize(base_dts))
+            if pin_fused else heur)
         for scale_num, scale_den in ((1, 2), (1, 1), (2, 1)):
             cand = tuple(
                 max(_SUBLANE, min(2048, qcap, (b * scale_num // scale_den) // _SUBLANE * _SUBLANE))
-                for b in heur
+                for b in base_bq
             )
             if cand not in candidates:
                 candidates.append(cand)
     else:
         candidates.append(heur)
     race_dtypes = spec.slab_dtype == "auto"
-    if len(candidates) == 1 and not race_dtypes:
-        return candidates[0], base_dts, "autotune"
+    race_onehot = bool(onehot) and backend_name not in _BLOCKLESS_BACKENDS
+    if len(candidates) == 1 and not (race_dtypes or race_onehot or race_fuse):
+        return candidates[0], base_dts, onehot, pin_fused, "autotune"
 
     _AUTOTUNE_STATS["raced"] += 1
     args = _autotune_inputs(spec)
     jit_cache: Dict[tuple, Callable] = {}
 
-    def get_fn(bq, dts):
+    def get_fn(bq, dts, oh=None, fused=None, timed="fwd"):
         """Jitted + warmed executor for one candidate, cached so incumbent
-        re-appearances across race rounds never recompile."""
-        ck = (bq, dts)
+        re-appearances across race rounds never recompile.  ``timed``:
+        'fwd' times the forward, 'train' times forward + full VJP."""
+        oh = onehot if oh is None else oh
+        fused = pin_fused if fused is None else fused
+        ck = (bq, dts, oh, fused, timed)
         if ck not in jit_cache:
-            tuning = PlanTuning(block_q=bq, onehot_levels=onehot,
+            tuning = PlanTuning(block_q=bq, onehot_levels=oh,
                                 interpret=interpret, source="autotune",
-                                slab_dtypes=dts)
-            f = jax.jit(builder(spec, tuning))
+                                slab_dtypes=dts, fuse_levels=fused)
+            exec_fn = builder(spec, tuning)
+            if timed == "train":
+                f = jax.jit(jax.grad(
+                    lambda v, l, a, e=exec_fn: jnp.sum(e(v, l, a)),
+                    argnums=(0, 1, 2)))
+            else:
+                f = jax.jit(exec_fn)
             jax.block_until_ready(f(*args))  # compile + warm (may raise)
             jit_cache[ck] = f
         return jit_cache[ck]
 
-    def race(variants: Dict[Any, tuple]):
-        """Interleave-time variants {key: (bq, dts)}; unbuildable ones drop."""
+    def race(variants: Dict[Any, tuple], timed="fwd"):
+        """Interleave-time variants {key: (bq, dts[, oh[, fused]])};
+        unbuildable candidates drop out."""
         fns = {}
-        for k, (bq, dts) in variants.items():
+        for k, v in variants.items():
             try:
-                fns[k] = get_fn(bq, dts)
+                fns[k] = get_fn(*v, timed=timed)
             except Exception:
                 continue  # candidate doesn't fit/compile: skip
         if not fns:
@@ -687,7 +812,7 @@ def _autotune_plan(
         # every candidate failed to build: fall back to the heuristic and
         # do NOT persist — a never-validated plan must not poison the
         # per-device winner cache for future processes
-        return heur, base_dts, "heuristic"
+        return heur, base_dts, onehot, False, "heuristic"
     best = bkey
 
     best_dts = base_dts
@@ -698,8 +823,14 @@ def _autotune_plan(
         # marginal saving genuinely beats its cast cost end-to-end
         wide, narrow = (str(jnp.dtype(d)) for d in _SLAB_DTYPE_CANDIDATES)
         current = (wide,) * spec.num_levels
-        for l in range(spec.num_levels):
-            trial = current[:l] + (narrow,) + current[l + 1:]
+        # a pinned-fused plan stores ONE super-slab whose dtype is the
+        # widest committed level — per-level flips can't mix, so the
+        # race is a single uniform wide-vs-narrow flip there
+        flips = ([tuple(range(spec.num_levels))] if pin_fused
+                 else [(l,) for l in range(spec.num_levels)])
+        for ls in flips:
+            trial = tuple(narrow if l in ls else d
+                          for l, d in enumerate(current))
             k, times = race({"cur": (best, current), "trial": (best, trial)})
             if (k == "trial"
                     and times["trial"] < times["cur"] * (1 - _AUTOTUNE_MARGIN)):
@@ -707,18 +838,64 @@ def _autotune_plan(
         best_dts = current
         if best_dts != base_dts and backend_name not in _BLOCKLESS_BACKENDS:
             # flipped levels halved their residency: re-plan blocks with
-            # the committed per-level itemsizes (the 'bf16 frees VMEM ->
-            # wider vec-len' payoff) and keep whichever clearly wins
-            rebq = _blocks_for_slab_dtypes(spec, best_dts)
+            # the committed itemsizes (the 'bf16 frees VMEM -> wider
+            # vec-len' payoff — per-level itemsizes, or the whole-pyramid
+            # residency for a pinned-fused plan) and keep the clear winner
+            rebq = (_heuristic_block_q(
+                        spec, fused=True,
+                        value_itemsize=_fused_slab_itemsize(best_dts))
+                    if pin_fused else _blocks_for_slab_dtypes(spec, best_dts))
             if rebq != best:
                 k, times = race({"cur": (best, best_dts), "re": (rebq, best_dts)})
                 if (k == "re"
                         and times["re"] < times["cur"] * (1 - _AUTOTUNE_MARGIN)):
                     best = rebq
 
-    disk[key] = {"block_q": list(best), "slab_dtypes": list(best_dts)}
+    best_onehot = onehot
+    if race_onehot:
+        # greedy per-level routing flips from the static-threshold start:
+        # the ONEHOT_MAX_ROWS heuristic proposes, the race disposes.
+        # Train specs time fwd+VJP — the routing also picks the
+        # backward's scatter path (onehot_scatter), where it matters most
+        timed = "train" if spec.train else "fwd"
+        current = onehot
+        for l in range(spec.num_levels):
+            trial = current[:l] + (not current[l],) + current[l + 1:]
+            k, times = race({"cur": (best, best_dts, current),
+                             "trial": (best, best_dts, trial)}, timed=timed)
+            if (k == "trial"
+                    and times["trial"] < times["cur"] * (1 - _AUTOTUNE_MARGIN)):
+                current = trial
+        best_onehot = current
+
+    best_fused = pin_fused
+    if race_fuse:
+        # fused challenger at its OWN geometry: one shared block planned
+        # against the whole-pyramid residency, uniform (widest) slab
+        # dtype; timed fwd+VJP for train specs — the backward is where
+        # fusion changes launch count and gout streaming the most
+        uni = (max(best_dts, key=lambda n: jnp.dtype(n).itemsize),) * spec.num_levels
+        fused_bq = _heuristic_block_q(
+            spec, fused=True, value_itemsize=_fused_slab_itemsize(uni))
+        timed = "train" if spec.train else "fwd"
+        k, times = race(
+            {"per-level": (best, best_dts, best_onehot, False),
+             "fused": (fused_bq, uni, best_onehot, True)}, timed=timed)
+        if k is not None and "fused" in times:
+            if "per-level" not in times:
+                best_fused = True  # per-level didn't build; fused did
+            elif times["fused"] < times["per-level"] * (1 - _AUTOTUNE_MARGIN):
+                best_fused = True
+        if best_fused:
+            best, best_dts = fused_bq, uni
+
+    parsed = {"block_q": best, "slab_dtypes": best_dts,
+              "sharding": None, "grad_reduce": None,
+              "onehot_levels": best_onehot if race_onehot else None,
+              "fuse_levels": best_fused if fusable else None}
+    disk[key] = _winner_entry(parsed)
     _store_autotune_cache(disk)
-    return best, best_dts, "autotune"
+    return best, best_dts, best_onehot, best_fused, "autotune"
 
 
 def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
@@ -757,9 +934,9 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
         spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
-    if parsed is not None and parsed[2] in ("1d", "2d"):
+    if parsed is not None and parsed["sharding"] in ("1d", "2d"):
         _AUTOTUNE_STATS["cache_hits"] += 1
-        return parsed[2], None
+        return parsed["sharding"], None
 
     _AUTOTUNE_STATS["raced"] += 1
     # batch must divide dp for the 1D candidate (dp shards batch there)
@@ -784,7 +961,7 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
                 f = jax.jit(exec_fn)
             jax.block_until_ready(f(*args))  # compile + warm (may raise)
             fns[name] = f
-            built[name] = (exec_fn, tuning, r)
+            built[name] = (exec_fn, tuning, r, inner_exec)
         except Exception:
             continue  # candidate doesn't build on this mesh: skip
     if not fns:
@@ -801,11 +978,88 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
               else "1d")
     t = built[winner][1]
     disk = _load_autotune_cache()
-    disk[key] = {"block_q": list(t.block_q),
-                 "slab_dtypes": list(t.slab_dtypes or _default_slab_dtypes(spec)),
-                 "sharding": winner}
+    disk[key] = _winner_entry({
+        "block_q": t.block_q,
+        "slab_dtypes": t.slab_dtypes or _default_slab_dtypes(spec),
+        "sharding": winner,
+        "onehot_levels": None,
+        "fuse_levels": (t.fuse_levels
+                        if backend_name in _FUSABLE_BACKENDS else None),
+        "grad_reduce": None})
     _store_autotune_cache(disk)
     return winner, built[winner]
+
+
+def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
+                          query_parallel: bool, mode: str, dp, tp,
+                          tp_size: int, inner_exec: Callable,
+                          local_spec: MsdaSpec, tuning: "PlanTuning"):
+    """Race the grad_value reduction (ring vs psum) per mesh topology.
+
+    The roadmap's distribution follow-up: whether the ppermute ring or
+    the monolithic psum wins the query-sharded backward's tp-axis
+    grad_value reduction is topology-dependent (on DCN-crossing meshes
+    the single collective can win; on ICI rings the chunked circulation
+    does) — so under ``tune="autotune"`` + ``grad_reduce="auto"`` the
+    two legs are raced the way the sharding mode is: both sharded
+    executors share the SAME inner (unsharded) executor and differ only
+    in the collective, timings are full fwd+VJP (the legs only exist in
+    the backward), and the winner persists in the mesh-keyed winner
+    entry's optional ``"grad_reduce"`` field alongside ``"sharding"``.
+
+    Returns ``(choice, exec_fn_or_None)`` — the winner's built sharded
+    executor when the race ran, ``None`` on a cache hit (the caller
+    rebuilds; wiring a shard_map is cheap).  Only called for train
+    specs: inference plans never run the backward, so 'auto' stays ring.
+    """
+    key = autotune_winner_key(
+        spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
+    disk = _load_autotune_cache()
+    parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is not None and parsed["grad_reduce"] in ("ring", "psum"):
+        _AUTOTUNE_STATS["cache_hits"] += 1
+        return parsed["grad_reduce"], None
+
+    from repro.sharding import rules
+
+    _AUTOTUNE_STATS["raced"] += 1
+    batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
+    args = _autotune_inputs(spec, batch=batch)
+    fns: Dict[str, Callable] = {}
+    built: Dict[str, Callable] = {}
+    for gr in ("ring", "psum"):
+        try:
+            exec_fn = _build_sharded_exec(
+                spec, inner_exec, local_spec, mesh, mode, dp, tp, tp_size, gr)
+            f = jax.jit(jax.grad(
+                lambda v, l, a, e=exec_fn: jnp.sum(e(v, l, a)),
+                argnums=(0, 1, 2)))
+            jax.block_until_ready(f(*args))  # compile + warm (may raise)
+            fns[gr] = f
+            built[gr] = exec_fn
+        except Exception:
+            continue
+    if not fns:
+        return "ring", None  # nothing raced: keep the default, persist nothing
+    if len(fns) < 2:
+        # lone survivor: use it, don't persist (same contract as sharding)
+        gr = next(iter(fns))
+        return gr, built[gr]
+    times = _time_executors(fns, args)
+    # ring is the incumbent default; psum must clear the noise margin
+    choice = ("psum" if times["psum"] < times["ring"] * (1 - _AUTOTUNE_MARGIN)
+              else "ring")
+    disk = _load_autotune_cache()
+    prev = _parse_cache_entry(disk.get(key), spec)
+    if prev is None:  # no sharding race ran (mode was pinned): start fresh
+        prev = {"block_q": tuning.block_q,
+                "slab_dtypes": tuning.slab_dtypes or _default_slab_dtypes(local_spec),
+                "sharding": None, "onehot_levels": None,
+                "fuse_levels": None, "grad_reduce": None}
+    prev["grad_reduce"] = choice
+    disk[key] = _winner_entry(prev)
+    _store_autotune_cache(disk)
+    return choice, built[choice]
 
 
 # --------------------------------------------------------------------------
@@ -1060,16 +1314,30 @@ class MsdaPlan:
         return self.tuning.block_q
 
     # -- inspectability ---------------------------------------------------
+    @property
+    def fused(self) -> bool:
+        """True when this plan runs the whole-pyramid fused kernels."""
+        return bool(self.tuning.fuse_levels)
+
     def level_report(self) -> List[Dict[str, Any]]:
         """Per-level planning facts (the numbers ``describe`` prints).
 
         Reported against ``local_spec`` — the per-shard geometry the
-        tuning was actually computed for.
+        tuning was actually computed for.  For fused plans the
+        ``vmem_frac`` is the WHOLE pyramid's occupancy (every level's
+        slab is resident at once), identical on every row.
         """
         from repro.kernels import ops
 
         s = self.local_spec
         dts = self.tuning.slab_dtypes or _default_slab_dtypes(s)
+        fused = self.fused
+        fused_resident = 0
+        if fused:
+            fused_resident = ops.fused_resident_bytes(
+                s.spatial_shapes, s.head_dim,
+                slab_itemsize=_fused_slab_itemsize(dts), train=s.train,
+                accum_itemsize=s.accum_itemsize)
         rows = []
         for l, hw in enumerate(s.spatial_shapes):
             slab = ops.slab_rows(hw)
@@ -1082,8 +1350,17 @@ class MsdaPlan:
             if s.train:  # widened (accum-dtype) grad slab rides along
                 slab_bytes += slab * s.head_dim * s.accum_itemsize
             bq = self.tuning.block_q[l] if l < len(self.tuning.block_q) else 0
-            per_q = ops.per_query_bytes(s.num_points, s.head_dim)
-            occupancy = (slab_bytes + bq * per_q) / max(s.vmem_budget, 1)
+            # fused plans store ONE super-slab in the widest committed
+            # dtype — the per-step working set is sized by it, not by
+            # the level's own (possibly narrower) commitment
+            step_item = (_fused_slab_itemsize(dts) if fused
+                         else jnp.dtype(sdt).itemsize)
+            per_q = ops.per_query_bytes(
+                s.num_points, s.head_dim, train=s.train,
+                slab_itemsize=step_item,
+                levels=s.num_levels if fused else 1)
+            resident = fused_resident if fused else slab_bytes
+            occupancy = (resident + bq * per_q) / max(s.vmem_budget, 1)
             onehot = bool(self.tuning.onehot_levels[l]) if self.tuning.onehot_levels else False
             if self.backend == "ref":
                 gather = "xla"
@@ -1103,6 +1380,7 @@ class MsdaPlan:
                 "q_steps": -(-_round_up(s.num_queries, max(bq, 1)) // max(bq, 1)),
                 "gather": gather,
                 "vmem_frac": occupancy,
+                "fused": fused,
             })
         return rows
 
@@ -1172,12 +1450,22 @@ class MsdaPlan:
         if self.local_spec is not self.spec:
             shard_note += (f"  per-shard: Q={self.local_spec.num_queries} "
                            f"H={self.local_spec.num_heads} (levels below are per shard)\n")
+        fuse_note = ""
+        if self.fused:
+            from repro.kernels import ops
+
+            _, total = ops.pyramid_row_offsets(self.local_spec.spatial_shapes)
+            fuse_note = (
+                f"  fused pyramid: 1 launch/direction  "
+                f"super_slab_rows={total}  shared block_q={self.block_q[0]}\n")
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
-            f"sharding={self.sharding_mode}, train={s.train}, dtype={s.dtype}, "
+            f"sharding={self.sharding_mode}, "
+            f"fuse={'pyramid' if self.fused else 'per-level'}, "
+            f"train={s.train}, dtype={s.dtype}, "
             f"accum={s.accum_dtype})\n"
             f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
-            f"levels={s.num_levels} S={s.total_pixels}\n" + shard_note +
+            f"levels={s.num_levels} S={s.total_pixels}\n" + shard_note + fuse_note +
             f"  vmem_budget={s.vmem_budget / 2**20:.1f} MiB  "
             f"interpret={self.tuning.interpret}\n"
         )
@@ -1279,18 +1567,29 @@ def msda_plan(
 
     def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
         dts = _default_slab_dtypes(s)
+        onehot = _onehot_levels(s)
         if block_q is not None:
             if len(block_q) != s.num_levels:
                 raise ValueError(
                     f"block_q has {len(block_q)} entries for {s.num_levels} levels")
             bq, source = tuple(int(b) for b in block_q), "override"
+            # a NON-uniform override pins per-level blocks the fused
+            # kernel (one shared block) cannot honour — never silently
+            # reinterpret it; only a uniform override may still fuse
+            fused = (len(set(bq)) == 1
+                     and _resolve_fuse_levels(s, dts, backend_name))
         elif tune == "autotune" and backend_name != "ref":
-            bq, dts, source = _autotune_plan(s, backend_name, builder, interpret)
+            bq, dts, onehot, fused, source = _autotune_plan(
+                s, backend_name, builder, interpret)
         else:
-            bq, source = _heuristic_block_q(s), "heuristic"
-        tuning = PlanTuning(block_q=bq, onehot_levels=_onehot_levels(s),
+            fused = _resolve_fuse_levels(s, dts, backend_name)
+            bq, source = _heuristic_block_q(
+                s, fused=fused,
+                value_itemsize=(_fused_slab_itemsize(dts) if fused
+                                else None)), "heuristic"
+        tuning = PlanTuning(block_q=bq, onehot_levels=onehot,
                             interpret=interpret, source=source,
-                            slab_dtypes=dts)
+                            slab_dtypes=dts, fuse_levels=fused)
         return builder(s, tuning), tuning
 
     if mesh is None:
@@ -1309,7 +1608,7 @@ def msda_plan(
                 build_local)
         if prebuilt is not None:
             # the race already built (and block-planned) the winner
-            exec_fn, tuning, (mode, dp, tp, tp_size, local_spec) = prebuilt
+            exec_fn, tuning, (mode, dp, tp, tp_size, local_spec), inner_exec = prebuilt
         else:
             mode, dp, tp, tp_size, local_spec = _plan_sharding(
                 spec, mesh, query_parallel, shard_choice)
@@ -1317,14 +1616,25 @@ def msda_plan(
             exec_fn = _build_sharded_exec(
                 spec, inner_exec, local_spec, mesh, mode, dp, tp, tp_size,
                 grad_reduce)
+        resolved_gr = _resolve_grad_reduce(grad_reduce, mode, tp_size)
+        if (tune == "autotune" and grad_reduce == "auto" and spec.train
+                and resolved_gr == "ring"):
+            # raced grad_value reduction (ring vs psum) per mesh topology
+            choice, raced_exec = _autotune_grad_reduce(
+                spec, backend_name, mesh, query_parallel, mode, dp, tp,
+                tp_size, inner_exec, local_spec, tuning)
+            if choice != "ring":
+                exec_fn = raced_exec or _build_sharded_exec(
+                    spec, inner_exec, local_spec, mesh, mode, dp, tp,
+                    tp_size, choice)
+                resolved_gr = choice
         plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
                         sharding_mode=mode, local_spec=local_spec,
                         _exec=exec_fn,
                         mesh_axes=tuple(mesh.axis_names),
                         mesh_shape=tuple(int(s) for s in mesh.devices.shape),
                         query_parallel=bool(query_parallel),
-                        grad_reduce=_resolve_grad_reduce(
-                            grad_reduce, mode, tp_size))
+                        grad_reduce=resolved_gr)
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)

@@ -36,10 +36,14 @@ from repro.kernels import plan as plan_mod
 
 # v2 grew the optional per-entry "sharding" record (distributed plans:
 # mode, mesh axes/shape, query_parallel, grad_reduce) and the mesh-keyed
-# winner seeding that goes with it.  v1 stores (local plans only) load
-# unchanged; entries a NEWER schema writes still degrade per entry.
-PLAN_STORE_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# winner seeding that goes with it.  v3 grew the whole-pyramid fusion
+# decision: specs carry ``fuse_levels``, autotune winners the optional
+# ``fuse_levels`` / ``onehot_levels`` / ``grad_reduce`` fields — all
+# round-tripped so a restored plan keeps the raced decisions with zero
+# timing runs.  v1/v2 stores load unchanged; entries a NEWER schema
+# writes still degrade per entry.
+PLAN_STORE_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 
 
 def _device_kind() -> str:
@@ -119,10 +123,17 @@ class PlanStore:
             if src == "override":
                 entry["block_q"] = [int(b) for b in plan.tuning.block_q]
             if src.startswith("autotune"):
-                entry["winner"] = {
+                winner: Dict[str, Any] = {
                     "block_q": [int(b) for b in plan.tuning.block_q],
                     "slab_dtypes": list(plan.tuning.slab_dtypes),
+                    # the fusion race's decision rides along so a
+                    # restored plan re-commits it with zero timing runs
+                    "fuse_levels": bool(plan.tuning.fuse_levels),
                 }
+                if plan.spec.onehot_small_levels and plan.tuning.onehot_levels:
+                    winner["onehot_levels"] = [
+                        bool(x) for x in plan.tuning.onehot_levels]
+                entry["winner"] = winner
             entries.append(entry)
         payload = {
             "version": PLAN_STORE_VERSION,
@@ -210,9 +221,15 @@ class PlanStore:
                     _, local_spec = plan_mod.resolve_sharding(
                         spec, mesh, qp, choice)
                     seeds.append((local_spec, entry["backend"], entry["winner"]))
-                    # ... and the sharding choice to the mesh-keyed race
-                    seeds.append((spec, entry["backend"],
-                                  dict(entry["winner"], sharding=choice),
+                    # ... and the sharding choice — plus the raced
+                    # grad_value reduction, so request-time
+                    # grad_reduce="auto" plans resolve it from the cache
+                    # instead of re-racing ring vs psum — to the
+                    # mesh-keyed race entry
+                    mesh_winner = dict(entry["winner"], sharding=choice)
+                    if shard.get("grad_reduce") in ("ring", "psum"):
+                        mesh_winner["grad_reduce"] = shard["grad_reduce"]
+                    seeds.append((spec, entry["backend"], mesh_winner,
                                   plan_mod.mesh_winner_suffix(mesh, qp)))
         report.seeded_winners = plan_mod.seed_autotune_winners(seeds)
         # pass 2: rebuild the plans (autotune resolves via the seeds)

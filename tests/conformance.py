@@ -9,7 +9,9 @@ registry).  CI shards the matrix via two env vars:
 * ``REPRO_CONFORMANCE_BACKENDS`` — comma list restricting the backends
   (e.g. ``"ref,cpu"`` for the Pallas-free CPU lane),
 * ``REPRO_CONFORMANCE_POLICIES`` — comma list restricting the dtype
-  policies (``"float32"`` / ``"bfloat16"``).
+  policies (``"float32"`` / ``"bfloat16"``),
+* ``REPRO_CONFORMANCE_FUSE`` — comma list restricting the
+  whole-pyramid fusion variants (``"off"`` / ``"on"``).
 
 Tolerance tiers (documented, per dtype policy):
 
@@ -63,6 +65,10 @@ def _env_subset(env_var, names):
 
 BACKENDS = _env_subset("REPRO_CONFORMANCE_BACKENDS", registry.list_backends())
 POLICIES = _env_subset("REPRO_CONFORMANCE_POLICIES", ("float32", "bfloat16"))
+# whole-pyramid fusion variants: every backend is exercised both with the
+# fused single-launch plan and the per-level one ('on' is honoured only
+# by fusable backends — elsewhere it's a no-op, which this matrix proves)
+FUSES = _env_subset("REPRO_CONFORMANCE_FUSE", ("off", "on"))
 
 
 @pytest.fixture(autouse=True)
@@ -86,23 +92,26 @@ def _inputs(seed=0, levels=LEVELS, b=B, q=Q, h=H, d=D, p=P):
     return value, loc, attn
 
 
-def _spec(policy, *, train=False, levels=LEVELS, q=Q, h=H, d=D, p=P):
+def _spec(policy, *, train=False, levels=LEVELS, q=Q, h=H, d=D, p=P,
+          fuse="auto"):
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
     return MsdaSpec(spatial_shapes=levels, num_heads=h, head_dim=d,
                     num_points=p, num_queries=q, dtype="float32", train=train,
-                    slab_dtype=slab_dtype, accum_dtype=accum_dtype)
+                    slab_dtype=slab_dtype, accum_dtype=accum_dtype,
+                    fuse_levels=fuse)
 
 
 # --------------------------------------------------------------------------
-# fwd parity: every backend x every dtype policy vs the fp32 oracle
+# fwd parity: every backend x dtype policy x fusion variant vs the oracle
 # --------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("fuse", FUSES)
 @pytest.mark.parametrize("policy", POLICIES)
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_fwd_matches_ref_oracle(backend, policy):
+def test_fwd_matches_ref_oracle(backend, policy, fuse):
     value, loc, attn = _inputs()
-    plan = msda_plan(_spec(policy), backend=backend)
+    plan = msda_plan(_spec(policy, fuse=fuse), backend=backend)
     out = plan(value, loc, attn)
     ref = msda_ref(value, LEVELS, loc, attn)
     assert out.shape == ref.shape and out.dtype == ref.dtype
@@ -136,11 +145,12 @@ def test_bf16_policy_commits_bf16_slabs(backend, policy):
 # --------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("fuse", FUSES)
 @pytest.mark.parametrize("policy", POLICIES)
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_vjp_matches_ref_oracle(backend, policy):
+def test_vjp_matches_ref_oracle(backend, policy, fuse):
     value, loc, attn = _inputs()
-    plan = msda_plan(_spec(policy, train=True), backend=backend)
+    plan = msda_plan(_spec(policy, train=True, fuse=fuse), backend=backend)
 
     g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2),
                  argnums=(0, 1, 2))(value, loc, attn)

@@ -110,16 +110,22 @@ def _round_up8(x):
 @given(spec_dims)
 @settings(**SET)
 def test_planned_block_q_respects_vmem_model(args):
-    """For random specs, heuristic block_q stays sublane(8)-aligned, never
-    exceeds the query extent or the 2048 cap, and under the slab-bytes
-    model never exceeds vmem_budget (unless already clamped at the 8-row
-    floor / the model's 1 MiB minimum working set)."""
+    """For random specs — TRAIN ones included — heuristic block_q stays
+    sublane(8)-aligned, never exceeds the query extent or the 2048 cap,
+    and under the slab-bytes model never exceeds vmem_budget (unless
+    already clamped at the 8-row floor / the model's 1 MiB minimum
+    working set).  The per-query working set includes the train-mode
+    saved-corner output block (block_q x 4P x D in the slab dtype) the
+    model used to ignore."""
     levels, P, D, Q, budget, train, slab = args
     spec = plan_mod.MsdaSpec(
         spatial_shapes=levels, num_heads=2, head_dim=D, num_points=P,
         num_queries=Q, train=train, vmem_budget=budget, slab_dtype=slab)
     bqs = plan_mod._heuristic_block_q(spec)
-    per_q = ops.per_query_bytes(P, D)
+    per_q = ops.per_query_bytes(P, D, train=train,
+                                slab_itemsize=spec.slab_itemsize)
+    if train:
+        assert per_q == ops.per_query_bytes(P, D) + 4 * P * D * spec.slab_itemsize
     for hw, bq in zip(levels, bqs):
         assert bq % 8 == 0 and 8 <= bq <= 2048
         assert bq <= _round_up8(Q)
@@ -145,6 +151,42 @@ def test_bf16_slab_never_narrows_blocks(args):
     assert all(n >= w for n, w in zip(narrow, wide))
 
 
+@given(spec_dims)
+@settings(**SET)
+def test_fusion_rung_respects_vmem_fitting_model(args):
+    """The fusion rung's 'auto' decision is exactly the documented
+    fitting model: packed-pyramid residency (+ train grad super-slab)
+    plus one minimal query step's working set within the budget — and
+    'on'/'off' pin it regardless."""
+    levels, P, D, Q, budget, train, slab = args
+    mk = lambda fuse: plan_mod.MsdaSpec(
+        spatial_shapes=levels, num_heads=2, head_dim=D, num_points=P,
+        num_queries=Q, train=train, vmem_budget=budget, slab_dtype=slab,
+        fuse_levels=fuse)
+    spec = mk("auto")
+    dts = plan_mod._default_slab_dtypes(spec)
+    decided = plan_mod._resolve_fuse_levels(spec, dts, "pallas")
+    fits = ops.fused_pyramid_fits(
+        levels, P, D, value_itemsize=spec.slab_itemsize, train=train,
+        vmem_budget=spec.vmem_budget, accum_itemsize=spec.accum_itemsize)
+    if len(levels) >= 2:
+        assert decided == fits
+        rows = sum(ops.slab_rows(hw) for hw in levels)
+        resident = rows * D * spec.slab_itemsize
+        if train:
+            resident += rows * D * spec.accum_itemsize
+        per_q = ops.per_query_bytes(P, D, train=train,
+                                    slab_itemsize=spec.slab_itemsize,
+                                    levels=len(levels))
+        assert fits == (resident + 8 * per_q <= spec.vmem_budget)
+    else:
+        assert not decided  # single level: nothing to fuse
+    assert plan_mod._resolve_fuse_levels(mk("on"), dts, "pallas")
+    assert not plan_mod._resolve_fuse_levels(mk("off"), dts, "pallas")
+    # non-fusable backends never fuse, whatever the policy says
+    assert not plan_mod._resolve_fuse_levels(mk("on"), dts, "cpu")
+
+
 # --------------------------------------------------------------------------
 # autotune winner cache: round-trips through XDG_CACHE_HOME, both schemas
 # --------------------------------------------------------------------------
@@ -159,9 +201,16 @@ cache_entries = st.dictionaries(
                 "slab_dtypes": st.lists(
                     st.sampled_from(["float32", "bfloat16"]), min_size=2, max_size=2),
             },
-            # mesh-keyed entries grew an OPTIONAL sharding field (the
-            # 1D-vs-2D race winner); plain entries must keep parsing
-            optional={"sharding": st.sampled_from(["1d", "2d"])},
+            # entries grew OPTIONAL fields: "sharding"/"grad_reduce"
+            # (mesh-keyed race winners), "fuse_levels" (whole-pyramid
+            # fusion race) and "onehot_levels" (MXU-routing race) — any
+            # subset must keep parsing, pre-existing entries included
+            optional={
+                "sharding": st.sampled_from(["1d", "2d"]),
+                "fuse_levels": st.booleans(),
+                "onehot_levels": st.lists(st.booleans(), min_size=2, max_size=2),
+                "grad_reduce": st.sampled_from(["ring", "psum"]),
+            },
         ),
     ),
     max_size=4,
@@ -171,8 +220,9 @@ cache_entries = st.dictionaries(
 @given(cache_entries)
 @settings(**SET)
 def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entries):
-    """Winner caches (legacy flat lists AND the dtype-aware dict schema)
-    survive a store/load cycle rooted at a tmp XDG_CACHE_HOME."""
+    """Winner caches (legacy flat lists AND the dtype-aware dict schema
+    with every optional raced-axis field) survive a store/load cycle
+    rooted at a tmp XDG_CACHE_HOME."""
     import os
 
     tmp = tmp_path_factory.mktemp("xdg")
@@ -189,10 +239,21 @@ def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entr
         for hit in entries.values():
             parsed = plan_mod._parse_cache_entry(hit, spec)
             if isinstance(hit, dict):  # current schema always parses
-                assert parsed == (tuple(hit["block_q"]), tuple(hit["slab_dtypes"]),
-                                  hit.get("sharding"))
+                assert parsed["block_q"] == tuple(hit["block_q"])
+                assert parsed["slab_dtypes"] == tuple(hit["slab_dtypes"])
+                assert parsed["sharding"] == hit.get("sharding")
+                assert parsed["grad_reduce"] == hit.get("grad_reduce")
+                assert parsed["fuse_levels"] == hit.get("fuse_levels")
+                oh = hit.get("onehot_levels")
+                assert parsed["onehot_levels"] == (
+                    tuple(oh) if oh is not None else None)
+                # and the entry shape round-trips through the writer
+                assert plan_mod._parse_cache_entry(
+                    plan_mod._winner_entry(parsed), spec) == parsed
             elif len(hit) == spec.num_levels:  # legacy: level count must match
-                assert parsed == (tuple(hit), ("float32",) * 2, None)
+                assert parsed["block_q"] == tuple(hit)
+                assert parsed["slab_dtypes"] == ("float32",) * 2
+                assert parsed["sharding"] is None
             else:
                 assert parsed is None
     finally:

@@ -346,7 +346,8 @@ def test_autotune_races_slab_dtypes_and_persists(tmp_path, monkeypatch):
     assert all(d in ("float32", "bfloat16") for d in plan.tuning.slab_dtypes)
     entry = next(iter(json.load(open(tmp_path / "tune.json")).values()))
     assert entry == {"block_q": list(plan.block_q),
-                     "slab_dtypes": list(plan.tuning.slab_dtypes)}
+                     "slab_dtypes": list(plan.tuning.slab_dtypes),
+                     "fuse_levels": plan.fused}
     plan_mod.clear_plans()
     plan2 = msda_plan(spec, backend="pallas", tune="autotune")
     assert plan2.tuning.source == "autotune-cache"

@@ -291,7 +291,8 @@ def test_autotune_races_1d_vs_2d_and_persists(prob, tmp_path, monkeypatch):
     plan = pm.msda_plan(spec, backend="ref", tune="autotune", mesh=mesh,
                         query_parallel=True)
     assert plan.sharding_mode in ("query", "query2d")  # timing decides
-    assert pm.autotune_stats()["raced"] == 1
+    # >= 1: the grad_reduce (ring-vs-psum) race rides along for train specs
+    assert pm.autotune_stats()["raced"] >= 1
     winner = pm.get_autotune_winner(
         spec, "ref", mesh_suffix=pm.mesh_winner_suffix(mesh, True))
     assert winner is not None and winner["sharding"] in ("1d", "2d")
@@ -332,7 +333,8 @@ def test_plan_store_roundtrip_restores_2d_zero_races(prob, tmp_path, monkeypatch
     assert pm.autotune_stats()["raced"] == 0
     [restored] = report.plans
     assert restored.sharding_mode == "query2d"
-    assert restored.grad_reduce == "ring"
+    # the raced reduction (ring or psum — timing decides) is restored
+    assert restored.grad_reduce == plan.grad_reduce in ("ring", "psum")
     assert persistence_norm(restored.describe()) == persistence_norm(plan.describe())
     pm.clear_plans()
 
