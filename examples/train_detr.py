@@ -5,20 +5,24 @@ deformable attention over the feature pyramid.  Synthetic detection
 data (boxes whose pyramid features carry a planted signature) — the
 loss drops as MSDA learns to pool the right locations.
 
+The loop runs inside :class:`repro.training.TrainingHarness`, so the
+example doubles as the fault-tolerance demo: give it ``--ckpt-dir`` and
+``--preempt-at 40`` and watch it lose step 40 mid-compute, restore the
+latest checkpoint, and replay to a bit-identical trajectory.
+``--bench-out`` writes the ``BENCH_train.json`` step-time telemetry.
+
     PYTHONPATH=src python examples/train_detr.py --steps 150
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import manager as ckpt
 from repro.configs.base import get_config, reduced
 from repro.core import deformable_transformer as dt
 from repro.optim import adamw, schedule
-from repro.train import state as train_state
+from repro.training import (FaultSchedule, HarnessConfig, StepTimeRecorder,
+                            TrainingHarness)
 
 
 def synth_batch(cfg, key, B=4, T=3):
@@ -46,11 +50,15 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--preempt-at", type=int, default=None,
+                    help="inject a mid-step preemption at this step")
+    ap.add_argument("--bench-out", default=None,
+                    help="write BENCH_train.json telemetry here")
     args = ap.parse_args()
 
     cfg = reduced(get_config("deformable-detr"))
-    params = dt.init_detr(jax.random.PRNGKey(0), cfg)
-    opt = adamw.init_adamw(params)
+    B = 4
 
     # warm the MSDA plans (backend + block planning committed once, before
     # the first jitted step traces) and show what was decided
@@ -58,27 +66,54 @@ def main():
         print(f"msda plan ({name}):\n{plan.describe()}")
 
     @jax.jit
-    def step(params, opt, batch, lr):
+    def step_fn(state, batch):
+        params, opt = state["params"], state["opt"]
         loss, grads = jax.value_and_grad(
             lambda p: dt.detr_loss(p, cfg, batch, remat=False)
         )(params)
-        params, opt, gnorm = adamw.adamw_update(grads, opt, params, lr=lr)
-        return params, opt, loss, gnorm
-
-    t0 = time.time()
-    first = None
-    for s in range(args.steps):
-        batch = synth_batch(cfg, jax.random.PRNGKey(1000 + s))
-        lr = schedule.warmup_cosine(jnp.asarray(s), peak_lr=args.lr,
+        lr = schedule.warmup_cosine(state["step"], peak_lr=args.lr,
                                     warmup_steps=10, total_steps=args.steps)
-        params, opt, loss, gnorm = step(params, opt, batch, lr)
-        first = first if first is not None else float(loss)
+        params, opt, gnorm = adamw.adamw_update(grads, opt, params, lr=lr)
+        return ({"params": params, "opt": opt, "step": state["step"] + 1},
+                {"loss": loss, "grad_norm": gnorm, "lr": lr})
+
+    def init_fn():
+        params = dt.init_detr(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "opt": adamw.init_adamw(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # batches are a pure function of the step index -> a recovered run
+    # replays exactly the data the lost steps saw
+    def batch_fn(step):
+        return synth_batch(cfg, jax.random.PRNGKey(1000 + step), B=B)
+
+    sp = sum(h * w for h, w in cfg.msda.levels)
+    recorder = StepTimeRecorder(
+        tokens_per_step=B * sp,
+        config={"example": "train_detr", "steps": args.steps, "batch": B})
+    faults = (FaultSchedule.from_spec(f"preempt@{args.preempt_at}")
+              if args.preempt_at is not None else None)
+    harness = TrainingHarness(
+        step_fn=step_fn, batch_fn=batch_fn, init_fn=init_fn,
+        config=HarnessConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every),
+        faults=faults, telemetry=recorder)
+    out = harness.run()
+
+    losses = out["losses"]
+    for s in sorted(losses):
         if s % 10 == 0 or s == args.steps - 1:
-            print(f"step {s:4d}  loss {float(loss):7.4f}  gnorm {float(gnorm):6.2f}"
-                  f"  ({(time.time()-t0)/(s+1):.2f}s/step)", flush=True)
-        if args.ckpt_dir and (s + 1) % 50 == 0:
-            ckpt.save({"params": params, "step": jnp.asarray(s)}, args.ckpt_dir, s + 1)
-    print(f"loss {first:.3f} -> {float(loss):.3f} over {args.steps} steps")
+            print(f"step {s:4d}  loss {losses[s]:7.4f}")
+    for rec in out["recovery_log"]:
+        print(f"recovered from {rec['kind']} at step {rec['failed_step']}, "
+              f"resumed from checkpoint step {rec['resumed_from']}")
+    first, last = min(losses), max(losses)
+    summ = recorder.summary()
+    print(f"loss {losses[first]:.3f} -> {losses[last]:.3f} over "
+          f"{out['final_step']} steps ({summ['mean_step_s']:.2f}s/step, "
+          f"{out['restarts']} restarts)")
+    if args.bench_out:
+        print(f"wrote telemetry -> {recorder.write(args.bench_out)}")
 
 
 if __name__ == "__main__":

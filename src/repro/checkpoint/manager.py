@@ -12,6 +12,9 @@ checkpoint (the commit protocol a multi-host job runs on process 0).
   the (possibly different) mesh: **elastic restore** — a 512-chip
   checkpoint restores onto any surviving mesh whose axes still divide
   the leaf dims (GSPMD resharding handles the rest).
+* ``restore_latest_valid`` — same, but walks newest -> oldest past any
+  corrupt step (truncated leaf / bad manifest) instead of raising — the
+  training harness's fallback when a crash corrupted the newest write.
 * ``keep_last`` garbage-collects old steps.
 """
 from __future__ import annotations
@@ -72,16 +75,21 @@ def save_async(state, directory: str, step: int, *, keep_last: int = 3) -> threa
     return t
 
 
-def latest_step(directory: str) -> Optional[int]:
+def available_steps(directory: str) -> list:
+    """All committed step numbers, ascending (empty when none)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(directory)
         if d.startswith("step_") and not d.endswith(".tmp")
         and os.path.exists(os.path.join(directory, d, "manifest.json"))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, like, *, step: Optional[int] = None, shardings=None):
@@ -110,6 +118,32 @@ def restore(directory: str, like, *, step: Optional[int] = None, shardings=None)
         else:
             out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest_valid(directory: str, like, *, shardings=None):
+    """Restore the newest checkpoint that actually loads.
+
+    ``restore()`` raises on a corrupt step (truncated leaf, bad
+    manifest, missing array).  The training harness must instead fall
+    back: walk the committed steps newest -> oldest, skip any that fail
+    to load, and return the first that round-trips.  Returns
+    ``(state, step, skipped)`` where ``skipped`` is a list of
+    ``(step, reason)`` for every corrupt checkpoint passed over — the
+    recovery log the fault-injection tests assert on.  Raises
+    ``FileNotFoundError`` only when NO committed step loads.
+    """
+    skipped = []
+    for step in reversed(available_steps(directory)):
+        try:
+            state = restore(directory, like, step=step, shardings=shardings)
+            return state, step, skipped
+        # every step here had a manifest, so even FileNotFoundError means
+        # a torn write (missing leaf file) — skip it like any corruption
+        except Exception as e:  # noqa: BLE001 — corrupt step: fall back
+            skipped.append((step, f"{type(e).__name__}: {e}"))
+    raise FileNotFoundError(
+        f"no loadable checkpoint in {directory} "
+        f"(skipped {[s for s, _ in skipped]})")
 
 
 def _gc(directory: str, keep_last: int) -> None:

@@ -6,7 +6,10 @@ checkpoint at step k regenerates exactly the batches it would have seen
 
 * synthetic token streams (structured, learnable: repeated n-gram
   processes, not uniform noise — loss actually decreases);
-* a byte-tokenised text file (for the end-to-end examples).
+* a byte-tokenised text file (for the end-to-end examples);
+* synthetic detection batches (pyramid + boxes + labels with a planted
+  label signature at each box center — the DETR training workload the
+  elastic harness drives through ``launch/train.py``).
 
 A background prefetcher overlaps host-side batch synthesis with device
 compute.
@@ -16,7 +19,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -29,8 +32,12 @@ class DataConfig:
     seq_len: int
     vocab_size: int
     seed: int = 0
-    source: str = "synthetic"  # 'synthetic' | 'file'
+    source: str = "synthetic"  # 'synthetic' | 'file' | 'detection'
     path: Optional[str] = None
+    # detection-source geometry (matches the model config's msda levels)
+    levels: Tuple[Tuple[int, int], ...] = ()
+    feat_dim: int = 0
+    num_targets: int = 3
 
 
 def _synthetic_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
@@ -54,6 +61,33 @@ def _synthetic_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
         use_noise = rng.random((B, 1)) < 0.05
         toks[:, t : t + 1] = np.where(use_noise, noise, nxt)
     return {"tokens": toks[:, :-1].astype(np.int32), "targets": toks[:, 1:].astype(np.int32)}
+
+
+def _detection_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Synthetic detection batch: pyramid + boxes + labels.
+
+    Numpy port of ``examples/train_detr.synth_batch``, keyed by
+    ``(seed, step)`` like every other source so a restored run replays
+    bit-identical batches: each object's center pixel (per level) gets a
+    label-dependent one-hot bump the MSDA encoder can learn to pool.
+    """
+    if not cfg.levels or not cfg.feat_dim:
+        raise ValueError("detection source needs DataConfig.levels and feat_dim")
+    rng = np.random.default_rng((cfg.seed, step, 7))  # distinct LM stream
+    B, T, d = cfg.global_batch, cfg.num_targets, cfg.feat_dim
+    boxes = rng.uniform(0.2, 0.8, size=(B, T, 4)).astype(np.float32)
+    labels = rng.integers(1, cfg.vocab_size, size=(B, T))
+    sp = sum(h * w for h, w in cfg.levels)
+    pyr = (rng.standard_normal((B, sp, d)) * 0.05).astype(np.float32)
+    offset = 0
+    for h, w in cfg.levels:
+        cx = np.clip((boxes[..., 0] * w).astype(int), 0, w - 1)
+        cy = np.clip((boxes[..., 1] * h).astype(int), 0, h - 1)
+        flat = offset + cy * w + cx  # (B,T)
+        sig = 2.0 * np.eye(d, dtype=np.float32)[labels % d]
+        np.add.at(pyr, (np.arange(B)[:, None], flat), sig)
+        offset += h * w
+    return {"pyramid": pyr, "labels": labels.astype(np.int32), "boxes": boxes}
 
 
 class FileSource:
@@ -82,6 +116,8 @@ class Pipeline:
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         if self._file is not None:
             return self._file.batch(self.cfg, step)
+        if self.cfg.source == "detection":
+            return _detection_batch(self.cfg, step)
         return _synthetic_batch(self.cfg, step)
 
     def iterate(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:

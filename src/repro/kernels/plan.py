@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import time
 from collections import OrderedDict
@@ -432,7 +433,13 @@ def _onehot_levels(spec: MsdaSpec) -> Tuple[bool, ...]:
 # process-wide autotune activity counters.  "raced" counts specs whose
 # candidates were actually TIMED this process; a serving boot restored
 # from a plan store must keep it at zero (the CI smoke job asserts it).
-_AUTOTUNE_STATS = {"raced": 0, "cache_hits": 0, "seeded": 0}
+# "raced" counts every timing race; "raced_local" only the per-shard
+# block/dtype/onehot/fuse races, "raced_mesh" only the mesh-keyed
+# sharding / grad_reduce races — the elastic restore path asserts a
+# mesh-resized restart re-races EXACTLY the mesh-keyed axes
+# (raced_local == 0) against this split.
+_AUTOTUNE_STATS = {"raced": 0, "raced_local": 0, "raced_mesh": 0,
+                   "cache_hits": 0, "seeded": 0}
 
 
 def autotune_stats() -> Dict[str, int]:
@@ -532,7 +539,7 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
     """Decode a winner-cache entry into the normalised winner dict.
 
     Returns ``{"block_q": tuple, "slab_dtypes": tuple, "sharding":
-    None|'1d'|'2d', "onehot_levels": None|tuple, "fuse_levels":
+    None|'1d'|'2d'|'hybrid', "onehot_levels": None|tuple, "fuse_levels":
     None|bool, "grad_reduce": None|'ring'|'psum'}`` or ``None`` on a
     miss.  The ``sharding``/``grad_reduce`` fields live on mesh-keyed
     entries (the 1D-vs-2D and ring-vs-psum races of distributed plans);
@@ -558,7 +565,7 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
             bq = hit.get("block_q")
             dts = hit.get("slab_dtypes")
             sharding = hit.get("sharding")
-            if sharding is not None and sharding not in ("1d", "2d"):
+            if sharding is not None and sharding not in ("1d", "2d", "hybrid"):
                 return None
             gr = hit.get("grad_reduce")
             if gr is not None and gr not in ("ring", "psum"):
@@ -768,6 +775,7 @@ def _autotune_plan(
         return candidates[0], base_dts, onehot, pin_fused, "autotune"
 
     _AUTOTUNE_STATS["raced"] += 1
+    _AUTOTUNE_STATS["raced_local"] += 1
     args = _autotune_inputs(spec)
     jit_cache: Dict[tuple, Callable] = {}
 
@@ -901,18 +909,21 @@ def _autotune_plan(
 def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
                        query_parallel: bool, grad_reduce: str,
                        build_local: Callable):
-    """Race the 1D ladder vs the 2D (dp x tp) mode.
+    """Race the 1D ladder vs the 2D (dp x tp) — and, where the 1D rung
+    degenerates to batch-only, the hybrid batch x query — modes.
 
-    Returns ``(choice, built)`` where ``choice`` is ``'1d' | '2d'`` and
-    ``built`` is the winner's already-constructed ``(sharded_exec,
-    tuning, resolution)`` — or None on a cache hit / degenerate race —
-    so the caller never rebuilds what the race just built.
+    Returns ``(choice, built)`` where ``choice`` is ``'1d' | '2d' |
+    'hybrid'`` and ``built`` is the winner's already-constructed
+    ``(sharded_exec, tuning, resolution)`` — or None on a cache hit /
+    degenerate race — so the caller never rebuilds what the race just
+    built.
 
     The sharding mode joined the autotune space in the same spirit as
     block_q and the slab dtypes: which side wins is geometry- and
     topology-dependent (2D buys a dp_size-wider query fan-out but pays
     value replication over dp plus the dp-psum leg of the grad
-    reduction), so under ``tune="autotune"`` + ``sharding="auto"`` both
+    reduction; hybrid trades batch ways for query ways on tp-less
+    meshes), so under ``tune="autotune"`` + ``sharding="auto"`` the
     full sharded executors are built — each at its OWN tuned local
     geometry, the nested block/dtype races caching per local spec as
     usual — and timed interleaved on synthetic operands at the GLOBAL
@@ -922,29 +933,43 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
     winner persists in the standard winner-cache schema grown by a
     ``"sharding"`` field (old entries parse unchanged), keyed by
     (device kind, backend, spec, mesh topology, qp flag) so a 2x2
-    winner never mis-tunes a 1x4 mesh.
+    winner never mis-tunes a 1x4 mesh.  The hybrid challenger only
+    joins when the 1D rung resolved to batch/replicated (a trivial tp
+    axis): on meshes where the ladder already tiles queries the hybrid
+    tiling is redundant, and racing it would only add jitter.
     """
     from repro.sharding import rules
 
     r1 = _plan_sharding(spec, mesh, query_parallel, "1d")
+    cands: List[tuple] = [("1d", r1)]
     r2 = _plan_sharding(spec, mesh, query_parallel, "2d")
-    if r2[0] != "query2d":
-        return "1d", None  # no 2D candidate on this (spec, mesh)
+    if r2[0] == "query2d":
+        cands.append(("2d", r2))
+    rh = _plan_sharding(spec, mesh, query_parallel, "hybrid")
+    if rh[0] == "batchquery" and r1[0] in ("batch", "replicated"):
+        cands.append(("hybrid", rh))
+    if len(cands) == 1:
+        return "1d", None  # no challenger on this (spec, mesh)
     key = autotune_winner_key(
         spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
-    if parsed is not None and parsed["sharding"] in ("1d", "2d"):
+    if parsed is not None and parsed["sharding"] in ("1d", "2d", "hybrid"):
         _AUTOTUNE_STATS["cache_hits"] += 1
         return parsed["sharding"], None
 
     _AUTOTUNE_STATS["raced"] += 1
+    _AUTOTUNE_STATS["raced_mesh"] += 1
     # batch must divide dp for the 1D candidate (dp shards batch there)
     batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
+    if any(n == "hybrid" for n, _ in cands):
+        # ... and the hybrid tile for its candidate (lcm keeps both legal)
+        bt = HYBRID_BATCH_TILE
+        batch = batch * bt // math.gcd(batch, bt)
     args = _autotune_inputs(spec, batch=batch)
     fns: Dict[str, Callable] = {}
     built: Dict[str, tuple] = {}
-    for name, r in (("1d", r1), ("2d", r2)):
+    for name, r in cands:
         mode, dp, tp, tp_size, local = r
         try:
             inner_exec, tuning = build_local(local)
@@ -973,9 +998,14 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
         winner = next(iter(fns))
         return winner, built[winner]
     times = _time_executors(fns, args)
-    # the incumbent is the 1D ladder; 2D must clear the noise margin
-    winner = ("2d" if times["2d"] < times["1d"] * (1 - _AUTOTUNE_MARGIN)
-              else "1d")
+    # the incumbent is the 1D ladder; a challenger must clear the margin
+    winner = "1d"
+    if "1d" in times:
+        best = min((n for n in times if n != "1d"), key=times.get)
+        if times[best] < times["1d"] * (1 - _AUTOTUNE_MARGIN):
+            winner = best
+    else:
+        winner = min(times, key=times.get)
     t = built[winner][1]
     disk = _load_autotune_cache()
     disk[key] = _winner_entry({
@@ -1023,7 +1053,11 @@ def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
     from repro.sharding import rules
 
     _AUTOTUNE_STATS["raced"] += 1
+    _AUTOTUNE_STATS["raced_mesh"] += 1
     batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
+    if mode == "batchquery":
+        bt = HYBRID_BATCH_TILE
+        batch = batch * bt // math.gcd(batch, bt)
     args = _autotune_inputs(spec, batch=batch)
     fns: Dict[str, Callable] = {}
     built: Dict[str, Callable] = {}
@@ -1094,8 +1128,32 @@ def _mesh_cache_key(mesh) -> Optional[tuple]:
 # (87040 / 16 devices = 5440 per shard).  sharding="2d" overrides.
 QUERY2D_MIN_LOCAL_Q = 2048
 
-SHARDING_CHOICES = ("auto", "1d", "2d")
+SHARDING_CHOICES = ("auto", "1d", "2d", "hybrid")
 GRAD_REDUCE_CHOICES = ("auto", "ring", "psum")
+
+# the hybrid batch x query rung re-racks the WHOLE device set as
+# (batch_tile, n // batch_tile): batch shards over the first factor,
+# queries tile over the second.  On a tp-less mesh (Nx1) the classic
+# ladder degenerates to batch-only — mid-size B can't fill N batch ways,
+# while hybrid still keeps every device busy with B=batch_tile.  The
+# tile is a fixed small factor (not raced per B: B is unknown at plan
+# time) — 2 is the smallest non-trivial split and keeps the query
+# factor maximal.
+HYBRID_BATCH_TILE = 2
+
+
+def _hybrid_tiling(spec: MsdaSpec, mesh) -> Optional[Tuple[int, int]]:
+    """(batch_tile, query_tile) for the hybrid rung, or None if illegal
+    on this (spec, mesh): needs the device count to split as bt x qf
+    with a non-trivial query factor that divides Q."""
+    n = int(mesh.devices.size)
+    bt = HYBRID_BATCH_TILE
+    if n % bt:
+        return None
+    qf = n // bt
+    if qf <= 1 or spec.num_queries % qf:
+        return None
+    return bt, qf
 
 
 def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
@@ -1103,7 +1161,8 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
     """Resolve the legal sharding mode for this spec on this mesh.
 
     Returns (mode, dp_axis, tp_axis, tp_size, inner_spec) where ``mode``
-    is one of 'replicated' | 'batch' | 'head' | 'query' | 'query2d'.
+    is one of 'replicated' | 'batch' | 'head' | 'query' | 'query2d' |
+    'batchquery'.
 
     The 2D mode ('query2d') tiles QUERIES over dp x tp jointly — heads,
     batch and the value tensor are replicated — and is taken when both
@@ -1113,7 +1172,16 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
     On a 1xN or Nx1 mesh one of the axes is trivial, so a 2D request
     resolves to the equivalent 1D rung instead of pretending.
 
-    The 1D ladder below it is unchanged: query-parallel needs
+    The hybrid mode ('batchquery') ignores the mesh's named factoring
+    entirely and re-racks ALL devices as ``HYBRID_BATCH_TILE`` batch
+    ways x ``n/HYBRID_BATCH_TILE`` query ways (see
+    :func:`_hybrid_tiling`); ``tp_size`` in the returned tuple is the
+    QUERY factor (the width of the grad_value reduction).  Forced by
+    ``sharding="hybrid"``; under "auto" it slots between the query/head
+    rungs and the batch-only floor, so a query-parallel plan on an Nx1
+    mesh gets a non-degenerate step instead of idling N/B devices.
+
+    The 1D ladder is otherwise unchanged: query-parallel needs
     Q % tp == 0, head-parallel H % tp == 0; otherwise tp idles
     (batch-only) — same degradation ladder the old distributed_msda had,
     now committed once at plan time instead of re-derived per call.
@@ -1126,8 +1194,14 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
     tp_size = sizes.get("model", 1)
     dp_size = rules.axis_size(dp, mesh)
     H, Q = spec.num_heads, spec.num_queries
-    want_query = query_parallel or sharding == "2d"
-    if (sharding != "1d" and want_query
+    want_query = query_parallel or sharding in ("2d", "hybrid")
+    if sharding == "hybrid":
+        hy = _hybrid_tiling(spec, mesh)
+        if hy is not None:
+            bt, qf = hy
+            inner = dataclasses.replace(spec, num_queries=Q // qf)
+            return "batchquery", dp, tp, qf, inner
+    if (sharding not in ("1d", "hybrid") and want_query
             and dp is not None and dp_size > 1
             and tp is not None and tp_size > 1
             and Q % (dp_size * tp_size) == 0):
@@ -1141,6 +1215,14 @@ def _plan_sharding(spec: MsdaSpec, mesh, query_parallel: bool,
     if tp is not None and tp_size > 1 and H % tp_size == 0:
         inner = dataclasses.replace(spec, num_heads=H // tp_size)
         return "head", dp, tp, tp_size, inner
+    if sharding == "auto" and want_query and (tp is None or tp_size == 1):
+        # hybrid rung: the named ladder has no query axis left, but the
+        # raw device count still splits as batch_tile x query_tile
+        hy = _hybrid_tiling(spec, mesh)
+        if hy is not None:
+            bt, qf = hy
+            inner = dataclasses.replace(spec, num_queries=Q // qf)
+            return "batchquery", dp, tp, qf, inner
     # tp idle (or size 1): shards see the full head/query extent
     mode = "batch" if dp is not None else "replicated"
     return mode, dp, None, 1, spec
@@ -1163,7 +1245,7 @@ def _resolve_grad_reduce(grad_reduce: str, mode: str, tp_size: int) -> str:
     cross-shard reduction), psum-via-AD everywhere else.  Modes whose
     value tensor is sharded ('head', 'batch') have nothing to reduce and
     always report 'none'."""
-    if mode not in ("query", "query2d") or tp_size <= 1:
+    if mode not in ("query", "query2d", "batchquery") or tp_size <= 1:
         return "none"
     if grad_reduce == "auto":
         return "ring"
@@ -1174,7 +1256,19 @@ def _build_sharded_exec(spec, inner_exec, inner_spec, mesh, mode, dp, tp,
                         tp_size: int, grad_reduce: str):
     from repro.sharding import rules
 
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    if mode == "batchquery":
+        # hybrid rung: re-rack the WHOLE device set as (batch_tile x
+        # query_tile) — an internal mesh over the same devices — then the
+        # wiring IS the query mode's on that mesh: value batch-sharded
+        # over the tile, queries split over the query factor, grad_value
+        # ring/psum-reduced over it.  The caller's named axes don't
+        # appear inside; the plan records the ORIGINAL mesh topology.
+        qf = int(tp_size)
+        bt = int(mesh.devices.size) // qf
+        mesh = Mesh(mesh.devices.reshape(bt, qf), ("data", "model"))
+        mode, dp, tp = "query", "data", "model"
 
     if mode == "query2d":
         # queries tiled over dp x tp jointly; heads, batch and the value
@@ -1281,6 +1375,7 @@ class MsdaPlan:
     backend: str
     tuning: PlanTuning
     # 'local' | 'replicated' | 'batch' | 'head' | 'query' | 'query2d'
+    # | 'batchquery' (hybrid batch x query tiling over the whole mesh)
     sharding_mode: str
     # the per-shard geometry the tuning was computed for (== spec for
     # unsharded plans; Q or H divided by the sharded axes otherwise)
@@ -1294,6 +1389,14 @@ class MsdaPlan:
     query_parallel: bool = False
     # 'none' (no cross-shard grad_value reduction) | 'ring' | 'psum'
     grad_reduce: str = "none"
+    # hybrid ('batchquery') plans only: how many batch ways the whole
+    # device set was re-racked into (queries take the remaining factor)
+    batch_tile: int = 0
+    # the tune mode the plan was REQUESTED with.  tuning.source alone
+    # can't recover this: a backend with no local tuning surface (ref)
+    # still races the mesh-keyed axes under "autotune", and the plan
+    # store must know to re-race them after an elastic mesh resize
+    tune: str = "heuristic"
 
     def __call__(self, value: jax.Array, sampling_locations: jax.Array,
                  attention_weights: jax.Array) -> jax.Array:
@@ -1406,7 +1509,7 @@ class MsdaPlan:
             h_axes, b_axes = ((tp,) if tp else ()), dp_axes
         elif mode == "batch":
             b_axes = dp_axes
-        return {
+        out = {
             "mode": mode,
             "mesh": sizes,
             "query_axes": q_axes,
@@ -1415,6 +1518,15 @@ class MsdaPlan:
             "query_parallel": self.query_parallel,
             "grad_reduce": self.grad_reduce,
         }
+        if mode == "batchquery":
+            # hybrid: the tiling ignores the named axes — report the
+            # anonymous (batch_tile x query_tile) factoring instead
+            n = 1
+            for s in self.mesh_shape:
+                n *= int(s)
+            out["batch_tile"] = int(self.batch_tile)
+            out["query_tile"] = n // max(int(self.batch_tile), 1)
+        return out
 
     def describe(self) -> str:
         """Human-readable plan report.
@@ -1436,6 +1548,8 @@ class MsdaPlan:
         if self.mesh_axes:
             r = self.sharding_report()
             dims = []
+            if r["mode"] == "batchquery":
+                dims = [f"B->x{r['batch_tile']}", f"Q->x{r['query_tile']}"]
             if r["batch_axes"]:
                 dims.append("B->" + "+".join(r["batch_axes"]))
             if r["query_axes"]:
@@ -1531,9 +1645,11 @@ def msda_plan(
     ``block_q`` overrides both (ablation hook).  ``mesh`` bakes the
     shard_map wiring into the returned plan; ``sharding`` picks the
     distribution family — ``"auto"`` walks the ladder (and, under
-    ``tune="autotune"``, RACES 1D vs 2D and persists the winner per
-    mesh topology), ``"1d"`` pins the classic query/head/batch ladder,
-    ``"2d"`` forces dp x tp query tiling when legal.  ``grad_reduce``
+    ``tune="autotune"``, RACES 1D vs 2D vs hybrid and persists the
+    winner per mesh topology), ``"1d"`` pins the classic
+    query/head/batch ladder, ``"2d"`` forces dp x tp query tiling when
+    legal, ``"hybrid"`` forces the batch x query whole-mesh tiling
+    (mid-size B on tp-less meshes).  ``grad_reduce``
     picks the query-sharded backward's grad_value reduction:
     ``"ring"`` (default via "auto") circulates the fp32 slab over the
     tp axis with ppermute, ``"psum"`` keeps shard_map's transpose
@@ -1595,7 +1711,8 @@ def msda_plan(
     if mesh is None:
         exec_fn, tuning = build_local(spec)
         plan = MsdaPlan(spec=spec, backend=backend_name, tuning=tuning,
-                        sharding_mode="local", local_spec=spec, _exec=exec_fn)
+                        sharding_mode="local", local_spec=spec, _exec=exec_fn,
+                        tune=tune)
     else:
         shard_choice, prebuilt = sharding, None
         # the 1D-vs-2D race rides on query-parallel INTENT: 2D is the
@@ -1634,7 +1751,10 @@ def msda_plan(
                         mesh_axes=tuple(mesh.axis_names),
                         mesh_shape=tuple(int(s) for s in mesh.devices.shape),
                         query_parallel=bool(query_parallel),
-                        grad_reduce=resolved_gr)
+                        grad_reduce=resolved_gr,
+                        batch_tile=(int(mesh.devices.size) // tp_size
+                                    if mode == "batchquery" else 0),
+                        tune=tune)
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
         _PLAN_CACHE.popitem(last=False)

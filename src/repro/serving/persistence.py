@@ -40,10 +40,15 @@ from repro.kernels import plan as plan_mod
 # decision: specs carry ``fuse_levels``, autotune winners the optional
 # ``fuse_levels`` / ``onehot_levels`` / ``grad_reduce`` fields — all
 # round-tripped so a restored plan keeps the raced decisions with zero
-# timing runs.  v1/v2 stores load unchanged; entries a NEWER schema
-# writes still degrade per entry.
-PLAN_STORE_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+# timing runs.  v4 grew the hybrid batch x query sharding mode
+# ('batchquery', with its ``batch_tile`` in the sharding record) and the
+# elastic restore path (``on_mesh_mismatch="rerace"``).  v1-v3 stores
+# load unchanged; entries a NEWER schema writes still degrade per entry.
+PLAN_STORE_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
+
+# stored sharding mode -> the planner's sharding= pin that reproduces it
+_MODE_TO_CHOICE = {"query2d": "2d", "batchquery": "hybrid"}
 
 
 def _device_kind() -> str:
@@ -69,10 +74,16 @@ class RestoreReport:
     seeded_winners: int = 0
     skipped: List[str] = dataclasses.field(default_factory=list)
     describe_mismatches: List[str] = dataclasses.field(default_factory=list)
+    # entries whose stored mesh topology did not match the process's and
+    # were recovered by re-racing the mesh-keyed axes (elastic restore,
+    # ``on_mesh_mismatch="rerace"``); one human-readable line per entry
+    reraced: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def cold(self) -> bool:
-        return not self.plans and not self.skipped
+        # "cold" = nothing restored.  An unreadable store also lands a
+        # named line in ``skipped``, but the boot is cold either way.
+        return not self.plans
 
 
 class PlanStore:
@@ -107,7 +118,10 @@ class PlanStore:
             entry: Dict[str, Any] = {
                 "spec": plan_mod.spec_to_json(plan.spec),
                 "backend": plan.backend,
-                "tune": "autotune" if src.startswith("autotune") else "heuristic",
+                "tune": ("autotune"
+                         if src.startswith("autotune")
+                         or getattr(plan, "tune", "heuristic") == "autotune"
+                         else "heuristic"),
                 "source": src,
                 "device_kind": _device_kind(),
                 "describe": plan.describe(),
@@ -120,6 +134,8 @@ class PlanStore:
                     "query_parallel": bool(plan.query_parallel),
                     "grad_reduce": plan.grad_reduce,
                 }
+                if plan.sharding_mode == "batchquery":
+                    entry["sharding"]["batch_tile"] = int(plan.batch_tile)
             if src == "override":
                 entry["block_q"] = [int(b) for b in plan.tuning.block_q]
             if src.startswith("autotune"):
@@ -153,16 +169,32 @@ class PlanStore:
     # -- load / restore ----------------------------------------------------
     def load(self) -> Optional[Dict[str, Any]]:
         """Raw payload, or None when missing/corrupt/wrong version."""
+        data, _ = self._load_with_reason()
+        return data
+
+    def _load_with_reason(self):
+        """(payload, None) or (None, reason) — the reason distinguishes a
+        merely-missing store (no message) from a store that EXISTS but
+        could not be read, which ``restore()`` surfaces in
+        ``report.skipped`` instead of silently booting cold."""
         try:
             with open(self.path) as f:
                 data = json.load(f)
-        except (OSError, ValueError):
-            return None
-        if not isinstance(data, dict) or data.get("version") not in _READABLE_VERSIONS:
-            return None
-        return data
+        except FileNotFoundError:
+            return None, None
+        except OSError as e:
+            return None, f"store {self.path}: unreadable ({e})"
+        except ValueError as e:
+            return None, f"store {self.path}: corrupt JSON ({e})"
+        if not isinstance(data, dict):
+            return None, f"store {self.path}: not a JSON object"
+        if data.get("version") not in _READABLE_VERSIONS:
+            return None, (f"store {self.path}: version {data.get('version')!r} "
+                          f"not in readable {_READABLE_VERSIONS}")
+        return data, None
 
-    def restore(self, *, mesh=None, verify_describe: bool = True) -> RestoreReport:
+    def restore(self, *, mesh=None, verify_describe: bool = True,
+                on_mesh_mismatch: str = "skip") -> RestoreReport:
         """Rebuild every stored plan; zero autotune races, by seeding.
 
         For each entry: the persisted winner (if any, and if recorded on
@@ -170,22 +202,60 @@ class PlanStore:
         so the subsequent ``msda_plan(..., tune="autotune")`` is a cache
         hit — plan construction runs, timing does not.  Entries that
         fail to parse (newer schema, unknown backend) are recorded in
-        ``report.skipped`` and the boot proceeds cold for them.
+        ``report.skipped`` — each line names the offending ENTRY (index,
+        backend, geometry), never the whole file — and the boot proceeds
+        cold for them.  A store that exists but cannot be read at all is
+        itself one named ``skipped`` line.
 
         ``mesh``: the restarting process's mesh.  A distributed entry is
         rebuilt only when the mesh's (axis names, shape) match the
         entry's record — its winner is then ALSO seeded under the
-        mesh-keyed 1D-vs-2D race key and its local (per-shard) spec key,
+        mesh-keyed sharding-race key and its local (per-shard) spec key,
         and the plan is rebuilt with the stored mode PINNED, so the
         restore performs zero sharding races and zero block races.
-        Distributed entries with no/mismatched mesh are skipped
-        (degrade, never die — same contract as every other field).
+
+        ``on_mesh_mismatch`` decides what a topology mismatch does:
+
+        * ``"skip"`` (default — the serving boot contract): the entry is
+          recorded in ``report.skipped`` and that plan boots cold.
+        * ``"rerace"`` (the elastic training path): the entry's LOCAL
+          winner is re-seeded onto the per-shard geometry the NEW mesh
+          implies — so the block/dtype/fuse axes stay zero-timing cache
+          hits — and the plan is rebuilt under ``sharding="auto"`` /
+          ``grad_reduce="auto"``, which re-races EXACTLY the mesh-keyed
+          axes (sharding mode, grad_value reduction) and persists the
+          new winners per the new topology.  Recovered entries are
+          listed in ``report.reraced``.  When the topology matches,
+          behaviour is identical to "skip" (zero re-race either way).
         """
+        if on_mesh_mismatch not in ("skip", "rerace"):
+            raise ValueError(
+                f"on_mesh_mismatch={on_mesh_mismatch!r}; 'skip' or 'rerace'")
         report = RestoreReport()
-        data = self.load()
+        data, why = self._load_with_reason()
         if data is None:
+            if why:
+                report.skipped.append(why)
             return report
         here = _device_kind()
+
+        def _label(i, entry) -> str:
+            """Name the offending entry, not the whole file."""
+            bits = [f"entry {i}"]
+            try:
+                s = entry.get("spec") or {}
+                bits.append(f"backend={entry.get('backend')}")
+                if "num_queries" in s:
+                    bits.append(f"Q={s['num_queries']}")
+                if "spatial_shapes" in s:
+                    bits.append(f"levels={len(s['spatial_shapes'])}")
+                shard = entry.get("sharding")
+                if shard:
+                    bits.append(f"mode={shard.get('mode')}")
+            except Exception:  # noqa: BLE001 — labels must never throw
+                pass
+            return " ".join(bits)
+
         # pass 1: parse specs + batch-seed every winner (one cache write)
         parsed = []
         seeds = []
@@ -194,6 +264,7 @@ class PlanStore:
                 spec = plan_mod.spec_from_json(entry["spec"])
                 shard = entry.get("sharding")
                 choice = None
+                elastic = False
                 if shard is not None:
                     if mesh is None:
                         raise ValueError(
@@ -201,19 +272,40 @@ class PlanStore:
                     if (list(mesh.axis_names) != list(shard["mesh_axes"])
                             or [int(s) for s in mesh.devices.shape]
                             != [int(s) for s in shard["mesh_shape"]]):
-                        raise ValueError(
-                            f"mesh mismatch: store has "
-                            f"{plan_mod.mesh_token_from(shard['mesh_axes'], shard['mesh_shape'])}, "
-                            f"process has {plan_mod.mesh_token(mesh)}")
-                    choice = "2d" if shard["mode"] == "query2d" else "1d"
-                parsed.append((i, entry, spec, shard, choice))
+                        if on_mesh_mismatch != "rerace":
+                            raise ValueError(
+                                f"mesh mismatch: store has "
+                                f"{plan_mod.mesh_token_from(shard['mesh_axes'], shard['mesh_shape'])}, "
+                                f"process has {plan_mod.mesh_token(mesh)}")
+                        elastic = True
+                    if not elastic:
+                        choice = _MODE_TO_CHOICE.get(shard["mode"], "1d")
+                parsed.append((i, entry, spec, shard, choice, elastic))
             except Exception as e:  # noqa: BLE001 — degrade per entry, never die
-                report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
+                report.skipped.append(
+                    f"{_label(i, entry)}: {type(e).__name__}: {e}")
                 continue
             if (entry.get("winner") is not None and entry.get("backend")
                     and entry.get("device_kind", here) == here):
                 if shard is None:
                     seeds.append((spec, entry["backend"], entry["winner"]))
+                elif elastic:
+                    # topology changed: the stored LOCAL winner still
+                    # applies — re-key it onto the per-shard geometry
+                    # the NEW mesh's auto ladder implies (blocks clamped
+                    # to the new local query extent), so the rebuild's
+                    # block/dtype/fuse races are cache hits and only the
+                    # mesh-keyed axes re-race
+                    qp = bool(shard.get("query_parallel"))
+                    _, local_spec = plan_mod.resolve_sharding(
+                        spec, mesh, qp, "auto")
+                    winner = dict(entry["winner"])
+                    bq = winner.get("block_q")
+                    if isinstance(bq, list):
+                        qcap = -(-local_spec.num_queries // 8) * 8
+                        winner["block_q"] = [
+                            max(8, min(int(b), qcap)) for b in bq]
+                    seeds.append((local_spec, entry["backend"], winner))
                 else:
                     qp = bool(shard.get("query_parallel"))
                     # the block/dtype winner belongs to the LOCAL spec
@@ -233,7 +325,7 @@ class PlanStore:
                                   plan_mod.mesh_winner_suffix(mesh, qp)))
         report.seeded_winners = plan_mod.seed_autotune_winners(seeds)
         # pass 2: rebuild the plans (autotune resolves via the seeds)
-        for i, entry, spec, shard, choice in parsed:
+        for i, entry, spec, shard, choice, elastic in parsed:
             try:
                 block_q = entry.get("block_q")
                 kwargs: Dict[str, Any] = {}
@@ -242,13 +334,15 @@ class PlanStore:
                         mesh=mesh,
                         query_parallel=bool(shard.get("query_parallel")),
                         grad_reduce=shard.get("grad_reduce") or "auto")
-                    if kwargs["grad_reduce"] == "none":
+                    if kwargs["grad_reduce"] == "none" or elastic:
+                        # elastic: the stored reduction was raced on the
+                        # OLD topology — let the new mesh re-race it
                         kwargs["grad_reduce"] = "auto"
                 common = dict(
                     backend=entry["backend"],
                     tune=entry.get("tune", "heuristic"),
                     block_q=tuple(block_q) if block_q else None, **kwargs)
-                if shard is not None:
+                if shard is not None and not elastic:
                     # try sharding="auto" FIRST: the request path
                     # (attention_plan with the config default) asks for
                     # "auto", and the plan cache keys on the sharding
@@ -263,16 +357,28 @@ class PlanStore:
                         plan = plan_mod.msda_plan(
                             spec, sharding=choice, **common)
                 else:
-                    plan = plan_mod.msda_plan(spec, **common)
-                if shard is not None and plan.sharding_mode != shard["mode"]:
+                    plan = plan_mod.msda_plan(spec, sharding="auto", **common) \
+                        if elastic else plan_mod.msda_plan(spec, **common)
+                if shard is not None and not elastic \
+                        and plan.sharding_mode != shard["mode"]:
                     report.skipped.append(
-                        f"entry {i}: sharding mode drifted "
+                        f"{_label(i, entry)}: sharding mode drifted "
                         f"({shard['mode']} -> {plan.sharding_mode})")
                     continue
             except Exception as e:  # noqa: BLE001
-                report.skipped.append(f"entry {i}: {type(e).__name__}: {e}")
+                report.skipped.append(
+                    f"{_label(i, entry)}: {type(e).__name__}: {e}")
                 continue
-            if verify_describe and entry.get("describe"):
+            if elastic:
+                report.reraced.append(
+                    f"{_label(i, entry)}: "
+                    f"{plan_mod.mesh_token_from(shard['mesh_axes'], shard['mesh_shape'])} "
+                    f"-> {plan_mod.mesh_token(mesh)} "
+                    f"({shard['mode']} -> {plan.sharding_mode})")
+            elif verify_describe and entry.get("describe"):
+                # (describe drift is only meaningful when the geometry
+                # was supposed to be identical — elastic entries changed
+                # topology by definition)
                 if _norm_describe(plan.describe()) != _norm_describe(entry["describe"]):
                     report.describe_mismatches.append(
                         f"entry {i}: plan.describe() differs from stored "

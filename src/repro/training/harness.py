@@ -1,0 +1,165 @@
+"""The restartable training harness.
+
+Wraps a jitted train step + deterministic batch function into a loop
+that survives failure: every fault (injected via
+:class:`~repro.training.faults.FaultSchedule`, or a real exception of
+the same types) triggers restore-from-checkpoint and deterministic
+replay.  Because batches are a pure function of the step index and
+checkpoints round-trip bitwise (raw ``.npy`` leaves), a recovered run's
+loss trajectory is BIT-IDENTICAL to an uninterrupted one — the
+continuity contract the CI train-smoke job asserts.
+
+Step accounting: ``batch_fn(step)`` consumes 0-based step indices; a
+checkpoint written after completing index ``s`` is stamped ``s + 1``
+(the number of completed steps), so a restore resumes at exactly the
+next unconsumed index.
+
+The harness is deliberately model-agnostic — ``launch/train.py`` drives
+it with ``train/loop.py`` states, ``examples/train_detr.py`` with its
+hand-rolled param/opt pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint import manager as ckpt
+from repro.training import faults as faults_mod
+from repro.training.telemetry import StepTimeRecorder
+
+
+@dataclasses.dataclass
+class HarnessConfig:
+    total_steps: int
+    ckpt_every: int = 25
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 3
+    max_restarts: int = 8
+    # async checkpointing overlaps the save with the next step's compute;
+    # sync is available for tests that need the file on disk immediately
+    async_ckpt: bool = True
+
+
+class TrainingHarness:
+    """Run ``step_fn`` to ``total_steps`` with checkpointed recovery.
+
+    ``step_fn(state, batch) -> (state, metrics)`` — metrics must carry a
+    scalar ``"loss"``.  ``batch_fn(step) -> batch`` must be a pure
+    function of the step index (the determinism the replay contract
+    rests on).  ``init_fn() -> state`` builds the step-0 state; it is
+    called once and its result reused as the restore template.
+    """
+
+    def __init__(self, *, step_fn: Callable, batch_fn: Callable,
+                 init_fn: Callable, config: HarnessConfig,
+                 faults: Optional[faults_mod.FaultSchedule] = None,
+                 telemetry: Optional[StepTimeRecorder] = None):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.init_fn = init_fn
+        self.config = config
+        self.faults = faults
+        self.telemetry = telemetry or StepTimeRecorder()
+        self._pending_save = None
+
+    # -- checkpoint plumbing ----------------------------------------------
+    def _join_pending(self) -> None:
+        if self._pending_save is not None:
+            self._pending_save.join(timeout=120)
+            self._pending_save = None
+
+    def _save(self, state, step: int) -> None:
+        cfg = self.config
+        if not cfg.ckpt_dir:
+            return
+        if cfg.async_ckpt:
+            self._join_pending()  # never two writers racing
+            self._pending_save = ckpt.save_async(
+                state, cfg.ckpt_dir, step, keep_last=cfg.keep_last)
+        else:
+            ckpt.save(state, cfg.ckpt_dir, step, keep_last=cfg.keep_last)
+
+    def _restore_or_init(self, like):
+        """(state, next_step_index, skipped_ckpts)."""
+        cfg = self.config
+        if cfg.ckpt_dir and ckpt.available_steps(cfg.ckpt_dir):
+            state, step, skipped = ckpt.restore_latest_valid(
+                cfg.ckpt_dir, like)
+            return state, int(step), skipped
+        return like, 0, []
+
+    # -- the loop ---------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        cfg = self.config
+        like = self.init_fn()
+        state, step, skipped0 = self._restore_or_init(like)
+        restarts = 0
+        recovery_log: List[Dict[str, Any]] = []
+        losses: Dict[int, float] = {}
+        for s, why in skipped0:
+            self.telemetry.record_event(
+                "ckpt_skipped", step=int(s), detail=why)
+        while step < cfg.total_steps:
+            ev = self.faults.take(step) if self.faults is not None else None
+            try:
+                if ev is not None and ev.kind == "host_loss":
+                    raise faults_mod.HostLoss(
+                        f"injected host loss before step {step}")
+                if ev is not None and ev.kind == "corrupt_ckpt":
+                    # a torn write took the newest checkpoint with it
+                    self._join_pending()
+                    faults_mod.corrupt_latest_checkpoint(cfg.ckpt_dir or "")
+                    raise faults_mod.HostLoss(
+                        f"injected corrupt-checkpoint loss before step {step}")
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                new_state, metrics = self.step_fn(state, batch)
+                metrics = jax.device_get(metrics)
+                jax.block_until_ready(new_state)
+                wall = time.perf_counter() - t0
+                if ev is not None and ev.kind == "preempt":
+                    # mid-step preemption: the step computed but never
+                    # commits — its work is lost, the replay redoes it
+                    raise faults_mod.Preemption(
+                        f"injected preemption during step {step}")
+                state = new_state
+                loss = float(metrics["loss"]) if "loss" in metrics else None
+                if loss is not None:
+                    losses[step] = loss
+                self.telemetry.record_step(step, wall, loss=loss)
+                step += 1
+                if cfg.ckpt_dir and step % cfg.ckpt_every == 0:
+                    self._save(state, step)
+            except (faults_mod.HostLoss, faults_mod.Preemption) as e:
+                restarts += 1
+                if restarts > cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={cfg.max_restarts}") from e
+                t0 = time.perf_counter()
+                self._join_pending()
+                state, resumed, skipped = self._restore_or_init(like)
+                latency = time.perf_counter() - t0
+                entry = {
+                    "failed_step": step,
+                    "kind": ev.kind if ev is not None else type(e).__name__,
+                    "resumed_from": resumed,
+                    "ckpt_skipped": [int(s) for s, _ in skipped],
+                }
+                recovery_log.append(entry)
+                self.telemetry.record_event(
+                    "recovery", step=resumed, latency_s=latency,
+                    detail=f"{entry['kind']}@{step} -> resume@{resumed}")
+                step = resumed
+        self._join_pending()
+        if cfg.ckpt_dir and step % cfg.ckpt_every != 0:
+            ckpt.save(state, cfg.ckpt_dir, step, keep_last=cfg.keep_last)
+        return {
+            "final_step": step,
+            "restarts": restarts,
+            "recovery_log": recovery_log,
+            "losses": losses,
+            "state": state,
+        }

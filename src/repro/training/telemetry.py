@@ -1,0 +1,97 @@
+"""Step-time telemetry -> ``BENCH_train.json``.
+
+The training counterpart of ``benchmarks/paper_benchmarks.py``'s
+``BENCH_kernels.json``: one recorder object rides the harness, collects
+the per-step wall-time trajectory plus the runtime's discrete events
+(recoveries, re-plans), and writes a single JSON payload in the same
+``{"bench", "config", "note", "results", ...}`` shape, so the CI
+artifact tooling treats both files identically.
+
+``results`` carries the headline scalars (mean/p50 step time,
+tokens/sec, re-plan count, recovery count + latencies); ``trajectory``
+the full per-step series the step-time plot is drawn from; ``events``
+the recovery/replan log with latencies.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+
+class StepTimeRecorder:
+    """Accumulates the step-time trajectory + runtime events.
+
+    ``tokens_per_step``: global tokens (or queries, for detection
+    workloads) consumed per optimizer step — the tokens/sec headline is
+    derived from it; 0 disables that row.
+    """
+
+    def __init__(self, *, tokens_per_step: int = 0,
+                 config: Optional[Dict[str, Any]] = None):
+        self.tokens_per_step = int(tokens_per_step)
+        self.config = dict(config or {})
+        self.steps: List[Dict[str, Any]] = []
+        self.events: List[Dict[str, Any]] = []
+        self._created = time.time()
+
+    # -- recording --------------------------------------------------------
+    def record_step(self, step: int, wall_s: float,
+                    loss: Optional[float] = None) -> None:
+        row: Dict[str, Any] = {"step": int(step), "wall_s": float(wall_s)}
+        if loss is not None:
+            row["loss"] = float(loss)
+        self.steps.append(row)
+
+    def record_event(self, kind: str, *, step: int, latency_s: float = 0.0,
+                     detail: str = "") -> None:
+        """``kind``: 'recovery' | 'replan' | anything the harness emits."""
+        self.events.append({"kind": str(kind), "step": int(step),
+                            "latency_s": float(latency_s),
+                            "detail": str(detail)})
+
+    # -- reporting --------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        walls = sorted(r["wall_s"] for r in self.steps)
+        n = len(walls)
+        total = sum(walls)
+        recoveries = [e for e in self.events if e["kind"] == "recovery"]
+        replans = [e for e in self.events if e["kind"] == "replan"]
+        out: Dict[str, Any] = {
+            "steps": n,
+            "total_step_wall_s": total,
+            "mean_step_s": (total / n) if n else 0.0,
+            "p50_step_s": (walls[n // 2] if n else 0.0),
+            "max_step_s": (walls[-1] if n else 0.0),
+            "recoveries": len(recoveries),
+            "recovery_latency_s": [e["latency_s"] for e in recoveries],
+            "replan_count": len(replans),
+        }
+        if self.tokens_per_step and total > 0:
+            out["tokens_per_sec"] = self.tokens_per_step * n / total
+        return out
+
+    def payload(self, *, note: str = "") -> Dict[str, Any]:
+        return {
+            "bench": "train_runtime",
+            "config": self.config,
+            "note": note or (
+                "step wall-time trajectory + recovery/replan events from "
+                "the elastic training harness (repro.training)"),
+            "results": self.summary(),
+            "trajectory": list(self.steps),
+            "events": list(self.events),
+            "created_unix": self._created,
+        }
+
+    def write(self, path: str, *, note: str = "") -> str:
+        """Atomic JSON dump (tmp + rename, like every store here)."""
+        path = str(path)
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.payload(note=note), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path

@@ -162,3 +162,171 @@ def test_end_to_end_restart_with_real_checkpoints(tmp_path):
     )
     assert out["final_step"] == 12 and out["restarts"] == 1
     assert int(box["state"].step) == 12
+
+
+# --------------------------------------------------------------------------
+# Elastic training runtime (repro.training): deterministic fault injection,
+# checkpointed recovery with bitwise replay, corrupt-checkpoint fallback
+# --------------------------------------------------------------------------
+
+from repro import training
+
+
+def _toy_harness(ckpt_dir, *, total=12, ckpt_every=3, faults=None,
+                 telemetry=None, max_restarts=8):
+    """A tiny pure-jnp training problem: fast, deterministic, bitwise."""
+
+    @jax.jit
+    def step_fn(state, batch):
+        p = state["p"] - 0.1 * jnp.tanh(state["p"] * batch["x"])
+        return ({"p": p, "step": state["step"] + 1},
+                {"loss": jnp.sum(p * p)})
+
+    def batch_fn(step):
+        rng = np.random.default_rng((5, step))
+        return {"x": jnp.asarray(rng.standard_normal(4).astype(np.float32))}
+
+    def init_fn():
+        return {"p": jnp.ones(4, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    cfg = training.HarnessConfig(
+        total_steps=total, ckpt_every=ckpt_every, ckpt_dir=ckpt_dir,
+        max_restarts=max_restarts, async_ckpt=False)
+    return training.TrainingHarness(
+        step_fn=step_fn, batch_fn=batch_fn, init_fn=init_fn, config=cfg,
+        faults=faults, telemetry=telemetry)
+
+
+def test_restore_latest_valid_skips_corrupt(tmp_path):
+    s = _state()
+    ckpt.save(s, str(tmp_path), 2)
+    ckpt.save(s, str(tmp_path), 4)
+    assert training.corrupt_latest_checkpoint(str(tmp_path)) is not None
+    state, step, skipped = ckpt.restore_latest_valid(str(tmp_path), s)
+    assert step == 2
+    assert [st for st, _ in skipped] == [4]
+    np.testing.assert_array_equal(np.asarray(state["params"]["b"]),
+                                  np.asarray(s["params"]["b"]))
+
+
+def test_restore_latest_valid_skips_missing_leaf(tmp_path):
+    """A torn write that lost a leaf file entirely is also 'corrupt'."""
+    s = _state()
+    ckpt.save(s, str(tmp_path), 1)
+    ckpt.save(s, str(tmp_path), 3)
+    os.remove(tmp_path / "step_00000003" / "leaf_00000.npy")
+    _, step, skipped = ckpt.restore_latest_valid(str(tmp_path), s)
+    assert step == 1 and [st for st, _ in skipped] == [3]
+
+
+def test_restore_latest_valid_all_corrupt_raises(tmp_path):
+    s = _state()
+    ckpt.save(s, str(tmp_path), 5)
+    training.corrupt_latest_checkpoint(str(tmp_path))
+    with pytest.raises(FileNotFoundError) as ei:
+        ckpt.restore_latest_valid(str(tmp_path), s)
+    assert "5" in str(ei.value)  # names what it skipped
+
+
+def test_fault_schedule_spec_and_fire_once():
+    fs = training.FaultSchedule.from_spec("host_loss@5, corrupt_ckpt@9")
+    assert fs.take(4) is None
+    ev = fs.take(5)
+    assert ev is not None and ev.kind == "host_loss"
+    assert fs.take(5) is None  # fires exactly once
+    with pytest.raises(ValueError):
+        training.FaultSchedule.from_spec("melted@3")
+    with pytest.raises(ValueError):
+        training.FaultSchedule(
+            [training.FaultEvent(2, "preempt"), training.FaultEvent(2, "host_loss")])
+
+
+def test_fault_schedule_seeded_is_reproducible():
+    a = training.FaultSchedule.generate(11, 40, n_faults=3)
+    b = training.FaultSchedule.generate(11, 40, n_faults=3)
+    assert a.describe() == b.describe()
+    assert len(a.events) == 3
+    assert all(1 <= s < 40 for s in a.events)
+    c = training.FaultSchedule.generate(12, 40, n_faults=3)
+    assert c.describe() != a.describe()  # the seed is the schedule
+
+
+def test_harness_kill_and_resume_is_bitwise(tmp_path):
+    """Stop the loop at step 5; a FRESH harness on the same ckpt dir
+    must continue to a loss trajectory bitwise equal to an
+    uninterrupted run."""
+    ref = _toy_harness(None).run()
+    assert ref["final_step"] == 12 and ref["restarts"] == 0
+
+    d = str(tmp_path / "ck")
+    half = _toy_harness(d, total=5).run()
+    assert half["final_step"] == 5
+    resumed = _toy_harness(d).run()  # fresh harness = simulated new process
+    assert min(resumed["losses"]) == 5  # resumed at the checkpoint, not 0
+    for s in range(5, 12):
+        assert resumed["losses"][s] == ref["losses"][s]
+
+
+def test_harness_preemption_recovers_bitwise(tmp_path):
+    ref = _toy_harness(None).run()
+    faults = training.FaultSchedule.from_spec("preempt@7")
+    out = _toy_harness(str(tmp_path / "ck"), faults=faults).run()
+    assert out["restarts"] == 1
+    [rec] = out["recovery_log"]
+    assert rec["kind"] == "preempt" and rec["failed_step"] == 7
+    assert rec["resumed_from"] == 6  # newest ckpt (ckpt_every=3)
+    assert out["losses"] == ref["losses"]  # full bitwise continuity
+
+
+def test_harness_corrupt_ckpt_falls_back_to_previous_step(tmp_path):
+    """corrupt_ckpt kills the newest checkpoint with the process: the
+    recovery must skip it and resume from the PREVIOUS step."""
+    ref = _toy_harness(None).run()
+    faults = training.FaultSchedule.from_spec("corrupt_ckpt@7")
+    out = _toy_harness(str(tmp_path / "ck"), faults=faults).run()
+    assert out["restarts"] == 1
+    [rec] = out["recovery_log"]
+    assert rec["resumed_from"] == 3  # step-6 ckpt was corrupted -> step 3
+    assert rec["ckpt_skipped"] == [6]
+    assert out["losses"] == ref["losses"]
+
+
+def test_harness_identical_recovery_decisions_across_runs(tmp_path):
+    """Acceptance: the same seeded schedule reproduces IDENTICAL
+    recovery decisions across two runs."""
+    outs = []
+    for run in ("a", "b"):
+        faults = training.FaultSchedule.generate(3, 12, n_faults=2)
+        outs.append(_toy_harness(str(tmp_path / run), faults=faults).run())
+    assert outs[0]["recovery_log"] == outs[1]["recovery_log"]
+    assert outs[0]["restarts"] == outs[1]["restarts"] >= 1
+    assert outs[0]["losses"] == outs[1]["losses"]
+
+
+def test_harness_max_restarts_bounds_the_loop(tmp_path):
+    faults = training.FaultSchedule.from_spec("host_loss@2,host_loss@4")
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        _toy_harness(None, faults=faults, max_restarts=1).run()
+
+
+def test_harness_telemetry_payload(tmp_path):
+    rec = training.StepTimeRecorder(tokens_per_step=128,
+                                    config={"arch": "toy"})
+    faults = training.FaultSchedule.from_spec("preempt@7")
+    _toy_harness(str(tmp_path / "ck"), faults=faults, telemetry=rec).run()
+    payload = rec.payload()
+    assert payload["bench"] == "train_runtime"
+    assert payload["config"] == {"arch": "toy"}
+    res = payload["results"]
+    # 12 committed steps + 1 replayed (7 computed twice: preempted, redone)
+    assert res["steps"] == 13
+    assert res["recoveries"] == 1 and len(res["recovery_latency_s"]) == 1
+    assert res["tokens_per_sec"] > 0
+    assert {r["step"] for r in payload["trajectory"]} == set(range(12))
+    [ev] = payload["events"]
+    assert ev["kind"] == "recovery" and "preempt@7" in ev["detail"]
+    out = rec.write(str(tmp_path / "BENCH_train.json"))
+    import json as _json
+    with open(out) as f:
+        assert _json.load(f)["bench"] == "train_runtime"

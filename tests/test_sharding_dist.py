@@ -385,3 +385,99 @@ def test_msda_attention_module():
     # pallas backend agrees with ref backend through the module
     out_pal = msda_mod.msda_attention(p, mc, q, feats, refs, backend="pallas")
     np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# batch x query hybrid sharding ('batchquery'): the whole device set is
+# re-racked as (batch_tile x query_fan) so mid-size batches on tp-less
+# meshes shard BOTH axes instead of idling on the batch rung
+# --------------------------------------------------------------------------
+
+
+def test_hybrid_resolution_ladder(prob):
+    _, _, _, spec = prob
+    m41 = _mesh(4, 1)
+    # forced: 4 devices re-racked as B->x2, Q->x2
+    mode, local = pm.resolve_sharding(spec, m41, True, "hybrid")
+    assert mode == "batchquery"
+    assert local.num_queries == spec.num_queries // 2
+    # auto on a tp-less mesh with query-parallel intent prefers hybrid
+    assert pm.resolve_sharding(spec, m41, True, "auto")[0] == "batchquery"
+    # the pinned 1d/2d ladders are untouched (degenerate-mesh contract)
+    assert pm.resolve_sharding(spec, m41, True, "2d")[0] == "batch"
+    assert pm.resolve_sharding(spec, m41, True, "1d")[0] == "batch"
+    # no query-parallel intent -> hybrid never surprise-tiles Q
+    assert pm.resolve_sharding(spec, m41, False, "auto")[0] == "batch"
+    # hybrid needs Q divisible by the query fan; Q=9 falls down the ladder
+    spec9 = dataclasses_replace_q(spec, 9)
+    assert pm.resolve_sharding(spec9, m41, True, "hybrid")[0] != "batchquery"
+
+
+def test_hybrid_plan_matches_ref_fwd_and_vjp(prob):
+    value, loc, attn, spec = prob
+    mesh = _mesh(4, 1)
+    plan = pm.msda_plan(spec, backend="ref", mesh=mesh, sharding="hybrid")
+    assert plan.sharding_mode == "batchquery"
+    assert plan.batch_tile == 2
+    assert plan.local_spec.num_queries == spec.num_queries // 2
+    rep = plan.sharding_report()
+    assert rep["mode"] == "batchquery" and rep["batch_tile"] == 2
+    assert "B->x2" in plan.describe() and "Q->x2" in plan.describe()
+
+    ref = msda_ref(value, _LEVELS, loc, attn)
+    np.testing.assert_allclose(np.asarray(plan(value, loc, attn)),
+                               np.asarray(ref), atol=1e-5)
+    g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2), argnums=(0, 1, 2))(
+        value, loc, attn)
+    gref = jax.grad(
+        lambda v, l, a: jnp.sum(msda_ref(v, _LEVELS, l, a) ** 2), argnums=(0, 1, 2)
+    )(value, loc, attn)
+    for got, want in zip(g, gref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_autotune_races_hybrid_and_persists(prob, tmp_path, monkeypatch):
+    """Satellite: on a tp-less mesh the auto race includes the hybrid
+    rung; the winner persists ('hybrid' in the cache schema) and a fresh
+    build resolves from the cache with zero timing runs."""
+    _, _, _, spec = prob
+    mesh = _mesh(4, 1)
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    pm.clear_plans()
+    pm.reset_autotune_stats()
+    plan = pm.msda_plan(spec, backend="ref", tune="autotune", mesh=mesh,
+                        query_parallel=True)
+    assert plan.sharding_mode in ("batch", "batchquery")  # timing decides
+    assert pm.autotune_stats()["raced_mesh"] >= 1
+    winner = pm.get_autotune_winner(
+        spec, "ref", mesh_suffix=pm.mesh_winner_suffix(mesh, True))
+    assert winner is not None and winner["sharding"] in ("1d", "hybrid")
+
+    pm.clear_plans()
+    pm.reset_autotune_stats()
+    plan2 = pm.msda_plan(spec, backend="ref", tune="autotune", mesh=mesh,
+                         query_parallel=True)
+    stats = pm.autotune_stats()
+    assert stats["raced"] == 0 and stats["cache_hits"] >= 1
+    assert plan2.sharding_mode == plan.sharding_mode
+    pm.clear_plans()
+
+
+def test_plan_store_roundtrip_restores_hybrid(prob, tmp_path, monkeypatch):
+    from repro.serving.persistence import PlanStore
+
+    _, _, _, spec = prob
+    mesh = _mesh(4, 1)
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    pm.clear_plans()
+    plan = pm.msda_plan(spec, backend="ref", mesh=mesh, sharding="hybrid")
+    store = PlanStore(str(tmp_path / "plans.json"))
+    assert store.save_plans([plan]) == 1
+    pm.clear_plans()
+    report = store.restore(mesh=mesh)
+    assert not report.skipped and not report.describe_mismatches
+    [restored] = report.plans
+    assert restored.sharding_mode == "batchquery"
+    assert restored.batch_tile == 2
+    assert persistence_norm(restored.describe()) == persistence_norm(plan.describe())
+    pm.clear_plans()
