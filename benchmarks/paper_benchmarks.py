@@ -353,6 +353,95 @@ def fused_vs_per_level(out_path=None):
 
 
 # --------------------------------------------------------------------------
+# pruned top-k vs dense plans (PR 7 sparsity ablation)
+# --------------------------------------------------------------------------
+
+
+def sparsity_ablation(out_path=None):
+    """Pruned top-k plans vs the dense path, fwd and train.
+
+    The transferable number is the GATHER-COUNT reduction — the pruned
+    executor touches ``4k`` corners per query/head instead of ``4*L*P``
+    — plus the renormalised-weight overhead it buys that with; the
+    interpret/CPU wall time is reported for trend only.  Writes the
+    ``BENCH_sparsity.json`` trajectory file at the repo root (CI uploads
+    it per commit) and prints the CSV rows.
+    """
+    import dataclasses
+    import json
+    import os
+
+    from repro.kernels import msda_sparse
+
+    levels = ((16, 16), (8, 8), (4, 4))
+    q, b, h = 64, 1, 2
+    S = sum(hh * ww for hh, ww in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    value = jax.random.normal(ks[0], (b, S, h, D))
+    loc = jax.random.uniform(ks[1], (b, q, h, L, P, 2))
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (b, q, h, L, P)).reshape(b, q, h, -1)
+    ).reshape(b, q, h, L, P)
+    gout = jax.random.normal(ks[3], (b, q, h * D))
+
+    print("# Pruned top-k vs dense plans (gather counts transfer; walltime is trend)")
+    results = {}
+    spec0 = plan_mod.MsdaSpec(
+        spatial_shapes=levels, num_heads=h, head_dim=D, num_points=P,
+        num_queries=q, dtype="float32")
+    cells = L * P
+    for k in (cells // 2, cells // 4):
+        counts = msda_sparse.gather_counts(
+            dataclasses.replace(spec0, sparsity="topk", sparsity_k=k))
+        for train in (False, True):
+            spec = dataclasses.replace(spec0, train=train)
+            plans = {
+                "dense": plan_mod.msda_plan(spec, backend="cpu"),
+                "topk": plan_mod.msda_plan(
+                    dataclasses.replace(spec, sparsity="topk", sparsity_k=k),
+                    backend="cpu"),
+            }
+            if train:
+                fns = {m: jax.jit(jax.grad(
+                    lambda v, l, a, p=p: jnp.vdot(p(v, l, a), gout),
+                    argnums=(0, 1, 2))) for m, p in plans.items()}
+            else:
+                fns = {m: jax.jit(lambda v, l, a, p=p: p(v, l, a))
+                       for m, p in plans.items()}
+            t = _time_interleaved(fns, (value, loc, attn), iters=3)
+            tag = "train" if train else "fwd"
+            for mode, us in t.items():
+                gathers = (counts["topk_corner_gathers"] if mode == "topk"
+                           else counts["dense_corner_gathers"])
+                results[f"k{k}.{tag}.{mode}"] = {
+                    "us": us, "corner_gathers_per_query": gathers}
+                row(f"sparsity.k{k}.{tag}.{mode}", us, f"gathers={gathers}")
+            row(f"sparsity.k{k}.{tag}.topk_speedup", 0.0,
+                f"x{t['dense'] / t['topk']:.2f}_vs_dense")
+            results[f"k{k}.{tag}.topk_speedup_x"] = t["dense"] / t["topk"]
+        results[f"k{k}.gather_reduction"] = counts["gather_reduction"]
+        row(f"sparsity.k{k}.gather_reduction", 0.0,
+            f"{counts['gather_reduction']:.2%}_fewer_corner_gathers")
+
+    if out_path is None:
+        out_path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_sparsity.json")
+    payload = {
+        "bench": "sparsity_ablation",
+        "geometry": {"levels": [list(hw) for hw in levels], "Q": q, "B": b,
+                     "H": h, "D": D, "P": P, "cells": cells},
+        "note": "CPU wall time is trend only; gather-count reduction transfers",
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {out_path}")
+    return results
+
+
+# --------------------------------------------------------------------------
 # end-to-end: paper host model (reduced) train step
 # --------------------------------------------------------------------------
 

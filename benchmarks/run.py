@@ -23,6 +23,7 @@ def main() -> None:
     pb.table3_speedups(t2)
     pb.backend_dtype_matrix()
     pb.fused_vs_per_level()  # emits BENCH_kernels.json at the repo root
+    pb.sparsity_ablation()  # emits BENCH_sparsity.json at the repo root
     pb.fig4_gather_microbench()
     pb.fig5_scatter_microbench()
     if not args.fast:

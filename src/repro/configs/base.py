@@ -105,6 +105,20 @@ class MSDAConfig:
     #           (tune='autotune' races fused vs per-level instead)
     #   'on'    force fusion, 'off' pin the per-level launches
     fuse_levels: str = "auto"
+    # top-k attention-weight point pruning (LOSSY — DEFA-style):
+    #   'off'   dense MSDA, bitwise-identical to pre-sparsity plans
+    #   'topk'  pin the pruned executor (keep sparsity_k cells/query)
+    #   'auto'  tune='autotune' races pruned vs dense; heuristic stays
+    #           dense (a lossy mode is never picked untimed)
+    sparsity: str = "off"
+    # cells kept per query under 'topk'; 0 -> ceil(levels*points / 2)
+    sparsity_k: int = 0
+    # plan-time query ordering (bitwise-neutral to outputs):
+    #   'identity' leave queries in raster order
+    #   'morton'   Z-curve-permute queries at the executor boundary
+    #              (engages only on encoder layouts where Q == S)
+    #   'auto'     tune='autotune' races morton vs identity
+    query_order: str = "identity"
 
     def __post_init__(self):
         # mirror of plan.DTYPE_POLICIES keys — kept local so the config
@@ -121,6 +135,17 @@ class MSDAConfig:
             raise ValueError(
                 f"unknown msda grad_reduce {self.grad_reduce!r}; one of "
                 "'auto' | 'ring' | 'psum'")
+        if self.sparsity not in ("off", "topk", "auto"):
+            raise ValueError(
+                f"unknown msda sparsity {self.sparsity!r}; one of "
+                "'off' | 'topk' | 'auto'")
+        if self.sparsity_k < 0:
+            raise ValueError(
+                f"msda sparsity_k must be >= 0, got {self.sparsity_k}")
+        if self.query_order not in ("identity", "morton", "auto"):
+            raise ValueError(
+                f"unknown msda query_order {self.query_order!r}; one of "
+                "'identity' | 'morton' | 'auto'")
 
 
 # --------------------------------------------------------------------------

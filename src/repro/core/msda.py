@@ -104,7 +104,10 @@ def attention_plan(
     :func:`repro.kernels.plan.resolve_dtype_policy`).
     ``msda_cfg.fuse_levels`` ('auto' | 'on' | 'off') commits the
     whole-pyramid kernel-fusion rung (one pallas launch per direction
-    when the packed pyramid fits VMEM).  When a mesh is given,
+    when the packed pyramid fits VMEM).  ``msda_cfg.sparsity`` /
+    ``sparsity_k`` / ``query_order`` commit the sparsity rungs — top-k
+    point pruning (lossy, dense fallback) and the Morton query
+    permutation (bitwise-neutral).  When a mesh is given,
     ``msda_cfg.sharding`` / ``msda_cfg.grad_reduce`` (both overridable
     per call) select the distribution family and the grad_value
     reduction — see ``docs/sharding.md``.
@@ -123,6 +126,9 @@ def attention_plan(
         slab_dtype=slab_dtype,
         accum_dtype=accum_dtype,
         fuse_levels=getattr(msda_cfg, "fuse_levels", "auto"),
+        sparsity=getattr(msda_cfg, "sparsity", "off"),
+        sparsity_k=getattr(msda_cfg, "sparsity_k", 0),
+        query_order=getattr(msda_cfg, "query_order", "identity"),
     )
     return plan_mod.msda_plan(
         spec,

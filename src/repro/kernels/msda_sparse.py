@@ -1,0 +1,201 @@
+"""Sparsity-aware MSDA executors: top-k point pruning + Morton query order.
+
+Two plan rungs the related work motivates (ROADMAP "Sparsity-aware
+plans"), both committed at plan time like every other axis:
+
+* **Top-k point pruning** (DEFA, arxiv 2403.10913): most of a trained
+  MSDA head's attention mass concentrates in a few (level, point) cells
+  per query, so keeping only the ``k`` highest-weight cells,
+  renormalising, and gathering only the surviving corners cuts the
+  gather count from ``4*L*P`` to ``4*k`` per query.  This is LOSSY —
+  the dense path stays the always-available fallback, conformance
+  checks the pruned executor against :func:`topk_mask_weights` +
+  ``msda_ref`` under its own tolerance tier, and ``tune="autotune"``
+  races pruned-vs-dense instead of trusting the ~2x FLOP cut to
+  translate into wall time.
+
+* **Morton query permutation** (QUILL, arxiv 2511.13679): when the
+  query grid IS the pixel grid (the encoder layout, ``Q == S``),
+  sorting queries by the Z-curve order of their reference pixels makes
+  spatially-near queries adjacent, so a query block's corner gathers
+  cluster within a slab row instead of striding the whole level.  The
+  permutation is applied to loc/attn at the executor boundary and
+  inverted on the output — per-query MSDA math is independent along Q,
+  so the forward result and the loc/attn gradients are BITWISE
+  unchanged (grad_value changes only its scatter accumulation order).
+
+Selection uses ``jax.lax.top_k`` (deterministic, ties broken by lowest
+index), so the executor and the conformance oracle always prune the
+SAME cells — parity is a rounding question, never a selection gamble.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Shapes = Tuple[Tuple[int, int], ...]
+
+# renormalisation guard: softmaxed weights are positive, but the pruned
+# executor and the masked oracle must share ONE denominator convention
+# so VJP parity holds on any input conformance throws at them
+_RENORM_FLOOR = 1e-20
+
+
+# --------------------------------------------------------------------------
+# Morton (Z-curve) query ordering
+# --------------------------------------------------------------------------
+
+
+def morton_codes(h: int, w: int) -> np.ndarray:
+    """Z-curve code of every (y, x) pixel of an ``h x w`` grid, raster
+    order — interleaves the coordinate bits (x even, y odd)."""
+    ys, xs = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    y = ys.reshape(-1).astype(np.uint64)
+    x = xs.reshape(-1).astype(np.uint64)
+    code = np.zeros(h * w, dtype=np.uint64)
+    for b in range(max(int(h).bit_length(), int(w).bit_length())):
+        code |= ((x >> np.uint64(b)) & np.uint64(1)) << np.uint64(2 * b)
+        code |= ((y >> np.uint64(b)) & np.uint64(1)) << np.uint64(2 * b + 1)
+    return code
+
+
+def morton_permutation(spatial_shapes: Shapes) -> np.ndarray:
+    """``perm[i]`` = raster-order query index of the i-th Morton-ordered
+    query.  Per level (each level's queries are its own raster grid —
+    ``core.msda.level_ref_points``), offset by the level's start, so the
+    permutation never mixes levels."""
+    parts = []
+    off = 0
+    for h, w in spatial_shapes:
+        order = np.argsort(morton_codes(h, w), kind="stable")
+        parts.append(order.astype(np.int64) + off)
+        off += h * w
+    if not parts:
+        return np.zeros(0, dtype=np.int64)
+    return np.concatenate(parts)
+
+
+def morton_eligible(spec) -> bool:
+    """The permutation is statically known only when the query grid is
+    the pixel grid (encoder layout): one query per pixel, raster order."""
+    return spec.num_queries == spec.total_pixels and spec.num_queries > 1
+
+
+def wrap_query_permutation(exec_fn: Callable, spatial_shapes: Shapes) -> Callable:
+    """Executor wrapper: loc/attn enter Morton-ordered, output leaves in
+    the caller's (raster) order.  Bitwise-neutral for the forward and
+    the loc/attn gradients (per-query independence; the permutation is
+    a bijection so its VJP scatter has no collisions)."""
+    perm = morton_permutation(spatial_shapes)
+    inv = np.argsort(perm)
+    perm_j = jnp.asarray(perm, dtype=jnp.int32)
+    inv_j = jnp.asarray(inv, dtype=jnp.int32)
+
+    def run(value, loc, attn):
+        out = exec_fn(value, jnp.take(loc, perm_j, axis=1),
+                      jnp.take(attn, perm_j, axis=1))
+        return jnp.take(out, inv_j, axis=1)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# top-k point pruning
+# --------------------------------------------------------------------------
+
+
+def topk_mask_weights(attn: jax.Array, k: int) -> jax.Array:
+    """Dense-shaped oracle weights: the ``k`` highest of each query's
+    ``L*P`` cells kept and renormalised, the rest zeroed.  Conformance
+    feeds these to ``msda_ref`` to get the pruned executor's exact
+    mathematical target (same ``top_k`` selection, same denominator)."""
+    B, Q, H, L, P = attn.shape
+    w = attn.reshape(B, Q, H, L * P).astype(jnp.float32)
+    topw, topi = jax.lax.top_k(w, k)
+    keep = jnp.sum(jax.nn.one_hot(topi, L * P, dtype=w.dtype), axis=-2)
+    kept = w * keep
+    den = jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), _RENORM_FLOOR)
+    return (kept / den).reshape(B, Q, H, L, P).astype(attn.dtype)
+
+
+def gather_counts(spec) -> Dict[str, int]:
+    """Per-query gather arithmetic of pruned vs dense (benchmark report)."""
+    cells = spec.num_levels * spec.num_points
+    k = spec.resolved_sparsity_k()
+    return {
+        "dense_cells": cells,
+        "topk_cells": k,
+        "dense_corner_gathers": 4 * cells,
+        "topk_corner_gathers": 4 * k,
+        "gather_reduction": 1.0 - k / cells,
+    }
+
+
+def build_topk_exec(spec) -> Callable:
+    """Pruned executor for ``spec``: top-k cell selection, renormalise,
+    gather ONLY the surviving cells' corners (``4*k`` per query instead
+    of ``4*L*P``).  Pure jnp — XLA AD provides the VJP, every backend
+    shares it (the dense backend executor is the fallback the planner
+    swaps back in for ``sparsity="off"`` / losing races).
+
+    fp32 compute regardless of the slab policy (like the ref oracle):
+    the pruned tier's tolerance budget is spent on the pruning, not on
+    narrow-dtype gathers.
+    """
+    shapes = spec.spatial_shapes
+    L, P = spec.num_levels, spec.num_points
+    k = spec.resolved_sparsity_k()
+    hs = jnp.asarray([h for h, _ in shapes], dtype=jnp.int32)
+    ws = jnp.asarray([w for _, w in shapes], dtype=jnp.int32)
+    sizes = [h * w for h, w in shapes]
+    offs = jnp.asarray(np.cumsum([0] + sizes)[:-1], dtype=jnp.int32)
+
+    def run(value, loc, attn):
+        B, S, H, D = value.shape
+        Q = loc.shape[1]
+        w = attn.reshape(B, Q, H, L * P).astype(jnp.float32)
+        topw, topi = jax.lax.top_k(w, k)                    # (B,Q,H,k)
+        den = jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), _RENORM_FLOOR)
+        topw = topw / den
+        locf = loc.reshape(B, Q, H, L * P, 2).astype(jnp.float32)
+        sel = jnp.take_along_axis(locf, topi[..., None], axis=3)  # (B,Q,H,k,2)
+        lvl = topi // P
+        hl = jnp.take(hs, lvl)                              # (B,Q,H,k) int32
+        wl = jnp.take(ws, lvl)
+        off = jnp.take(offs, lvl)
+        # grid_sample(align_corners=False) corners, per surviving cell
+        px = sel[..., 0] * wl.astype(jnp.float32) - 0.5
+        py = sel[..., 1] * hl.astype(jnp.float32) - 0.5
+        x0f = jnp.floor(px)
+        y0f = jnp.floor(py)
+        lx = px - x0f
+        ly = py - y0f
+        x0 = x0f.astype(jnp.int32)
+        y0 = y0f.astype(jnp.int32)
+        value_t = jnp.transpose(value, (0, 2, 1, 3)).astype(jnp.float32)
+
+        def corner(xi, yi):
+            inb = (xi >= 0) & (xi < wl) & (yi >= 0) & (yi < hl)
+            xc = jnp.clip(xi, 0, wl - 1)
+            yc = jnp.clip(yi, 0, hl - 1)
+            flat = off + yc * wl + xc                       # (B,Q,H,k)
+            idx = jnp.transpose(flat, (0, 2, 1, 3)).reshape(B, H, Q * k)
+            g = jnp.take_along_axis(value_t, idx[..., None], axis=2)
+            g = jnp.transpose(g.reshape(B, H, Q, k, D), (0, 2, 1, 3, 4))
+            return g * inb[..., None].astype(g.dtype)
+
+        w00 = (1 - lx) * (1 - ly)
+        w10 = lx * (1 - ly)
+        w01 = (1 - lx) * ly
+        w11 = lx * ly
+        sampled = (corner(x0, y0) * w00[..., None]
+                   + corner(x0 + 1, y0) * w10[..., None]
+                   + corner(x0, y0 + 1) * w01[..., None]
+                   + corner(x0 + 1, y0 + 1) * w11[..., None])  # (B,Q,H,k,D)
+        out = jnp.einsum("bqhkd,bqhk->bqhd", sampled, topw)
+        return out.reshape(B, Q, H * D).astype(value.dtype)
+
+    return run

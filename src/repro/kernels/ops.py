@@ -531,6 +531,9 @@ def msda(
     train: bool = False,
     dtype_policy: str = "follow",
     fuse_levels: str = "auto",
+    sparsity: str = "off",
+    sparsity_k: int = 0,
+    query_order: str = "identity",
     block_q=_UNSET,
     fuse_gather=_UNSET,
     fuse_scatter=_UNSET,
@@ -552,7 +555,10 @@ def msda(
     ``plan.resolve_dtype_policy``).  ``fuse_levels``
     ('auto' | 'on' | 'off') commits the whole-pyramid kernel fusion
     rung (one pallas launch per direction when the packed pyramid fits
-    VMEM).  The per-call tuning kwargs
+    VMEM).  ``sparsity`` / ``sparsity_k`` / ``query_order`` commit the
+    sparsity rungs: DEFA-style top-k point pruning (lossy, dense
+    fallback — see ``kernels/msda_sparse.py``) and the bitwise-neutral
+    Morton query permutation.  The per-call tuning kwargs
     (``block_q``, ``fuse_gather``, ``fuse_scatter``,
     ``adaptive_block``, ``onehot_small_levels``, ``interpret``) are
     deprecated; put them on the spec / plan instead.
@@ -561,7 +567,8 @@ def msda(
 
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(dtype_policy)
     overrides = {"slab_dtype": slab_dtype, "accum_dtype": accum_dtype,
-                 "fuse_levels": fuse_levels}
+                 "fuse_levels": fuse_levels, "sparsity": sparsity,
+                 "sparsity_k": sparsity_k, "query_order": query_order}
     for name, val in (("fuse_gather", fuse_gather), ("fuse_scatter", fuse_scatter),
                       ("adaptive_block", adaptive_block),
                       ("onehot_small_levels", onehot_small_levels)):

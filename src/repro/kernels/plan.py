@@ -73,6 +73,9 @@ _SUBLANE = 8
 
 FUSE_LEVELS_CHOICES = ("auto", "on", "off")
 
+SPARSITY_CHOICES = ("off", "topk", "auto")
+QUERY_ORDER_CHOICES = ("identity", "morton", "auto")
+
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
@@ -155,6 +158,26 @@ class MsdaSpec:
     # model.  'on'/'off' pin the decision.  Only kernel backends that
     # understand fusion (pallas) honour it; others stay per-level.
     fuse_levels: str = "auto"
+    # -- sparsity (the fourth planned axis) -------------------------------
+    # 'off' executes dense MSDA exactly as before (bitwise-identical
+    # plans); 'topk' pins the pruned executor — keep the sparsity_k
+    # highest-weight (level, point) cells per query, renormalise, gather
+    # only the surviving corners (DEFA-style point pruning; LOSSY, with
+    # its own conformance tolerance tier); 'auto' lets tune="autotune"
+    # race pruned-vs-dense (fwd+VJP for train specs) and stays dense
+    # under the heuristic — a lossy mode is never picked untimed.
+    sparsity: str = "off"
+    # cells kept per query under 'topk'; 0 -> ceil(L*P / 2), always
+    # clamped to L*P (see resolved_sparsity_k)
+    sparsity_k: int = 0
+    # -- query ordering (the fifth planned axis) --------------------------
+    # 'morton' permutes queries into reference-pixel Z-curve order at the
+    # executor boundary (inverted on output) so near-in-space queries
+    # gather near-in-slab corners (QUILL-style locality).  Bitwise-
+    # neutral to the forward and the loc/attn grads; only engages when
+    # the query grid IS the pixel grid (Q == S, the encoder layout).
+    # 'auto' races permuted-vs-identity under autotune.
+    query_order: str = "identity"
 
     def __post_init__(self):
         shapes = tuple((int(h), int(w)) for h, w in self.spatial_shapes)
@@ -167,6 +190,16 @@ class MsdaSpec:
             raise ValueError(
                 f"unknown fuse_levels {self.fuse_levels!r}; "
                 f"one of {FUSE_LEVELS_CHOICES}")
+        if self.sparsity not in SPARSITY_CHOICES:
+            raise ValueError(
+                f"unknown sparsity {self.sparsity!r}; "
+                f"one of {SPARSITY_CHOICES}")
+        if self.sparsity_k < 0:
+            raise ValueError(f"sparsity_k must be >= 0, got {self.sparsity_k}")
+        if self.query_order not in QUERY_ORDER_CHOICES:
+            raise ValueError(
+                f"unknown query_order {self.query_order!r}; "
+                f"one of {QUERY_ORDER_CHOICES}")
         if self.vmem_budget <= 0:
             object.__setattr__(self, "vmem_budget", default_vmem_budget())
 
@@ -197,6 +230,13 @@ class MsdaSpec:
     @property
     def accum_itemsize(self) -> int:
         return jnp.dtype(self.accum_dtype).itemsize
+
+    def resolved_sparsity_k(self) -> int:
+        """Cells kept per query when the pruned executor runs (0 pins
+        the half-the-cells default; always clamped to the cell count)."""
+        cells = self.num_levels * self.num_points
+        k = self.sparsity_k if self.sparsity_k > 0 else max(1, -(-cells // 2))
+        return min(k, cells)
 
     def cache_token(self) -> str:
         """Stable string key (autotune disk cache)."""
@@ -289,10 +329,49 @@ class PlanTuning:
     # committed whole-pyramid fusion decision: one pallas launch per
     # direction (block_q is then one shared value, replicated per level)
     fuse_levels: bool = False
+    # committed sparsity decision: 'dense' runs the backend executor
+    # unchanged; 'topk' swaps in the pruned top-k gather executor
+    sparsity: str = "dense"
+    # committed query ordering: 'morton' wraps the executor in the
+    # Z-curve permutation (inverted on output); 'identity' leaves it
+    query_order: str = "identity"
 
 
 def _default_slab_dtypes(spec: MsdaSpec) -> Tuple[str, ...]:
     return (spec.resolved_slab_dtype(),) * spec.num_levels
+
+
+def _resolve_sparsity(spec: MsdaSpec) -> str:
+    """Pin/heuristic side of the sparsity rung: only an explicit 'topk'
+    commits the lossy executor without a timing race ('auto' stays
+    dense until autotune measures a win)."""
+    return "topk" if spec.sparsity == "topk" else "dense"
+
+
+def _resolve_query_order(spec: MsdaSpec) -> str:
+    """Pin/heuristic side of the ordering rung: a 'morton' pin engages
+    only on eligible (Q == S) geometry — anything else stays identity,
+    truthfully recorded in the tuning."""
+    from repro.kernels import msda_sparse
+
+    if spec.query_order == "morton" and msda_sparse.morton_eligible(spec):
+        return "morton"
+    return "identity"
+
+
+def _apply_sparsity_wrappers(exec_fn: Callable, spec: MsdaSpec,
+                             sparsity: str, query_order: str) -> Callable:
+    """Commit the resolved sparsity/ordering decisions onto an executor.
+    'dense' + 'identity' returns ``exec_fn`` untouched — the
+    ``sparsity="off"`` path stays byte-identical to pre-sparsity plans."""
+    from repro.kernels import msda_sparse
+
+    if sparsity == "topk":
+        exec_fn = msda_sparse.build_topk_exec(spec)
+    if query_order == "morton":
+        exec_fn = msda_sparse.wrap_query_permutation(
+            exec_fn, spec.spatial_shapes)
+    return exec_fn
 
 
 # backends whose builders understand the whole-pyramid fused kernels;
@@ -535,28 +614,44 @@ _BLOCKLESS_BACKENDS = frozenset({"ref", "cpu"})
 _SLAB_DTYPE_CANDIDATES = ("float32", "bfloat16")
 
 
+# every field the winner-entry schema knows how to validate; anything
+# else a cache entry carries was written by a NEWER build and must ride
+# through this build's parse/rewrite cycle untouched (the "extras" dict)
+_WINNER_FIELDS = ("block_q", "slab_dtypes", "sharding", "onehot_levels",
+                  "fuse_levels", "grad_reduce", "sparsity", "query_order")
+
+
 def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
     """Decode a winner-cache entry into the normalised winner dict.
 
     Returns ``{"block_q": tuple, "slab_dtypes": tuple, "sharding":
     None|'1d'|'2d'|'hybrid', "onehot_levels": None|tuple, "fuse_levels":
-    None|bool, "grad_reduce": None|'ring'|'psum'}`` or ``None`` on a
-    miss.  The ``sharding``/``grad_reduce`` fields live on mesh-keyed
-    entries (the 1D-vs-2D and ring-vs-psum races of distributed plans);
+    None|bool, "grad_reduce": None|'ring'|'psum', "sparsity":
+    None|'dense'|'topk', "query_order": None|'identity'|'morton',
+    "extras": dict}`` or ``None`` on a miss.  The
+    ``sharding``/``grad_reduce`` fields live on mesh-keyed entries (the
+    1D-vs-2D and ring-vs-psum races of distributed plans);
     ``fuse_levels`` records the whole-pyramid fusion race;
-    ``onehot_levels`` the per-level MXU-routing race.  All four are
-    OPTIONAL, so every pre-existing entry still parses with ``None``
-    there.  A flat ``[block_q...]`` list is accepted for hand-authored
-    caches (offline sweep tooling / the pre-dtype-policy format).
-    Anything malformed is treated as a miss, never an error: a corrupt
-    cache file must degrade to re-tuning.
+    ``onehot_levels`` the per-level MXU-routing race; ``sparsity`` /
+    ``query_order`` the pruned-vs-dense and Morton-vs-identity races.
+    All are OPTIONAL, so every pre-existing entry still parses with
+    ``None`` there.  Keys this build does NOT know land in ``extras``
+    verbatim and :func:`_winner_entry` writes them back — a field
+    persisted by a newer build survives an older build re-persisting
+    the entry instead of being silently erased.  A flat ``[block_q...]``
+    list is accepted for hand-authored caches (offline sweep tooling /
+    the pre-dtype-policy format).  Anything malformed is treated as a
+    miss, never an error: a corrupt cache file must degrade to
+    re-tuning.
     """
     L = spec.num_levels
 
-    def _out(bq, dts, sharding=None, onehot=None, fused=None, gr=None):
+    def _out(bq, dts, sharding=None, onehot=None, fused=None, gr=None,
+             sparsity=None, query_order=None, extras=None):
         return {"block_q": bq, "slab_dtypes": dts, "sharding": sharding,
                 "onehot_levels": onehot, "fuse_levels": fused,
-                "grad_reduce": gr}
+                "grad_reduce": gr, "sparsity": sparsity,
+                "query_order": query_order, "extras": dict(extras or {})}
 
     try:
         if isinstance(hit, list) and len(hit) == L:
@@ -569,6 +664,12 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
                 return None
             gr = hit.get("grad_reduce")
             if gr is not None and gr not in ("ring", "psum"):
+                return None
+            sparsity = hit.get("sparsity")
+            if sparsity is not None and sparsity not in ("dense", "topk"):
+                return None
+            qorder = hit.get("query_order")
+            if qorder is not None and qorder not in ("identity", "morton"):
                 return None
             if not (isinstance(bq, list) and len(bq) == L):
                 return None
@@ -583,8 +684,9 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
             fused = hit.get("fuse_levels")
             if fused is not None:
                 fused = bool(fused)
+            extras = {k: v for k, v in hit.items() if k not in _WINNER_FIELDS}
             return _out(tuple(int(b) for b in bq), dts, sharding, onehot,
-                        fused, gr)
+                        fused, gr, sparsity, qorder, extras)
     except (TypeError, ValueError):  # hand-edited / corrupted entries
         return None
     return None
@@ -645,7 +747,8 @@ def get_autotune_winner(spec: MsdaSpec, backend: str,
 
 def _winner_entry(parsed: Dict[str, Any]) -> Dict[str, Any]:
     """Parsed winner dict -> the JSON entry shape (optional fields only
-    when present — old schemas round-trip unchanged)."""
+    when present — old schemas round-trip unchanged; unknown keys a
+    newer build persisted ride through via ``extras``)."""
     out = {"block_q": [int(b) for b in parsed["block_q"]],
            "slab_dtypes": list(parsed["slab_dtypes"])}
     if parsed.get("sharding") is not None:
@@ -656,6 +759,13 @@ def _winner_entry(parsed: Dict[str, Any]) -> Dict[str, Any]:
         out["fuse_levels"] = bool(parsed["fuse_levels"])
     if parsed.get("grad_reduce") is not None:
         out["grad_reduce"] = parsed["grad_reduce"]
+    if parsed.get("sparsity") is not None:
+        out["sparsity"] = parsed["sparsity"]
+    if parsed.get("query_order") is not None:
+        out["query_order"] = parsed["query_order"]
+    for k, v in (parsed.get("extras") or {}).items():
+        if k not in _WINNER_FIELDS:
+            out[k] = v
     return out
 
 
@@ -701,10 +811,11 @@ def seed_autotune_winner(spec: MsdaSpec, backend: str, winner: Any,
 
 def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
-) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, str]:
+) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, str,
+           str, str]:
     """Measure candidate plans; persist the winner per (device, spec).
 
-    Four raced axes:
+    Six raced axes:
 
     * ``block_q`` — the heuristic plan scaled by {1/2, 1, 2} per level
       (uniformly — the per-level cross product explodes), snapped to the
@@ -723,16 +834,28 @@ def _autotune_plan(
       the per-level incumbent.  **Train specs time forward + full VJP**:
       fusion changes the backward's launch count and gout re-streaming,
       so a forward-only race would crown the wrong side for training.
+    * top-k point pruning — under ``sparsity="auto"``, the pruned
+      executor (4k corner gathers per query instead of 4LP, LOSSY —
+      see ``kernels/msda_sparse.py``) races the committed dense winner;
+      timed fwd+VJP for train specs.  The heuristic never picks it:
+      lossy plans only come from an explicit pin or a measured win.
+    * Morton query ordering — under ``query_order="auto"`` on eligible
+      (Q == S) geometry, the Z-curve-permuted executor races identity.
+      The permutation is bitwise-neutral to outputs, so this race is
+      purely about gather locality vs permute overhead.
 
     All timings are interleaved medians (see :func:`_time_executors`)
     and a challenger must beat the incumbent by ``_AUTOTUNE_MARGIN`` —
     load jitter must never pick a winner.
 
     Winners ``{"block_q", "slab_dtypes"}`` (+ optional ``onehot_levels``
-    / ``fuse_levels``) are keyed by spec + device kind so a cache
-    produced on one part never mis-tunes another.  Returns
-    ``(block_q, slab_dtypes, onehot_levels, fuse_levels, source)``.
+    / ``fuse_levels`` / ``sparsity`` / ``query_order``) are keyed by
+    spec + device kind so a cache produced on one part never mis-tunes
+    another.  Returns ``(block_q, slab_dtypes, onehot_levels,
+    fuse_levels, sparsity, query_order, source)``.
     """
+    from repro.kernels import msda_sparse
+
     onehot = _onehot_levels(spec)
     heur = _heuristic_block_q(spec)
     base_dts = _default_slab_dtypes(spec)
@@ -748,10 +871,22 @@ def _autotune_plan(
         # must not override an explicit 'on' pin
         fused = (bool(parsed["fuse_levels"])
                  if parsed["fuse_levels"] is not None else pin_fused)
-        return parsed["block_q"], parsed["slab_dtypes"], oh, fused, "autotune-cache"
+        # field-less entries (older schema) resolve the sparsity rungs
+        # the way a pin/heuristic would — never surprise-lossy
+        sp = (parsed["sparsity"] if parsed["sparsity"] is not None
+              else _resolve_sparsity(spec))
+        qo = (parsed["query_order"] if parsed["query_order"] is not None
+              else _resolve_query_order(spec))
+        if qo == "morton" and not msda_sparse.morton_eligible(spec):
+            qo = "identity"  # entry from a differently-shaped past: ignore
+        return (parsed["block_q"], parsed["slab_dtypes"], oh, fused, sp, qo,
+                "autotune-cache")
 
     qcap = _round_up(spec.num_queries, _SUBLANE)
     race_fuse = fusable and spec.fuse_levels == "auto" and spec.num_levels >= 2
+    race_sparsity = spec.sparsity == "auto"
+    race_qorder = (spec.query_order == "auto"
+                   and msda_sparse.morton_eligible(spec))
     candidates = []
     if backend_name not in _BLOCKLESS_BACKENDS:
         # pin_fused: the only plan family is fused, so the block race
@@ -771,8 +906,11 @@ def _autotune_plan(
         candidates.append(heur)
     race_dtypes = spec.slab_dtype == "auto"
     race_onehot = bool(onehot) and backend_name not in _BLOCKLESS_BACKENDS
-    if len(candidates) == 1 and not (race_dtypes or race_onehot or race_fuse):
-        return candidates[0], base_dts, onehot, pin_fused, "autotune"
+    if len(candidates) == 1 and not (race_dtypes or race_onehot or race_fuse
+                                     or race_sparsity or race_qorder):
+        return (candidates[0], base_dts, onehot, pin_fused,
+                _resolve_sparsity(spec), _resolve_query_order(spec),
+                "autotune")
 
     _AUTOTUNE_STATS["raced"] += 1
     _AUTOTUNE_STATS["raced_local"] += 1
@@ -820,7 +958,8 @@ def _autotune_plan(
         # every candidate failed to build: fall back to the heuristic and
         # do NOT persist — a never-validated plan must not poison the
         # per-device winner cache for future processes
-        return heur, base_dts, onehot, False, "heuristic"
+        return (heur, base_dts, onehot, False, _resolve_sparsity(spec),
+                _resolve_query_order(spec), "heuristic")
     best = bkey
 
     best_dts = base_dts
@@ -897,13 +1036,75 @@ def _autotune_plan(
         if best_fused:
             best, best_dts = fused_bq, uni
 
+    def _warm(exec_fn, timed):
+        """Jit + warm an executor built OUTSIDE the (bq, dts, ...) tuning
+        space (the pruned / permuted challengers); may raise."""
+        if timed == "train":
+            f = jax.jit(jax.grad(
+                lambda v, l, a, e=exec_fn: jnp.sum(e(v, l, a)),
+                argnums=(0, 1, 2)))
+        else:
+            f = jax.jit(exec_fn)
+        jax.block_until_ready(f(*args))
+        return f
+
+    best_sparsity = _resolve_sparsity(spec)
+    if race_sparsity:
+        # pruned challenger vs the fully committed dense winner; the
+        # dense side stays the incumbent (lossy never wins on jitter).
+        # Timed fwd+VJP for train specs — pruning shrinks the backward's
+        # scatter set as much as the forward's gather set.
+        timed = "train" if spec.train else "fwd"
+        try:
+            fns = {
+                "dense": get_fn(best, best_dts, best_onehot, best_fused,
+                                timed=timed),
+                "topk": _warm(msda_sparse.build_topk_exec(spec), timed),
+            }
+            times = _time_executors(fns, args)
+            if times["topk"] < times["dense"] * (1 - _AUTOTUNE_MARGIN):
+                best_sparsity = "topk"
+            else:
+                best_sparsity = "dense"
+        except Exception:
+            best_sparsity = "dense"  # challenger didn't build: stay dense
+
+    best_qorder = _resolve_query_order(spec)
+    if race_qorder:
+        # Morton permutation around whatever executor the sparsity rung
+        # just committed — the permutation's locality payoff (and its
+        # permute overhead) must be measured on the plan that will run
+        timed = "train" if spec.train else "fwd"
+        try:
+            if best_sparsity == "topk":
+                base_exec = msda_sparse.build_topk_exec(spec)
+            else:
+                base_exec = builder(spec, PlanTuning(
+                    block_q=best, onehot_levels=best_onehot,
+                    interpret=interpret, source="autotune",
+                    slab_dtypes=best_dts, fuse_levels=best_fused))
+            wrapped = msda_sparse.wrap_query_permutation(
+                base_exec, spec.spatial_shapes)
+            fns = {"identity": _warm(base_exec, timed),
+                   "morton": _warm(wrapped, timed)}
+            times = _time_executors(fns, args)
+            if times["morton"] < times["identity"] * (1 - _AUTOTUNE_MARGIN):
+                best_qorder = "morton"
+            else:
+                best_qorder = "identity"
+        except Exception:
+            best_qorder = "identity"
+
     parsed = {"block_q": best, "slab_dtypes": best_dts,
               "sharding": None, "grad_reduce": None,
               "onehot_levels": best_onehot if race_onehot else None,
-              "fuse_levels": best_fused if fusable else None}
+              "fuse_levels": best_fused if fusable else None,
+              "sparsity": best_sparsity if race_sparsity else None,
+              "query_order": best_qorder if race_qorder else None,
+              "extras": {}}
     disk[key] = _winner_entry(parsed)
     _store_autotune_cache(disk)
-    return best, best_dts, best_onehot, best_fused, "autotune"
+    return best, best_dts, best_onehot, best_fused, best_sparsity, best_qorder, "autotune"
 
 
 def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
@@ -1089,7 +1290,8 @@ def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
         prev = {"block_q": tuning.block_q,
                 "slab_dtypes": tuning.slab_dtypes or _default_slab_dtypes(local_spec),
                 "sharding": None, "onehot_levels": None,
-                "fuse_levels": None, "grad_reduce": None}
+                "fuse_levels": None, "grad_reduce": None,
+                "sparsity": None, "query_order": None, "extras": {}}
     prev["grad_reduce"] = choice
     disk[key] = _winner_entry(prev)
     _store_autotune_cache(disk)
@@ -1465,7 +1667,11 @@ class MsdaPlan:
             resident = fused_resident if fused else slab_bytes
             occupancy = (resident + bq * per_q) / max(s.vmem_budget, 1)
             onehot = bool(self.tuning.onehot_levels[l]) if self.tuning.onehot_levels else False
-            if self.backend == "ref":
+            if self.tuning.sparsity == "topk":
+                # the pruned executor replaces the backend's gather path
+                # wholesale (XLA top-k gather) — report what runs
+                gather = "xla-topk"
+            elif self.backend == "ref":
                 gather = "xla"
             elif self.backend == "cpu":
                 gather = "cpu-fused"
@@ -1572,6 +1778,17 @@ class MsdaPlan:
             fuse_note = (
                 f"  fused pyramid: 1 launch/direction  "
                 f"super_slab_rows={total}  shared block_q={self.block_q[0]}\n")
+        sparse_note = ""
+        if self.tuning.sparsity == "topk":
+            ls = self.local_spec
+            cells = ls.num_levels * ls.num_points
+            k = ls.resolved_sparsity_k()
+            sparse_note = (
+                f"  sparsity: topk k={k}/{cells} cells/query  "
+                f"corner gathers {4 * k}/query (dense {4 * cells})\n")
+        if self.tuning.query_order == "morton":
+            sparse_note += ("  query order: morton (plan-time Z-curve "
+                            "permutation, inverted on output)\n")
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
             f"sharding={self.sharding_mode}, "
@@ -1579,7 +1796,8 @@ class MsdaPlan:
             f"train={s.train}, dtype={s.dtype}, "
             f"accum={s.accum_dtype})\n"
             f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
-            f"levels={s.num_levels} S={s.total_pixels}\n" + shard_note + fuse_note +
+            f"levels={s.num_levels} S={s.total_pixels}\n"
+            + shard_note + fuse_note + sparse_note +
             f"  vmem_budget={s.vmem_budget / 2**20:.1f} MiB  "
             f"interpret={self.tuning.interpret}\n"
         )
@@ -1684,6 +1902,7 @@ def msda_plan(
     def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
         dts = _default_slab_dtypes(s)
         onehot = _onehot_levels(s)
+        sparsity, qorder = _resolve_sparsity(s), _resolve_query_order(s)
         if block_q is not None:
             if len(block_q) != s.num_levels:
                 raise ValueError(
@@ -1695,7 +1914,7 @@ def msda_plan(
             fused = (len(set(bq)) == 1
                      and _resolve_fuse_levels(s, dts, backend_name))
         elif tune == "autotune" and backend_name != "ref":
-            bq, dts, onehot, fused, source = _autotune_plan(
+            bq, dts, onehot, fused, sparsity, qorder, source = _autotune_plan(
                 s, backend_name, builder, interpret)
         else:
             fused = _resolve_fuse_levels(s, dts, backend_name)
@@ -1703,10 +1922,24 @@ def msda_plan(
                 s, fused=fused,
                 value_itemsize=(_fused_slab_itemsize(dts) if fused
                                 else None)), "heuristic"
+        if sparsity == "topk":
+            # the pruned executor is one XLA computation — it neither
+            # fuses pyramid launches nor routes through the MXU; the
+            # committed tuning must describe what actually runs
+            fused = False
         tuning = PlanTuning(block_q=bq, onehot_levels=onehot,
                             interpret=interpret, source=source,
-                            slab_dtypes=dts, fuse_levels=fused)
-        return builder(s, tuning), tuning
+                            slab_dtypes=dts, fuse_levels=fused,
+                            sparsity=sparsity, query_order=qorder)
+        # a pruned plan swaps in the top-k executor (the backend's dense
+        # executor is the fallback every other decision still describes);
+        # dense+identity is byte-identical to the pre-sparsity build
+        if sparsity == "topk":
+            exec_fn = _apply_sparsity_wrappers(None, s, sparsity, qorder)
+        else:
+            exec_fn = _apply_sparsity_wrappers(
+                builder(s, tuning), s, sparsity, qorder)
+        return exec_fn, tuning
 
     if mesh is None:
         exec_fn, tuning = build_local(spec)

@@ -16,6 +16,16 @@ lands on exactly the same pixel as in the unpadded level —
 contributed zero via ``padding_mode='zeros'`` now gather literal zeros
 from the pad region: same value.  ``tests/test_serving_runtime.py``
 checks bucketed outputs against the unbatched reference.
+
+That coordinate identity is EXACT only when every ``w/W`` (and ``h/H``)
+is a power of two (the two multiplies are then pure exponent shifts);
+at any other ratio ``(x * 0.75) * W`` rounds differently from
+``x * w`` by ulps and bucketed serving silently drifts from
+exact-geometry serving.  :func:`exact_bucket_ratios` is the admission
+gate: :class:`PyramidBatcher` routes non-pow2-ratio requests to a
+padding-free exact-geometry bucket (one plan per such geometry — the
+bounded-cache trade is explicit) unless the caller opts into the lossy
+padding with ``lossy_ok=True``.
 """
 from __future__ import annotations
 
@@ -70,6 +80,26 @@ def default_buckets(max_levels: Shapes,
             for h, w in max_levels)
         buckets.add(PyramidBucket(levels))
     return tuple(sorted(buckets, key=lambda b: b.tokens))
+
+
+def _pow2_ratio(n: int, d: int) -> bool:
+    """True iff d == n * 2**k for integer k >= 0 (exact fp rescale)."""
+    if n <= 0 or d % n:
+        return False
+    q = d // n
+    return (q & (q - 1)) == 0
+
+
+def exact_bucket_ratios(levels: Shapes, bucket_levels: Shapes) -> bool:
+    """True iff every valid-ratio rescale is bit-exact in float32.
+
+    ``(x * (w/W)) * W == x * w`` holds for all float32 ``x`` exactly when
+    ``W = w * 2**k`` — the ratio is then a pure exponent shift and
+    neither multiply rounds.  Checked per level on both axes.
+    """
+    return all(
+        _pow2_ratio(h, H) and _pow2_ratio(w, W)
+        for (h, w), (H, W) in zip(levels, bucket_levels))
 
 
 def bucket_for(levels: Shapes,
@@ -164,12 +194,21 @@ class PyramidBatcher:
     order is preserved: ``next_batch`` always includes the OLDEST
     pending request and only batches younger requests that share its
     (bucket, group_key), so no bucket can starve another.
+
+    ``lossy_ok=False`` (the default) is the exactness gate: a request
+    whose geometry→bucket ratio is not a power of two on every axis is
+    routed to a padding-free bucket of its own exact geometry instead of
+    being padded (the rescale would round — module docstring).  Pass
+    ``lossy_ok=True`` to accept the ulp-level drift and keep the bounded
+    bucket set for every request.
     """
 
-    def __init__(self, buckets: Sequence[PyramidBucket]):
+    def __init__(self, buckets: Sequence[PyramidBucket],
+                 lossy_ok: bool = False):
         if not buckets:
             raise ValueError("need at least one bucket")
         self.buckets = tuple(sorted(buckets, key=lambda b: b.tokens))
+        self.lossy_ok = bool(lossy_ok)
         self._queue: Deque[_Pending] = deque()
 
     def __len__(self) -> int:
@@ -183,6 +222,10 @@ class PyramidBatcher:
             raise ValueError(
                 f"pyramid {levels} fits no bucket "
                 f"(largest: {self.buckets[-1].levels})")
+        if not self.lossy_ok and not exact_bucket_ratios(levels, bucket.levels):
+            # non-pow2 ratio: the valid-ratio rescale would round, so
+            # serve this geometry unpadded (ratios all 1.0, no drift)
+            bucket = PyramidBucket(levels)
         self._queue.append(_Pending(np.asarray(feats), levels, bucket,
                                     group_key, payload))
         return bucket
@@ -195,7 +238,7 @@ class PyramidBatcher:
         take: List[_Pending] = []
         keep: List[_Pending] = []
         for p in self._queue:
-            if (len(take) < max_batch and p.bucket is head.bucket
+            if (len(take) < max_batch and p.bucket == head.bucket
                     and p.group_key == head.group_key):
                 take.append(p)
             else:

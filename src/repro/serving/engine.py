@@ -247,7 +247,7 @@ class ServeEngine:
                  dtype_policy: Optional[str] = None,
                  tune: Optional[str] = None,
                  buckets=None, metrics: Optional[ServeMetrics] = None,
-                 mesh=None):
+                 mesh=None, exact_buckets: bool = False):
         from repro.models import lm
 
         if cfg.family not in _LM_FAMILIES + ("vlm",):
@@ -274,7 +274,14 @@ class ServeEngine:
                 buckets = batcher_mod.default_buckets(
                     vc.levels, getattr(vc, "bucket_scales", (1.0,)))
             self.buckets = tuple(buckets)
-            self.batcher = batcher_mod.PyramidBatcher(self.buckets)
+            # serving's contract is the bounded, boot-compiled bucket set
+            # and zero request-time retraces, so the engine opts into the
+            # batcher's lossy (ulp-level rescale drift) padding for
+            # non-pow2 geometry->bucket ratios; exact_buckets=True flips
+            # the gate to exact-geometry buckets, paying one jit-fallback
+            # compile per novel geometry instead
+            self.batcher = batcher_mod.PyramidBatcher(
+                self.buckets, lossy_ok=not exact_buckets)
 
         # -- plans: restore from the store, or warm fresh + persist -------
         # The meta gate covers every axis that changes which SPECS the

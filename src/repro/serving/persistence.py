@@ -42,10 +42,15 @@ from repro.kernels import plan as plan_mod
 # round-tripped so a restored plan keeps the raced decisions with zero
 # timing runs.  v4 grew the hybrid batch x query sharding mode
 # ('batchquery', with its ``batch_tile`` in the sharding record) and the
-# elastic restore path (``on_mesh_mismatch="rerace"``).  v1-v3 stores
-# load unchanged; entries a NEWER schema writes still degrade per entry.
-PLAN_STORE_VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+# elastic restore path (``on_mesh_mismatch="rerace"``).  v5 grew the
+# sparsity axes: specs carry ``sparsity``/``sparsity_k``/``query_order``
+# and autotune winners the optional ``sparsity`` / ``query_order``
+# fields (pruned-vs-dense and Morton-vs-identity race decisions).
+# v1-v4 stores load unchanged; entries a NEWER schema writes still
+# degrade per entry, and unknown winner fields ride through the
+# parse/rewrite cycle untouched (``_winner_entry`` extras).
+PLAN_STORE_VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
 
 # stored sharding mode -> the planner's sharding= pin that reproduces it
 _MODE_TO_CHOICE = {"query2d": "2d", "batchquery": "hybrid"}
@@ -149,6 +154,13 @@ class PlanStore:
                 if plan.spec.onehot_small_levels and plan.tuning.onehot_levels:
                     winner["onehot_levels"] = [
                         bool(x) for x in plan.tuning.onehot_levels]
+                # the sparsity rungs' raced decisions persist only when
+                # the axis actually raced ('auto') — pinned/off specs
+                # keep their pre-sparsity entry byte-identical
+                if plan.spec.sparsity == "auto":
+                    winner["sparsity"] = plan.tuning.sparsity
+                if plan.spec.query_order == "auto":
+                    winner["query_order"] = plan.tuning.query_order
                 entry["winner"] = winner
             entries.append(entry)
         payload = {

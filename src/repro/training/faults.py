@@ -92,6 +92,16 @@ class FaultSchedule:
         (step 0 has no checkpoint to recover to yet), kinds cycle
         through a seeded permutation of ``kinds``.
         """
+        kinds = tuple(kinds)
+        if not kinds:
+            raise ValueError(
+                "FaultSchedule.generate needs at least one fault kind; "
+                f"pass a non-empty subset of {FAULT_KINDS}")
+        for k in kinds:
+            if k not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {k!r}; one of {FAULT_KINDS}")
+        if int(n_faults) < 0:
+            raise ValueError(f"n_faults must be >= 0, got {n_faults}")
         rng = np.random.default_rng(seed)
         hi = max(2, int(total_steps))
         n = min(int(n_faults), hi - 1)

@@ -11,7 +11,9 @@ registry).  CI shards the matrix via two env vars:
 * ``REPRO_CONFORMANCE_POLICIES`` — comma list restricting the dtype
   policies (``"float32"`` / ``"bfloat16"``),
 * ``REPRO_CONFORMANCE_FUSE`` — comma list restricting the
-  whole-pyramid fusion variants (``"off"`` / ``"on"``).
+  whole-pyramid fusion variants (``"off"`` / ``"on"``),
+* ``REPRO_CONFORMANCE_SPARSITY`` — comma list restricting the sparsity
+  variants (``"off"`` / ``"topk"``).
 
 Tolerance tiers (documented, per dtype policy):
 
@@ -25,9 +27,20 @@ Tolerance tiers (documented, per dtype policy):
   by the P*L-term reduction); accumulation error does NOT grow with Q
   because the accumulator stays fp32.
 
+Sparsity tier (``sparsity="topk"`` — lossy BY DESIGN): the pruned plan
+is conformance-checked against the *masked-renormalised* oracle
+(``msda_sparse.topk_mask_weights`` + ``msda_ref``), NOT the dense one,
+at the **float32** tolerances regardless of slab policy — the pruned
+executor computes in fp32 end to end.  ``sparsity="off"`` and
+``"auto"`` resolved without an autotune race must stay **bitwise**
+equal to the dense plan on every backend x policy (lossy modes are
+never picked untimed).
+
 Also here: finite-difference gradcheck of the backward path on small
 geometries, including sampling locations at and outside the [0, 1]
-border where bilinear corner weights zero out.
+border where bilinear corner weights zero out — plus the pruned plan
+with well-separated attention weights (so eps-perturbations cannot
+flip the top-k selection AD differentiates through frozen).
 """
 import os
 
@@ -69,6 +82,7 @@ POLICIES = _env_subset("REPRO_CONFORMANCE_POLICIES", ("float32", "bfloat16"))
 # fused single-launch plan and the per-level one ('on' is honoured only
 # by fusable backends — elsewhere it's a no-op, which this matrix proves)
 FUSES = _env_subset("REPRO_CONFORMANCE_FUSE", ("off", "on"))
+SPARSITIES = _env_subset("REPRO_CONFORMANCE_SPARSITY", ("off", "topk"))
 
 
 @pytest.fixture(autouse=True)
@@ -93,12 +107,13 @@ def _inputs(seed=0, levels=LEVELS, b=B, q=Q, h=H, d=D, p=P):
 
 
 def _spec(policy, *, train=False, levels=LEVELS, q=Q, h=H, d=D, p=P,
-          fuse="auto"):
+          fuse="auto", sparsity="off", sparsity_k=0, query_order="identity"):
     slab_dtype, accum_dtype = plan_mod.resolve_dtype_policy(policy)
     return MsdaSpec(spatial_shapes=levels, num_heads=h, head_dim=d,
                     num_points=p, num_queries=q, dtype="float32", train=train,
                     slab_dtype=slab_dtype, accum_dtype=accum_dtype,
-                    fuse_levels=fuse)
+                    fuse_levels=fuse, sparsity=sparsity,
+                    sparsity_k=sparsity_k, query_order=query_order)
 
 
 # --------------------------------------------------------------------------
@@ -232,6 +247,132 @@ def test_grad_zero_far_outside_border(backend):
     np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
     g_loc = jax.grad(lambda l: jnp.sum(plan(value, l, attn) ** 2))(loc)
     np.testing.assert_allclose(np.asarray(g_loc), 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# sparsity tier: dense fallback bitwise, pruned vs the masked oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.skipif("off" not in SPARSITIES, reason="sparsity=off lane off")
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sparsity_auto_unraced_is_bitwise_dense(backend, policy):
+    """``sparsity="auto"``/``query_order="auto"`` WITHOUT an autotune
+    race must resolve to the dense executor and identity order — lossy
+    modes are never picked untimed — and match the explicit-off plan
+    bitwise, forward and full VJP."""
+    value, loc, attn = _inputs()
+    base = msda_plan(_spec(policy, train=True), backend=backend)
+    auto = msda_plan(_spec(policy, train=True, sparsity="auto",
+                           query_order="auto"), backend=backend)
+    assert auto.tuning.sparsity == "dense"
+    assert auto.tuning.query_order == "identity"
+
+    def vjp(plan):
+        out = plan(value, loc, attn)
+        g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2),
+                     argnums=(0, 1, 2))(value, loc, attn)
+        return (out,) + g
+
+    for got, want, name in zip(vjp(auto), vjp(base),
+                               ("out", "gvalue", "gloc", "gattn")):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"{name} [{backend}/{policy}]")
+
+
+@pytest.mark.skipif("topk" not in SPARSITIES, reason="topk lane off")
+@pytest.mark.parametrize("policy", POLICIES)
+def test_pruned_matches_masked_renormalised_oracle(policy):
+    """The pruned plan vs ``msda_ref`` over top-k-masked renormalised
+    weights — fp32 tolerances regardless of slab policy (the pruned
+    executor computes in fp32; the slab policy is dense-path tuning)."""
+    from repro.kernels import msda_sparse
+
+    value, loc, attn = _inputs()
+    k = 4  # of L*P = 6 cells
+    plan = msda_plan(_spec(policy, train=True, sparsity="topk",
+                           sparsity_k=k), backend="cpu")
+    assert plan.tuning.sparsity == "topk"
+    masked = msda_sparse.topk_mask_weights(attn, k)
+    ref = msda_ref(value, LEVELS, loc, masked)
+    out = plan(value, loc, attn)
+    tol = FWD_TOL["float32"]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+    g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2),
+                 argnums=(0, 1, 2))(value, loc, attn)
+    gr = jax.grad(
+        lambda v, l, a: jnp.sum(
+            msda_ref(v, LEVELS, l, msda_sparse.topk_mask_weights(a, k)) ** 2),
+        argnums=(0, 1, 2))(value, loc, attn)
+    tol = VJP_TOL["float32"]
+    for got, want, name in zip(g, gr, ("value", "loc", "attn")):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=tol, rtol=tol, err_msg=f"grad_{name} [pruned/{policy}]")
+
+
+@pytest.mark.skipif("topk" not in SPARSITIES, reason="topk lane off")
+def test_gradcheck_finite_difference_pruned():
+    """FD gradcheck of the pruned plan.  Attention logits are spaced
+    >= 2.0 apart per query, so the kept/dropped weight gap (~0.76)
+    dwarfs the FD eps and no perturbation can flip the top-k selection
+    that AD differentiates through frozen.  Gradients w.r.t. pruned-out
+    cells must be zero on both sides; k=2 of 3 keeps the renormalised
+    weights a genuine function of attn (k=1 would make them constant)."""
+    levels = ((4, 5),)
+    b, q, h, d, p = 1, 4, 1, 4, 3  # L*P = 3 cells, keep k=2
+    value, _, _ = _inputs(seed=3, levels=levels, b=b, q=q, h=h, d=d, p=p)
+    coords = np.resize(np.asarray(_BORDER_COORDS, np.float32), q * p * 2)
+    loc = jnp.asarray(coords.reshape(b, q, h, 1, p, 2))
+    # rotate which cells win so both kept/dropped index paths vary; the
+    # kept-vs-dropped weight gap (softmax([3,1.5,0]) -> 0.175 vs 0.039)
+    # stays an order of magnitude above the FD eps
+    logits = np.asarray([[3.0, 1.5, 0.0], [0.0, 3.0, 1.5],
+                         [1.5, 0.0, 3.0], [3.0, 0.0, 1.5]],
+                        np.float32).reshape(b, q, h, 1, p)
+    attn = jax.nn.softmax(jnp.asarray(logits).reshape(b, q, h, -1), axis=-1
+                          ).reshape(b, q, h, 1, p)
+    gout = jax.random.normal(jax.random.PRNGKey(7), (b, q, h * d), jnp.float32)
+
+    plan = msda_plan(_spec("float32", train=True, levels=levels, q=q, h=h,
+                           d=d, p=p, sparsity="topk", sparsity_k=2),
+                     backend="cpu")
+    f = jax.jit(lambda v, l, a: jnp.vdot(plan(v, l, a), gout))
+    grads = jax.jit(jax.grad(f, argnums=(0, 1, 2)))(value, loc, attn)
+
+    def fd(operand_idx, flat_idx, eps):
+        base = [np.asarray(value, np.float64), np.asarray(loc, np.float64),
+                np.asarray(attn, np.float64)]
+
+        def at(delta):
+            pert = [x.copy() for x in base]
+            pert[operand_idx].flat[flat_idx] += delta
+            return float(f(*[jnp.asarray(x, jnp.float32) for x in pert]))
+
+        return (at(eps) - at(-eps)) / (2 * eps)
+
+    g_loc = np.asarray(grads[1], np.float64)
+    for i in range(g_loc.size):
+        np.testing.assert_allclose(
+            g_loc.flat[i], fd(1, i, eps=1e-3), atol=5e-3, rtol=5e-2,
+            err_msg=f"grad_loc[{i}] (coord={np.asarray(loc).flat[i]:.2f})")
+
+    g_attn = np.asarray(grads[2], np.float64)
+    for i in range(g_attn.size):
+        np.testing.assert_allclose(
+            g_attn.flat[i], fd(2, i, eps=1e-2), atol=2e-3, rtol=2e-2,
+            err_msg=f"grad_attn[{i}]")
+
+    g_val = np.asarray(grads[0], np.float64)
+    for i in range(0, g_val.size, max(g_val.size // 7, 1)):
+        np.testing.assert_allclose(g_val.flat[i], fd(0, i, eps=1e-2),
+                                   atol=2e-3, rtol=2e-2,
+                                   err_msg=f"grad_value[{i}]")
 
 
 # --------------------------------------------------------------------------

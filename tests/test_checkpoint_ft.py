@@ -252,6 +252,23 @@ def test_fault_schedule_seeded_is_reproducible():
     assert c.describe() != a.describe()  # the seed is the schedule
 
 
+def test_fault_schedule_generate_validates_inputs():
+    """Regression: ``generate(kinds=())`` used to reach the rng draw and
+    die with ZeroDivisionError; bad inputs must fail up front with a
+    ValueError that names the legal kinds."""
+    with pytest.raises(ValueError, match="at least one fault kind"):
+        training.FaultSchedule.generate(0, 40, n_faults=2, kinds=())
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        training.FaultSchedule.generate(0, 40, n_faults=2,
+                                        kinds=("host_loss", "melted"))
+    with pytest.raises(ValueError, match="n_faults"):
+        training.FaultSchedule.generate(0, 40, n_faults=-1)
+    # a kinds subset is still a legal (and now validated) call
+    fs = training.FaultSchedule.generate(3, 40, n_faults=2,
+                                         kinds=("preempt",))
+    assert all(e.kind == "preempt" for e in fs.events.values())
+
+
 def test_harness_kill_and_resume_is_bitwise(tmp_path):
     """Stop the loop at step 5; a FRESH harness on the same ckpt dir
     must continue to a loss trajectory bitwise equal to an

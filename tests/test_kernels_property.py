@@ -203,13 +203,22 @@ cache_entries = st.dictionaries(
             },
             # entries grew OPTIONAL fields: "sharding"/"grad_reduce"
             # (mesh-keyed race winners), "fuse_levels" (whole-pyramid
-            # fusion race) and "onehot_levels" (MXU-routing race) — any
-            # subset must keep parsing, pre-existing entries included
+            # fusion race), "onehot_levels" (MXU-routing race) and
+            # "sparsity"/"query_order" (pruning/Morton races) — any
+            # subset must keep parsing, pre-existing entries included.
+            # Keys NO build knows ("future_field"...) must ride through
+            # parse -> re-persist untouched (forward compat)
             optional={
                 "sharding": st.sampled_from(["1d", "2d"]),
                 "fuse_levels": st.booleans(),
                 "onehot_levels": st.lists(st.booleans(), min_size=2, max_size=2),
                 "grad_reduce": st.sampled_from(["ring", "psum"]),
+                "sparsity": st.sampled_from(["dense", "topk"]),
+                "query_order": st.sampled_from(["identity", "morton"]),
+                "future_field": st.one_of(
+                    st.integers(-10, 10), st.text(max_size=8),
+                    st.lists(st.integers(-10, 10), max_size=3)),
+                "vendor.note": st.text(max_size=8),
             },
         ),
     ),
@@ -247,7 +256,13 @@ def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entr
                 oh = hit.get("onehot_levels")
                 assert parsed["onehot_levels"] == (
                     tuple(oh) if oh is not None else None)
-                # and the entry shape round-trips through the writer
+                assert parsed["sparsity"] == hit.get("sparsity")
+                assert parsed["query_order"] == hit.get("query_order")
+                assert parsed["extras"] == {
+                    k: hit[k] for k in ("future_field", "vendor.note")
+                    if k in hit}
+                # and the entry shape round-trips through the writer,
+                # unknown keys included
                 assert plan_mod._parse_cache_entry(
                     plan_mod._winner_entry(parsed), spec) == parsed
             elif len(hit) == spec.num_levels:  # legacy: level count must match

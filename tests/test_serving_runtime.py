@@ -330,6 +330,80 @@ def test_batcher_groups_same_bucket_and_key():
     assert q.next_batch(4).items == ["r3"] and len(q) == 0
 
 
+def test_batcher_exactness_gate_non_pow2_ratio():
+    """6->8 and 3->4 are non-pow2 ratios: the gate must route those
+    requests to a padding-free exact-geometry bucket (and equal exact
+    buckets must still batch together), while lossy_ok keeps the old
+    pad-into-the-ladder behaviour."""
+    buckets = (bm.PyramidBucket(((8, 8), (4, 4))),)
+    levels = ((6, 6), (3, 3))
+    assert not bm.exact_bucket_ratios(levels, buckets[0].levels)
+    assert bm.exact_bucket_ratios(((4, 4), (2, 2)), buckets[0].levels)
+    assert bm.exact_bucket_ratios(((8, 8), (4, 4)), buckets[0].levels)
+
+    S = sum(h * w for h, w in levels)
+    rng = np.random.default_rng(0)
+    f0 = rng.standard_normal((S, 3)).astype(np.float32)
+    f1 = rng.standard_normal((S, 3)).astype(np.float32)
+
+    q = bm.PyramidBatcher(buckets)
+    assert q.submit(f0, levels, "r0").levels == levels  # rerouted
+    assert q.submit(f1, levels, "r1").levels == levels
+    batch = q.next_batch(4)
+    # distinct-but-equal exact buckets batch together (dataclass ==)
+    assert batch.items == ["r0", "r1"]
+    assert batch.bucket.levels == levels and batch.padding_frac == 0.0
+    np.testing.assert_array_equal(batch.ratios, 1.0)
+    np.testing.assert_array_equal(batch.feats, np.stack([f0, f1]))
+
+    lossy = bm.PyramidBatcher(buckets, lossy_ok=True)
+    assert lossy.submit(f0, levels, "r0").levels == buckets[0].levels
+
+
+def test_non_pow2_bucketed_vs_unbatched():
+    """At a non-pow2 ratio the valid-ratio rescale rounds: the gated
+    (exact-geometry) path is bitwise-identical to unbatched serving,
+    the lossy padded path only matches within tolerance."""
+    levels = ((6, 6), (3, 3))
+    bucket = ((8, 8), (4, 4))
+    B, Q, H, D, P = 2, 9, 2, 8, 3
+    L = len(levels)
+    S = sum(h * w for h, w in levels)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    loc = jax.random.uniform(ks[1], (B, Q, H, L, P, 2), minval=-0.1, maxval=1.1)
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (B, Q, H, L, P)).reshape(B, Q, H, -1)
+    ).reshape(B, Q, H, L, P)
+
+    ref_out = msda_ref(value, levels, loc, attn)
+
+    # gated path: the batcher hands back the exact geometry untouched,
+    # so the op sees identical operands -> identical bits
+    q = bm.PyramidBatcher((bm.PyramidBucket(bucket),))
+    q.submit(np.asarray(value[0].reshape(S, H * D)), levels, "r")
+    batch = q.next_batch(1)
+    np.testing.assert_array_equal(batch.ratios, 1.0)
+    gated = msda_ref(value, batch.bucket.levels,
+                     bm.scale_locations(loc, jnp.asarray(batch.ratios[0])),
+                     attn)
+    np.testing.assert_array_equal(np.asarray(gated), np.asarray(ref_out))
+
+    # lossy path (what submit did before the gate): pad + rescale — the
+    # 0.75 ratio is not an exponent shift, so only allclose holds
+    ratios = bm.valid_ratios(levels, bucket)
+    vp = np.stack([
+        np.concatenate([
+            bm.pad_pyramid(np.asarray(value[b, :, h]), levels, bucket)[None]
+            for h in range(H)])
+        for b in range(B)])
+    vp = jnp.asarray(np.transpose(vp, (0, 2, 1, 3)))
+    pad_out = msda_ref(vp, bucket, jnp.asarray(
+        bm.scale_locations(np.asarray(loc), ratios)), attn)
+    np.testing.assert_allclose(np.asarray(pad_out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)
+
+
 # --------------------------------------------------------------------------
 # engine scheduling + metrics
 # --------------------------------------------------------------------------
