@@ -292,8 +292,8 @@ def fused_vs_per_level(out_path=None):
     the repo root (CI uploads it per commit) and prints the CSV rows.
     """
     import dataclasses
-    import json
-    import os
+
+    from repro.obs import bench as obs_bench
 
     levels = ((16, 16), (8, 8), (4, 4))
     q, b, h = 64, 1, 2
@@ -336,18 +336,22 @@ def fused_vs_per_level(out_path=None):
         results[f"{tag}.fused_speedup_x"] = t["off"] / t["on"]
 
     if out_path is None:
-        out_path = os.path.join(
-            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-            "BENCH_kernels.json")
-    payload = {
-        "bench": "fused_vs_per_level",
-        "geometry": {"levels": [list(hw) for hw in levels], "Q": q, "B": b,
-                     "H": h, "D": D, "P": P},
-        "note": "interpret-mode wall time; structural counters transfer",
-        "results": results,
-    }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+        out_path = obs_bench.bench_path("kernels")
+    obs_bench.write_bench(
+        out_path,
+        bench="fused_vs_per_level",
+        config={"levels": [list(hw) for hw in levels], "Q": q, "B": b,
+                "H": h, "D": D, "P": P},
+        note="interpret-mode wall time; structural counters transfer",
+        results=results,
+        gate=[
+            # launch counts are geometry-determined: any increase regresses
+            obs_bench.gate_rule("*.launches_per_call", "lower", 0.0),
+            # speedup ratios are same-machine relative -> moderately stable
+            obs_bench.gate_rule("*.fused_speedup_x", "higher", 0.5),
+            # raw interpret-mode timings vary across runner hardware
+            obs_bench.gate_rule("*.us", "lower", 4.0),
+        ])
     print(f"# wrote {out_path}")
     return results
 
@@ -368,10 +372,9 @@ def sparsity_ablation(out_path=None):
     it per commit) and prints the CSV rows.
     """
     import dataclasses
-    import json
-    import os
 
     from repro.kernels import msda_sparse
+    from repro.obs import bench as obs_bench
 
     levels = ((16, 16), (8, 8), (4, 4))
     q, b, h = 64, 1, 2
@@ -425,18 +428,21 @@ def sparsity_ablation(out_path=None):
             f"{counts['gather_reduction']:.2%}_fewer_corner_gathers")
 
     if out_path is None:
-        out_path = os.path.join(
-            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-            "BENCH_sparsity.json")
-    payload = {
-        "bench": "sparsity_ablation",
-        "geometry": {"levels": [list(hw) for hw in levels], "Q": q, "B": b,
-                     "H": h, "D": D, "P": P, "cells": cells},
-        "note": "CPU wall time is trend only; gather-count reduction transfers",
-        "results": results,
-    }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+        out_path = obs_bench.bench_path("sparsity")
+    obs_bench.write_bench(
+        out_path,
+        bench="sparsity_ablation",
+        config={"levels": [list(hw) for hw in levels], "Q": q, "B": b,
+                "H": h, "D": D, "P": P, "cells": cells},
+        note="CPU wall time is trend only; gather-count reduction transfers",
+        results=results,
+        gate=[
+            # gather counts / reduction are geometry-determined facts
+            obs_bench.gate_rule("*.corner_gathers_per_query", "lower", 0.0),
+            obs_bench.gate_rule("*.gather_reduction", "higher", 0.0),
+            obs_bench.gate_rule("*.topk_speedup_x", "higher", 0.5),
+            obs_bench.gate_rule("*.us", "lower", 4.0),
+        ])
     print(f"# wrote {out_path}")
     return results
 

@@ -66,6 +66,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import registry
+from repro.obs import registry as _obs
+from repro.obs import trace as _obs_trace
 
 Shapes = Tuple[Tuple[int, int], ...]
 
@@ -517,17 +519,51 @@ def _onehot_levels(spec: MsdaSpec) -> Tuple[bool, ...]:
 # sharding / grad_reduce races — the elastic restore path asserts a
 # mesh-resized restart re-races EXACTLY the mesh-keyed axes
 # (raced_local == 0) against this split.
-_AUTOTUNE_STATS = {"raced": 0, "raced_local": 0, "raced_mesh": 0,
-                   "cache_hits": 0, "seeded": 0}
+_AUTOTUNE_STATS = {
+    "raced": _obs.counter("msda.autotune.raced",
+                          help="autotune races actually timed"),
+    "raced_local": _obs.counter("msda.autotune.raced_local",
+                                help="per-shard block/dtype/fuse races"),
+    "raced_mesh": _obs.counter("msda.autotune.raced_mesh",
+                               help="mesh-keyed sharding/grad_reduce races"),
+    "cache_hits": _obs.counter("msda.winner_cache.hits",
+                               help="on-disk autotune winner-cache hits"),
+    "seeded": _obs.counter("msda.winner_cache.seeded",
+                           help="winners installed without racing"),
+}
+# the winner-cache flip side: a consulted entry that was absent or
+# unparseable (-> a timing race follows).  Not part of the historical
+# autotune_stats() shape; read it via execution_telemetry().
+_WINNER_CACHE_MISSES = _obs.counter(
+    "msda.winner_cache.misses",
+    help="on-disk winner lookups that found no usable entry")
+
+# plan-execution telemetry: every MsdaPlan.__call__ whose Python body
+# runs (eagerly, or once per jit trace / AOT boot compile) attributes
+# its STATIC per-call launch schedule here — a zero-retrace serving
+# steady state therefore adds zero, which is the invariant the smoke
+# job audits.  Train plans attribute fwd+bwd together (the backward is
+# wired into the same custom-VJP call).
+_PLAN_CALLS = _obs.counter(
+    "msda.plan_calls", help="MsdaPlan invocations (eager or traced)")
+_LAUNCHES = _obs.counter(
+    "msda.launches",
+    help="Pallas launches attributed per direction "
+         "(static schedule x plan invocations)")
+_VMEM_GAUGE = _obs.gauge(
+    "msda.vmem_frac",
+    help="per-level VMEM occupancy of the most recently built plan "
+         "(kind=committed|predicted)")
 
 
 def autotune_stats() -> Dict[str, int]:
-    return dict(_AUTOTUNE_STATS)
+    return {k: int(c.value()) for k, c in _AUTOTUNE_STATS.items()}
 
 
 def reset_autotune_stats() -> None:
-    for k in _AUTOTUNE_STATS:
-        _AUTOTUNE_STATS[k] = 0
+    for c in _AUTOTUNE_STATS.values():
+        c.reset()
+    _WINNER_CACHE_MISSES.reset()
 
 
 def autotune_cache_path() -> str:
@@ -799,7 +835,7 @@ def seed_autotune_winners(entries, device_kind: Optional[str] = None) -> int:
         n += 1
     if n:
         _store_autotune_cache(disk)
-        _AUTOTUNE_STATS["seeded"] += n
+        _AUTOTUNE_STATS["seeded"].inc(n)
     return n
 
 
@@ -809,6 +845,7 @@ def seed_autotune_winner(spec: MsdaSpec, backend: str, winner: Any,
     return seed_autotune_winners([(spec, backend, winner)], device_kind) == 1
 
 
+@_obs_trace.traced_span("autotune.race", level=3)
 def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
 ) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, str,
@@ -864,8 +901,10 @@ def _autotune_plan(
     disk = _load_autotune_cache()
     pin_fused = fusable and spec.fuse_levels == "on"
     parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is None:
+        _WINNER_CACHE_MISSES.inc()
     if parsed is not None:
-        _AUTOTUNE_STATS["cache_hits"] += 1
+        _AUTOTUNE_STATS["cache_hits"].inc()
         oh = parsed["onehot_levels"] if parsed["onehot_levels"] is not None else onehot
         # entries without the field (hand-authored / pre-fusion schema)
         # must not override an explicit 'on' pin
@@ -912,8 +951,8 @@ def _autotune_plan(
                 _resolve_sparsity(spec), _resolve_query_order(spec),
                 "autotune")
 
-    _AUTOTUNE_STATS["raced"] += 1
-    _AUTOTUNE_STATS["raced_local"] += 1
+    _AUTOTUNE_STATS["raced"].inc()
+    _AUTOTUNE_STATS["raced_local"].inc()
     args = _autotune_inputs(spec)
     jit_cache: Dict[tuple, Callable] = {}
 
@@ -1107,6 +1146,7 @@ def _autotune_plan(
     return best, best_dts, best_onehot, best_fused, best_sparsity, best_qorder, "autotune"
 
 
+@_obs_trace.traced_span("autotune.race_sharding", level=3)
 def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
                        query_parallel: bool, grad_reduce: str,
                        build_local: Callable):
@@ -1155,12 +1195,14 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
         spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is None or parsed["sharding"] not in ("1d", "2d", "hybrid"):
+        _WINNER_CACHE_MISSES.inc()
     if parsed is not None and parsed["sharding"] in ("1d", "2d", "hybrid"):
-        _AUTOTUNE_STATS["cache_hits"] += 1
+        _AUTOTUNE_STATS["cache_hits"].inc()
         return parsed["sharding"], None
 
-    _AUTOTUNE_STATS["raced"] += 1
-    _AUTOTUNE_STATS["raced_mesh"] += 1
+    _AUTOTUNE_STATS["raced"].inc()
+    _AUTOTUNE_STATS["raced_mesh"].inc()
     # batch must divide dp for the 1D candidate (dp shards batch there)
     batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
     if any(n == "hybrid" for n, _ in cands):
@@ -1221,6 +1263,7 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
     return winner, built[winner]
 
 
+@_obs_trace.traced_span("autotune.race_grad_reduce", level=3)
 def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
                           query_parallel: bool, mode: str, dp, tp,
                           tp_size: int, inner_exec: Callable,
@@ -1247,14 +1290,16 @@ def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
         spec, backend_name, mesh_suffix=mesh_winner_suffix(mesh, query_parallel))
     disk = _load_autotune_cache()
     parsed = _parse_cache_entry(disk.get(key), spec)
+    if parsed is None or parsed["grad_reduce"] not in ("ring", "psum"):
+        _WINNER_CACHE_MISSES.inc()
     if parsed is not None and parsed["grad_reduce"] in ("ring", "psum"):
-        _AUTOTUNE_STATS["cache_hits"] += 1
+        _AUTOTUNE_STATS["cache_hits"].inc()
         return parsed["grad_reduce"], None
 
     from repro.sharding import rules
 
-    _AUTOTUNE_STATS["raced"] += 1
-    _AUTOTUNE_STATS["raced_mesh"] += 1
+    _AUTOTUNE_STATS["raced"].inc()
+    _AUTOTUNE_STATS["raced_mesh"].inc()
     batch = rules.axis_size(rules.resolve_axis("dp", mesh), mesh)
     if mode == "batchquery":
         bt = HYBRID_BATCH_TILE
@@ -1610,6 +1655,12 @@ class MsdaPlan:
         if sampling_locations.shape[1] != s.num_queries:
             raise ValueError(
                 f"loc Q={sampling_locations.shape[1]} != spec Q={s.num_queries}")
+        lp = self.launches_per_call()
+        _PLAN_CALLS.inc(backend=self.backend)
+        if lp["fwd"]:
+            _LAUNCHES.inc(lp["fwd"], direction="fwd")
+        if lp["bwd"]:
+            _LAUNCHES.inc(lp["bwd"], direction="bwd")
         return self._exec(value, sampling_locations, attention_weights)
 
     apply = __call__
@@ -1617,6 +1668,20 @@ class MsdaPlan:
     @property
     def block_q(self) -> Tuple[int, ...]:
         return self.tuning.block_q
+
+    def launches_per_call(self) -> Dict[str, int]:
+        """Static Pallas launch schedule for one plan call, by direction.
+
+        Fused plans launch once per direction over the packed super-slab;
+        per-level plans launch once per level.  The ref/cpu backends and
+        the top-k pruned executor run as plain XLA — zero Pallas
+        launches.  ``bwd`` counts the custom-VJP backward a ``train``
+        plan carries (0 for inference plans).
+        """
+        if self.backend != "pallas" or self.tuning.sparsity == "topk":
+            return {"fwd": 0, "bwd": 0}
+        per_dir = 1 if self.fused else self.local_spec.num_levels
+        return {"fwd": per_dir, "bwd": per_dir if self.spec.train else 0}
 
     # -- inspectability ---------------------------------------------------
     @property
@@ -1643,6 +1708,17 @@ class MsdaPlan:
                 s.spatial_shapes, s.head_dim,
                 slab_itemsize=_fused_slab_itemsize(dts), train=s.train,
                 accum_itemsize=s.accum_itemsize)
+        # what the occupancy model would have picked on its own, so the
+        # report carries predicted-vs-committed occupancy per level (a
+        # raced/overridden block plan can land far from the model)
+        if fused:
+            heur_bq = _heuristic_block_q(
+                s, fused=True, value_itemsize=_fused_slab_itemsize(dts))
+        else:
+            resolved = tuple(
+                dts[l] if l < len(dts) and dts[l] else s.resolved_slab_dtype()
+                for l in range(s.num_levels))
+            heur_bq = _blocks_for_slab_dtypes(s, resolved)
         rows = []
         for l, hw in enumerate(s.spatial_shapes):
             slab = ops.slab_rows(hw)
@@ -1666,6 +1742,8 @@ class MsdaPlan:
                 levels=s.num_levels if fused else 1)
             resident = fused_resident if fused else slab_bytes
             occupancy = (resident + bq * per_q) / max(s.vmem_budget, 1)
+            pred_bq = heur_bq[l] if l < len(heur_bq) else bq
+            predicted = (resident + pred_bq * per_q) / max(s.vmem_budget, 1)
             onehot = bool(self.tuning.onehot_levels[l]) if self.tuning.onehot_levels else False
             if self.tuning.sparsity == "topk":
                 # the pruned executor replaces the backend's gather path
@@ -1689,8 +1767,12 @@ class MsdaPlan:
                 "q_steps": -(-_round_up(s.num_queries, max(bq, 1)) // max(bq, 1)),
                 "gather": gather,
                 "vmem_frac": occupancy,
+                "block_q_predicted": pred_bq,
+                "vmem_frac_predicted": predicted,
                 "fused": fused,
             })
+            _VMEM_GAUGE.set(occupancy, level=l, kind="committed")
+            _VMEM_GAUGE.set(predicted, level=l, kind="predicted")
         return rows
 
     def sharding_report(self) -> Dict[str, Any]:
@@ -1789,6 +1871,11 @@ class MsdaPlan:
         if self.tuning.query_order == "morton":
             sparse_note += ("  query order: morton (plan-time Z-curve "
                             "permutation, inverted on output)\n")
+        lp = self.launches_per_call()
+        launch_note = (f"  launches/call: fwd={lp['fwd']} bwd={lp['bwd']}"
+                       + ("" if self.backend == "pallas"
+                          else f"  (no pallas kernels on '{self.backend}')")
+                       + "\n")
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
             f"sharding={self.sharding_mode}, "
@@ -1797,12 +1884,12 @@ class MsdaPlan:
             f"accum={s.accum_dtype})\n"
             f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
             f"levels={s.num_levels} S={s.total_pixels}\n"
-            + shard_note + fuse_note + sparse_note +
+            + shard_note + fuse_note + sparse_note + launch_note +
             f"  vmem_budget={s.vmem_budget / 2**20:.1f} MiB  "
             f"interpret={self.tuning.interpret}\n"
         )
         lines = [head,
-                 "  lvl  hw         slab_rows  slab_KiB   slab_dt   block_q  steps  gather      vmem%"]
+                 "  lvl  hw         slab_rows  slab_KiB   slab_dt   block_q  steps  gather      vmem%  pred%"]
         for r in self.level_report():
             hw = "%dx%d" % r["hw"]
             lines.append(
@@ -1810,7 +1897,7 @@ class MsdaPlan:
                 f"{r['slab_rows']:<10d} {r['slab_bytes'] / 1024:<10.1f} "
                 f"{r['slab_dtype']:<9s} "
                 f"{r['block_q']:<8d} {r['q_steps']:<6d} {r['gather']:<11s} "
-                f"{100 * r['vmem_frac']:.1f}")
+                f"{100 * r['vmem_frac']:<6.1f} {100 * r['vmem_frac_predicted']:.1f}")
         return "\n".join(lines)
 
 
@@ -1821,7 +1908,12 @@ class MsdaPlan:
 
 _PLAN_CACHE: "OrderedDict[tuple, MsdaPlan]" = OrderedDict()
 _PLAN_CACHE_MAX = 128
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {
+    "hits": _obs.counter("msda.plan_cache.hits",
+                         help="in-process plan-cache hits"),
+    "misses": _obs.counter("msda.plan_cache.misses",
+                           help="in-process plan-cache misses (plan builds)"),
+}
 
 
 def configure_plan_cache(maxsize: int) -> None:
@@ -1833,14 +1925,56 @@ def configure_plan_cache(maxsize: int) -> None:
 
 
 def clear_plans() -> None:
-    """Drop every cached plan (and its compiled op closures)."""
+    """Drop every cached plan (and its compiled op closures).
+
+    Hit/miss counters survive the clear (they are monotonic process
+    counters, so an engine shutdown does not erase the metrics export);
+    zero them explicitly with ``obs.reset("msda.plan_cache")``.
+    """
     _PLAN_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
 def plan_cache_info() -> Dict[str, int]:
-    return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
+    return {"hits": int(_CACHE_STATS["hits"].value()),
+            "misses": int(_CACHE_STATS["misses"].value()),
             "size": len(_PLAN_CACHE), "maxsize": _PLAN_CACHE_MAX}
+
+
+def _hit_rate(hits: int, misses: int) -> Optional[float]:
+    total = hits + misses
+    return (hits / total) if total else None
+
+
+def execution_telemetry() -> Dict[str, Any]:
+    """Process-wide plan-execution counters, registry-backed.
+
+    The block the serve/train snapshots embed: plan-cache and
+    winner-cache hit rates plus Pallas launches per direction.  Launch
+    counts are *static-schedule x traced-call* attributions — each
+    :meth:`MsdaPlan.__call__` whose Python body runs (eagerly, or once
+    per jit trace / AOT compile) adds its plan's per-call launch
+    schedule, so a zero-retrace serving steady state adds zero.
+    """
+    pc = plan_cache_info()
+    a = autotune_stats()
+    wc_misses = int(_WINNER_CACHE_MISSES.value())
+    return {
+        "plan_cache": {
+            "hits": pc["hits"], "misses": pc["misses"],
+            "size": pc["size"],
+            "hit_rate": _hit_rate(pc["hits"], pc["misses"]),
+        },
+        "winner_cache": {
+            "hits": a["cache_hits"], "misses": wc_misses,
+            "seeded": a["seeded"],
+            "hit_rate": _hit_rate(a["cache_hits"], wc_misses),
+        },
+        "launches": {
+            "fwd": int(_LAUNCHES.value(direction="fwd")),
+            "bwd": int(_LAUNCHES.value(direction="bwd")),
+            "plan_calls": int(_PLAN_CALLS.total()),
+        },
+    }
 
 
 def msda_plan(
@@ -1892,14 +2026,14 @@ def msda_plan(
            sharding, grad_reduce)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
-        _CACHE_STATS["hits"] += 1
+        _CACHE_STATS["hits"].inc()
         _PLAN_CACHE.move_to_end(key)
         return cached
-    _CACHE_STATS["misses"] += 1
+    _CACHE_STATS["misses"].inc()
 
     builder = registry.get_backend(backend_name)
 
-    def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
+    def _build_local_impl(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
         dts = _default_slab_dtypes(s)
         onehot = _onehot_levels(s)
         sparsity, qorder = _resolve_sparsity(s), _resolve_query_order(s)
@@ -1940,6 +2074,16 @@ def msda_plan(
             exec_fn = _apply_sparsity_wrappers(
                 builder(s, tuning), s, sparsity, qorder)
         return exec_fn, tuning
+
+    def build_local(s: MsdaSpec) -> Tuple[Callable, PlanTuning]:
+        # the span wraps ONE local build (sharded plans may build both
+        # race candidates); autotune races nest inside as children
+        with _obs_trace.span("plan.build", level=2, backend=backend_name,
+                             q=s.num_queries, levels=s.num_levels,
+                             train=s.train, tune=tune) as sp:
+            exec_fn, tuning = _build_local_impl(s)
+            sp["source"] = tuning.source
+            return exec_fn, tuning
 
     if mesh is None:
         exec_fn, tuning = build_local(spec)

@@ -93,7 +93,13 @@ def serving_smoke(arch: str, store_path: str, compile_cache_dir: str,
         "new_xla_cache_entries":
             persistence.compilation_cache_entries(compile_cache_dir) - cache0,
         "completed": [len(r.out) for r in reqs],
-        "metrics": eng.metrics.snapshot(),
+        # aot probe counters ride inside the metrics dict so zero-retrace
+        # is auditable from the uploaded artifact, not just the asserts
+        "metrics": {**eng.metrics.snapshot(),
+                    "aot": {"traces": probe.traces,
+                            "compiles": probe.compiles,
+                            "aot_calls": probe.aot_calls,
+                            "boot": aot.stats()}},
     }
     print(json.dumps(summary, indent=1))
     assert all(len(r.out) == r.max_new for r in reqs), "requests incomplete"
@@ -144,14 +150,36 @@ def main() -> None:
                          "the sharding modes — see docs/sharding.md")
     ap.add_argument("--serving-smoke", action="store_true",
                     help="self-asserting double-boot CI smoke (see docstring)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the obs metrics registry at exit "
+                         "(.json -> JSON, else Prometheus text)")
+    ap.add_argument("--trace-out", default=None,
+                    help="stream obs spans to this JSONL file")
+    ap.add_argument("--trace-level", type=int, default=3,
+                    help="span verbosity exported to --trace-out (1-4)")
     args = ap.parse_args()
+
+    from repro import obs
+
+    if args.trace_out:
+        obs.enable_trace(args.trace_out, level=args.trace_level)
+
+    def _export() -> None:
+        if args.metrics_out:
+            print(f"[serve] metrics -> {obs.write_metrics(args.metrics_out)}")
+        if args.trace_out:
+            obs.disable_trace()
+            print(f"[serve] trace -> {args.trace_out}")
 
     if args.serving_smoke:
         if not (args.store and args.compile_cache):
             ap.error("--serving-smoke needs --store and --compile-cache")
-        serving_smoke(args.arch or "phi-3-vision-4.2b", args.store,
-                      args.compile_cache,
-                      slots=args.slots or 2, capacity=args.capacity or 64)
+        try:
+            serving_smoke(args.arch or "phi-3-vision-4.2b", args.store,
+                          args.compile_cache,
+                          slots=args.slots or 2, capacity=args.capacity or 64)
+        finally:
+            _export()
         return
 
     if not args.arch:
@@ -198,6 +226,7 @@ def main() -> None:
     for req in reqs:
         print(f"[serve] request {req.rid}: {len(req.out)} tokens -> {req.out}")
     print(eng.metrics.format())
+    _export()
 
 
 if __name__ == "__main__":

@@ -151,10 +151,34 @@ def main() -> None:
                     help="write BENCH_train.json telemetry here")
     ap.add_argument("--train-smoke", action="store_true",
                     help="self-asserting CI smoke (see module docstring)")
+    ap.add_argument("--trace-out", default=None,
+                    help="stream obs spans (plan builds, autotune races, "
+                         "recoveries, per-step timings) to this JSONL file")
+    ap.add_argument("--trace-level", type=int, default=3,
+                    help="span verbosity exported to --trace-out (1-4; "
+                         "4 adds per-step spans)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the obs metrics registry at exit "
+                         "(.json -> JSON, else Prometheus text)")
     args = ap.parse_args()
 
+    from repro import obs
+
+    if args.trace_out:
+        obs.enable_trace(args.trace_out, level=args.trace_level)
+
+    def _export() -> None:
+        if args.metrics_out:
+            print(f"[train] metrics -> {obs.write_metrics(args.metrics_out)}")
+        if args.trace_out:
+            obs.disable_trace()
+            print(f"[train] trace -> {args.trace_out}")
+
     if args.train_smoke:
-        train_smoke(args)
+        try:
+            train_smoke(args)
+        finally:
+            _export()
         return
 
     cfg = get_config(args.arch)
@@ -189,6 +213,7 @@ def main() -> None:
     if args.bench_out:
         path = recorder.write(args.bench_out)
         print(f"[train] wrote telemetry -> {path}")
+    _export()
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,53 @@
+"""Process-wide observability: metrics registry, structured spans, exporters.
+
+One substrate for every instrumenter in the repo.  The four historical
+counters (``serving/metrics.py``, ``training/telemetry.py``,
+``kernels/plan.py:autotune_stats``, ``serving/aot.py:probe``) all back
+onto :data:`REGISTRY` while keeping their original public APIs; the
+launchers export the registry via ``--metrics-out`` (Prometheus text or
+JSON, by extension) and stream spans via ``--trace-out`` (JSONL).
+
+    from repro import obs
+
+    calls = obs.counter("msda.plan_calls", help="plan invocations")
+    calls.inc(backend="pallas")
+
+    with obs.span("autotune.race", level=3, backend="pallas"):
+        ...  # nested spans land in the JSONL trace + XLA profile
+
+    obs.write_metrics("metrics.prom")        # Prometheus exposition text
+    obs.write_metrics("metrics.json")        # same registry, JSON
+
+``obs.bench.write_bench`` is the one writer behind every
+``BENCH_*.json`` trajectory file (see ``docs/observability.md`` for the
+schema and the ``tools/bench_gate.py`` regression contract).
+"""
+from __future__ import annotations
+
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    REGISTRY,
+    counter,
+    gauge,
+    histogram,
+    reset,
+    scope,
+    snapshot,
+)
+from repro.obs.trace import (  # noqa: F401
+    disable_trace,
+    enable_trace,
+    set_trace_level,
+    span,
+    trace_path,
+    traced_span,
+)
+from repro.obs.export import (  # noqa: F401
+    metrics_json,
+    prometheus_text,
+    write_metrics,
+)
+from repro.obs import bench  # noqa: F401

@@ -1,0 +1,84 @@
+"""Registry exporters: Prometheus exposition text + JSON.
+
+``write_metrics(path)`` picks the format by extension — ``.json`` gets
+the structured :meth:`Registry.snapshot` payload, anything else the
+Prometheus text format (one scrape-able page; histograms exported as
+``_count`` / ``_sum`` / ``_min`` / ``_max`` / ``_p50`` series).  Dots in
+metric names become underscores for Prometheus (``msda.plan_cache.hits``
+-> ``msda_plan_cache_hits``); the JSON view keeps dotted names verbatim.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    REGISTRY,
+)
+
+
+def _prom_name(name: str) -> str:
+    return name.replace(".", "_").replace("-", "_")
+
+
+def _prom_series(series: str) -> str:
+    # series ids are rendered as name{k="v"}; only the name needs mangling
+    if "{" in series:
+        name, rest = series.split("{", 1)
+        return _prom_name(name) + "{" + rest
+    return _prom_name(series)
+
+
+def prometheus_text(registry: Optional[Registry] = None) -> str:
+    """The whole registry in Prometheus exposition format."""
+    reg = registry or REGISTRY
+    lines = []
+    for m in reg.metrics():
+        pname = _prom_name(m.name)
+        if m.help:
+            lines.append(f"# HELP {pname} {m.help}")
+        if isinstance(m, (Counter, Gauge)):
+            lines.append(f"# TYPE {pname} {m.kind}")
+            for series, v in m.values().items():
+                lines.append(f"{_prom_series(series)} {v:g}")
+        elif isinstance(m, Histogram):
+            lines.append(f"# TYPE {pname} summary")
+            for series, summ in m.values().items():
+                for stat in ("count", "sum", "min", "max", "p50"):
+                    lines.append(
+                        f"{_prom_series(series)}_{stat} {summ[stat]:g}"
+                        if "{" not in series else
+                        _suffix_labeled(_prom_series(series), stat, summ[stat]))
+    return "\n".join(lines) + "\n"
+
+
+def _suffix_labeled(series: str, stat: str, v: float) -> str:
+    # name{labels} -> name_stat{labels} value
+    name, rest = series.split("{", 1)
+    return f"{name}_{stat}{{{rest} {v:g}"
+
+
+def metrics_json(registry: Optional[Registry] = None) -> Dict[str, Any]:
+    reg = registry or REGISTRY
+    return {"created_unix": time.time(), **reg.snapshot()}
+
+
+def write_metrics(path: str, registry: Optional[Registry] = None) -> str:
+    """Dump the registry to ``path``; format chosen by extension."""
+    path = str(path)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        if path.endswith(".json"):
+            json.dump(metrics_json(registry), f, indent=1, sort_keys=True)
+        else:
+            f.write(prometheus_text(registry))
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,273 @@
+"""Metrics registry: labeled counters / gauges / histograms, thread-safe.
+
+Everything is host-side Python (no tracers, no device sync) so recording
+from inside a traced function body is safe — it simply counts *traces*,
+which is exactly the semantics the serving zero-retrace probe relies on.
+
+Metric names are dotted (``msda.plan_cache.hits``); labels are kwargs
+(``counter.inc(direction="fwd")``).  Each (name, label-set) pair is one
+independent series.  ``Registry.snapshot()`` returns plain dicts,
+``Registry.reset()`` zeroes everything (or a name prefix), and
+``Registry.scope()`` yields a delta view — the mechanism behind
+``aot.Probe`` and the elastic restore's autotune-delta asserts.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+# histograms keep a bounded window of raw observations for percentiles;
+# count/sum/min/max stay exact over the full lifetime
+_HIST_WINDOW = 1024
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, Any]) -> LabelKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def render_series(name: str, key: LabelKey) -> str:
+    """``name{a="1",b="x"}`` — the flat-map series id snapshots use."""
+    if not key:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return f"{name}{{{inner}}}"
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "", *,
+                 lock: Optional[threading.RLock] = None):
+        self.name = name
+        self.help = help
+        self._lock = lock or threading.RLock()
+        self._series: Dict[LabelKey, Any] = {}
+
+    def labels(self) -> List[LabelKey]:
+        with self._lock:
+            return list(self._series)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._series.clear()
+
+
+class Counter(_Metric):
+    """Monotonic (between resets) float counter."""
+
+    kind = "counter"
+
+    def inc(self, n: float = 1.0, **labels: Any) -> None:
+        key = _label_key(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + n
+
+    def value(self, **labels: Any) -> float:
+        with self._lock:
+            return float(self._series.get(_label_key(labels), 0.0))
+
+    def total(self) -> float:
+        """Sum over every label-set series."""
+        with self._lock:
+            return float(sum(self._series.values()))
+
+    def values(self) -> Dict[str, float]:
+        with self._lock:
+            return {render_series(self.name, k): float(v)
+                    for k, v in self._series.items()}
+
+
+class Gauge(_Metric):
+    """Last-write-wins value (VMEM occupancy, queue depth, ...)."""
+
+    kind = "gauge"
+
+    def set(self, v: float, **labels: Any) -> None:
+        with self._lock:
+            self._series[_label_key(labels)] = float(v)
+
+    def value(self, **labels: Any) -> float:
+        with self._lock:
+            return float(self._series.get(_label_key(labels), 0.0))
+
+    def values(self) -> Dict[str, float]:
+        with self._lock:
+            return {render_series(self.name, k): float(v)
+                    for k, v in self._series.items()}
+
+
+class Histogram(_Metric):
+    """Streaming summary: exact count/sum/min/max + windowed p50."""
+
+    kind = "histogram"
+
+    def observe(self, v: float, **labels: Any) -> None:
+        v = float(v)
+        key = _label_key(labels)
+        with self._lock:
+            row = self._series.get(key)
+            if row is None:
+                row = {"count": 0, "sum": 0.0, "min": v, "max": v,
+                       "window": []}
+                self._series[key] = row
+            row["count"] += 1
+            row["sum"] += v
+            row["min"] = min(row["min"], v)
+            row["max"] = max(row["max"], v)
+            row["window"].append(v)
+            if len(row["window"]) > _HIST_WINDOW:
+                del row["window"][: len(row["window"]) - _HIST_WINDOW]
+
+    def summary(self, **labels: Any) -> Optional[Dict[str, float]]:
+        with self._lock:
+            row = self._series.get(_label_key(labels))
+            if row is None:
+                return None
+            return self._summ(row)
+
+    @staticmethod
+    def _summ(row: Dict[str, Any]) -> Dict[str, float]:
+        w = sorted(row["window"])
+        return {"count": float(row["count"]), "sum": row["sum"],
+                "min": row["min"], "max": row["max"],
+                "mean": row["sum"] / row["count"] if row["count"] else 0.0,
+                "p50": w[len(w) // 2] if w else 0.0}
+
+    def values(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {render_series(self.name, k): self._summ(row)
+                    for k, row in self._series.items()}
+
+
+class Scope:
+    """Delta view over a registry's counters/histograms since entry."""
+
+    def __init__(self, registry: "Registry"):
+        self._registry = registry
+        self._base = registry.flat_counters()
+        self._base_hist = registry.flat_hist_counts()
+
+    def deltas(self) -> Dict[str, float]:
+        """Counter series deltas since the scope opened (non-zero only)."""
+        cur = self._registry.flat_counters()
+        out = {}
+        for series, v in cur.items():
+            d = v - self._base.get(series, 0.0)
+            if d:
+                out[series] = d
+        return out
+
+    def hist_deltas(self) -> Dict[str, float]:
+        """Histogram observation-count deltas since the scope opened."""
+        cur = self._registry.flat_hist_counts()
+        out = {}
+        for series, v in cur.items():
+            d = v - self._base_hist.get(series, 0.0)
+            if d:
+                out[series] = d
+        return out
+
+
+class Registry:
+    """Get-or-create metric store; one process-wide default below."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get(self, cls, name: str, help: str):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help, lock=self._lock)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "") -> Histogram:
+        return self._get(Histogram, name, help)
+
+    def metrics(self) -> List[_Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    # -- views -------------------------------------------------------------
+    def flat_counters(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for m in self.metrics():
+            if isinstance(m, Counter):
+                out.update(m.values())
+        return out
+
+    def flat_hist_counts(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for m in self.metrics():
+            if isinstance(m, Histogram):
+                for series, summ in m.values().items():
+                    out[series] = summ["count"]
+        return out
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-dict view: ``{"counters", "gauges", "histograms"}``."""
+        out: Dict[str, Any] = {"counters": {}, "gauges": {}, "histograms": {}}
+        for m in self.metrics():
+            if isinstance(m, Counter):
+                out["counters"].update(m.values())
+            elif isinstance(m, Gauge):
+                out["gauges"].update(m.values())
+            elif isinstance(m, Histogram):
+                out["histograms"].update(m.values())
+        return out
+
+    def reset(self, prefix: str = "") -> None:
+        """Zero every metric (or only names under ``prefix``)."""
+        for m in self.metrics():
+            if not prefix or m.name == prefix or m.name.startswith(prefix + "."):
+                m.reset()
+
+    def scope(self) -> Iterator[Scope]:
+        import contextlib
+
+        @contextlib.contextmanager
+        def _cm():
+            yield Scope(self)
+
+        return _cm()
+
+
+REGISTRY = Registry()
+
+
+def counter(name: str, help: str = "") -> Counter:
+    return REGISTRY.counter(name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    return REGISTRY.gauge(name, help)
+
+
+def histogram(name: str, help: str = "") -> Histogram:
+    return REGISTRY.histogram(name, help)
+
+
+def snapshot() -> Dict[str, Any]:
+    return REGISTRY.snapshot()
+
+
+def reset(prefix: str = "") -> None:
+    REGISTRY.reset(prefix)
+
+
+def scope():
+    return REGISTRY.scope()

@@ -1,0 +1,144 @@
+"""Nested structured spans with a JSONL exporter + XLA profile pass-through.
+
+    with obs.span("autotune.race", level=3, backend="pallas") as sp:
+        ...
+        sp["candidates"] = 7          # attrs may be added inside the span
+
+Spans nest per-thread: each record carries its slash-joined ``path``
+(``plan.build/autotune.race``) and depth, so the JSONL trace reconstructs
+the call tree without ids.  Every span also feeds a registry histogram
+(``span.<name>``), so durations show up in ``--metrics-out`` even when
+no trace sink is enabled.
+
+``level`` is verbosity (1 = coarse lifecycle, 4 = per-step): spans above
+the sink's threshold (default 3) are still timed into the histogram but
+not written to the JSONL file.  When ``jax.profiler.TraceAnnotation`` is
+available, every span body also runs under an annotation of the same
+name, so spans land in XLA profiles too.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+from repro.obs import registry as _registry
+
+try:  # pass-through to XLA profiles when jax is importable
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:  # pragma: no cover - jax is a hard dep everywhere else
+    _TraceAnnotation = None
+
+_DEFAULT_LEVEL = 3
+
+_lock = threading.Lock()
+_sink = None  # open file handle for the JSONL trace, or None
+_sink_path: Optional[str] = None
+_sink_level = _DEFAULT_LEVEL
+_tls = threading.local()
+
+
+def enable_trace(path: str, level: int = _DEFAULT_LEVEL) -> str:
+    """Open ``path`` (append) as the process-wide JSONL span sink."""
+    global _sink, _sink_path, _sink_level
+    path = str(path)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with _lock:
+        if _sink is not None:
+            _sink.close()
+        _sink = open(path, "a")
+        _sink_path = path
+        _sink_level = int(level)
+    return path
+
+
+def disable_trace() -> None:
+    global _sink, _sink_path
+    with _lock:
+        if _sink is not None:
+            _sink.close()
+        _sink = None
+        _sink_path = None
+
+
+def trace_path() -> Optional[str]:
+    return _sink_path
+
+
+def set_trace_level(level: int) -> None:
+    """Spans with ``level`` above this are timed but not exported."""
+    global _sink_level
+    _sink_level = int(level)
+
+
+def _stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def _emit(record: Dict[str, Any]) -> None:
+    with _lock:
+        if _sink is None:
+            return
+        _sink.write(json.dumps(record, sort_keys=True) + "\n")
+        _sink.flush()
+
+
+@contextlib.contextmanager
+def span(name: str, level: int = 2, **attrs: Any) -> Iterator[Dict[str, Any]]:
+    """Time a block as a named span; yields the (mutable) attrs dict."""
+    st = _stack()
+    path = "/".join([s for s in st] + [name])
+    st.append(name)
+    t0_unix = time.time()
+    t0 = time.perf_counter()
+    ann = _TraceAnnotation(name) if _TraceAnnotation is not None else None
+    if ann is not None:
+        ann.__enter__()
+    try:
+        yield attrs
+    finally:
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        st.pop()
+        dur = time.perf_counter() - t0
+        _registry.histogram(f"span.{name}").observe(dur)
+        if _sink is not None and level <= _sink_level:
+            _emit({
+                "name": name, "path": path, "depth": len(st),
+                "level": int(level), "t0_unix": t0_unix, "dur_s": dur,
+                "attrs": {k: _jsonable(v) for k, v in attrs.items()},
+                "thread": threading.current_thread().name,
+            })
+
+
+def traced_span(name: str, level: int = 2) -> Callable:
+    """Decorator form: run the whole function under :func:`span`."""
+
+    def deco(fn: Callable) -> Callable:
+        def wrapper(*args, **kwargs):
+            with span(name, level=level):
+                return fn(*args, **kwargs)
+
+        wrapper.__name__ = getattr(fn, "__name__", name)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__wrapped__ = fn
+        return wrapper
+
+    return deco
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    return str(v)

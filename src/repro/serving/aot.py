@@ -28,39 +28,49 @@ from typing import Any, Callable, Dict, Iterator, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import registry as _obs
+from repro.obs import trace as _obs_trace
+
 # --------------------------------------------------------------------------
-# compile-count probe
+# compile-count probe (backed by the process-wide obs registry)
 # --------------------------------------------------------------------------
 
-_STATS = {"traces": 0, "compiles": 0, "aot_calls": 0}
+_STATS = {
+    "traces": _obs.counter("serving.aot.traces",
+                           help="function bodies (re)traced under jit"),
+    "compiles": _obs.counter("serving.aot.compiles",
+                             help="AOT XLA compilations performed"),
+    "aot_calls": _obs.counter("serving.aot.aot_calls",
+                              help="calls into compiled AOT executors"),
+}
 
 
 def stats() -> Dict[str, int]:
-    return dict(_STATS)
+    return {k: int(c.value()) for k, c in _STATS.items()}
 
 
 def reset_stats() -> None:
-    for k in _STATS:
-        _STATS[k] = 0
+    for c in _STATS.values():
+        c.reset()
 
 
 class Probe:
     """Delta view over the trace/compile counters since construction."""
 
     def __init__(self):
-        self._base = dict(_STATS)
+        self._base = stats()
 
     @property
     def traces(self) -> int:
-        return _STATS["traces"] - self._base["traces"]
+        return int(_STATS["traces"].value()) - self._base["traces"]
 
     @property
     def compiles(self) -> int:
-        return _STATS["compiles"] - self._base["compiles"]
+        return int(_STATS["compiles"].value()) - self._base["compiles"]
 
     @property
     def aot_calls(self) -> int:
-        return _STATS["aot_calls"] - self._base["aot_calls"]
+        return int(_STATS["aot_calls"].value()) - self._base["aot_calls"]
 
     def __repr__(self):
         return (f"Probe(traces={self.traces}, compiles={self.compiles}, "
@@ -84,7 +94,7 @@ def traced(fn: Callable, name: str = "") -> Callable:
     """
 
     def wrapper(*args, **kwargs):
-        _STATS["traces"] += 1
+        _STATS["traces"].inc()
         return fn(*args, **kwargs)
 
     wrapper.__name__ = name or getattr(fn, "__name__", "fn")
@@ -110,7 +120,7 @@ class AotExecutor:
     _compiled: Any = dataclasses.field(repr=False)
 
     def __call__(self, *args):
-        _STATS["aot_calls"] += 1
+        _STATS["aot_calls"].inc()
         return self._compiled(*args)
 
 
@@ -123,9 +133,10 @@ def aot_compile(fn: Callable, *args, name: str = "") -> AotExecutor:
     *boot-time* trace; probes are snapshotted after warm-up.
     """
     name = name or getattr(fn, "__name__", "fn")
-    lowered = jax.jit(traced(fn, name)).lower(*args)
-    compiled = lowered.compile()
-    _STATS["compiles"] += 1
+    with _obs_trace.span("aot.compile", level=2, fn=name):
+        lowered = jax.jit(traced(fn, name)).lower(*args)
+        compiled = lowered.compile()
+    _STATS["compiles"].inc()
     avals = tuple(jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
                                if hasattr(x, "dtype") else x, a) for a in args)
     return AotExecutor(name=name, in_avals=avals, _compiled=compiled)

@@ -8,10 +8,21 @@ machine-readable view the smoke job and benchmarks consume, and
 Latency is measured in engine *ticks* (one batched decode step each),
 the natural unit for a continuous-batching engine: queue ticks count
 time spent waiting for a slot, decode ticks count time in service.
+
+Every lifecycle event is mirrored into the process-wide ``repro.obs``
+registry (``serve.*`` series, labeled per engine instance) so
+``--metrics-out`` exports the same numbers; ``snapshot()`` additionally
+embeds the plan-execution block (plan-cache / winner-cache hit rates,
+Pallas launches per direction) from ``kernels/plan.py``.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Any, Dict, List, Optional
+
+from repro.obs import registry as _obs
+
+_ENGINE_IDS = itertools.count()
 
 
 def _bucket_row() -> Dict[str, int]:
@@ -32,14 +43,25 @@ class ServeMetrics:
         self._admit_tick: Dict[int, int] = {}
         self.latency_ticks: List[int] = []
         self.queue_ticks: List[int] = []
+        # registry mirror: one label value per engine instance so two
+        # engines in one process stay separable in the export
+        self._eid = f"e{next(_ENGINE_IDS)}"
+        self._events = _obs.counter(
+            "serve.events", help="engine lifecycle events by type")
+        self._lat = _obs.histogram(
+            "serve.latency_ticks", help="submit->retire latency in ticks")
+        self._queue = _obs.histogram(
+            "serve.queue_ticks", help="submit->admit wait in ticks")
 
     # -- lifecycle events --------------------------------------------------
     def record_tick(self) -> None:
         self.ticks += 1
+        self._events.inc(engine=self._eid, type="tick")
 
     def record_submit(self, rid: int) -> None:
         self.submitted += 1
         self._submit_tick[rid] = self.ticks
+        self._events.inc(engine=self._eid, type="submit")
 
     def record_admit(self, rids, bucket_key: str = "lm", *,
                      real_tokens: int = 0, padded_tokens: int = 0) -> None:
@@ -51,19 +73,26 @@ class ServeMetrics:
         row["real_tokens"] += int(real_tokens)
         row["padded_tokens"] += int(padded_tokens)
         self.admitted += len(rids)
+        self._events.inc(len(rids), engine=self._eid, type="admit")
         for rid in rids:
             self._admit_tick[rid] = self.ticks
             if rid in self._submit_tick:
-                self.queue_ticks.append(self.ticks - self._submit_tick[rid])
+                wait = self.ticks - self._submit_tick[rid]
+                self.queue_ticks.append(wait)
+                self._queue.observe(wait, engine=self._eid)
 
     def record_decode(self, n_active: int) -> None:
         self.decode_tokens += int(n_active)
+        self._events.inc(int(n_active), engine=self._eid, type="decode_token")
 
     def record_retire(self, rid: int) -> None:
         self.retired += 1
+        self._events.inc(engine=self._eid, type="retire")
         start = self._admit_tick.get(rid, self._submit_tick.get(rid))
         if start is not None:
-            self.latency_ticks.append(self.ticks - start)
+            lat = self.ticks - start
+            self.latency_ticks.append(lat)
+            self._lat.observe(lat, engine=self._eid)
 
     # -- views -------------------------------------------------------------
     @staticmethod
@@ -80,12 +109,15 @@ class ServeMetrics:
             pad = row["padded_tokens"]
             buckets[key] = dict(
                 row, padding_frac=1.0 - row["real_tokens"] / pad if pad else 0.0)
+        from repro.kernels import plan as plan_mod
+
         return {
             "ticks": self.ticks, "submitted": self.submitted,
             "admitted": self.admitted, "retired": self.retired,
             "decode_tokens": self.decode_tokens, "buckets": buckets,
             "latency_ticks": self._summ(self.latency_ticks),
             "queue_ticks": self._summ(self.queue_ticks),
+            "plan_execution": plan_mod.execution_telemetry(),
         }
 
     def format(self) -> str:
@@ -94,6 +126,13 @@ class ServeMetrics:
             f"serve metrics: {s['submitted']} submitted, {s['admitted']} admitted, "
             f"{s['retired']} retired over {s['ticks']} ticks "
             f"({s['decode_tokens']} decode tokens)"]
+        pe = s["plan_execution"]
+        lines.append(
+            f"  plan cache {pe['plan_cache']['hits']}H/"
+            f"{pe['plan_cache']['misses']}M  winner cache "
+            f"{pe['winner_cache']['hits']}H/{pe['winner_cache']['misses']}M "
+            f"(+{pe['winner_cache']['seeded']} seeded)  launches "
+            f"fwd={pe['launches']['fwd']} bwd={pe['launches']['bwd']}")
         if s["latency_ticks"]:
             lt, qt = s["latency_ticks"], s["queue_ticks"]
             lines.append(

@@ -33,6 +33,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 
 from repro.kernels import plan as plan_mod
+from repro.obs import trace as _obs_trace
 
 # v2 grew the optional per-entry "sharding" record (distributed plans:
 # mode, mesh axes/shape, query_parallel, grad_reduce) and the mesh-keyed
@@ -205,6 +206,7 @@ class PlanStore:
                           f"not in readable {_READABLE_VERSIONS}")
         return data, None
 
+    @_obs_trace.traced_span("plan.restore", level=2)
     def restore(self, *, mesh=None, verify_describe: bool = True,
                 on_mesh_mismatch: str = "skip") -> RestoreReport:
         """Rebuild every stored plan; zero autotune races, by seeding.

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 
 from repro.checkpoint import manager as ckpt
+from repro.obs import trace as _obs_trace
 from repro.training import faults as faults_mod
 from repro.training.telemetry import StepTimeRecorder
 
@@ -116,9 +117,10 @@ class TrainingHarness:
                         f"injected corrupt-checkpoint loss before step {step}")
                 batch = self.batch_fn(step)
                 t0 = time.perf_counter()
-                new_state, metrics = self.step_fn(state, batch)
-                metrics = jax.device_get(metrics)
-                jax.block_until_ready(new_state)
+                with _obs_trace.span("train.step", level=4, step=step):
+                    new_state, metrics = self.step_fn(state, batch)
+                    metrics = jax.device_get(metrics)
+                    jax.block_until_ready(new_state)
                 wall = time.perf_counter() - t0
                 if ev is not None and ev.kind == "preempt":
                     # mid-step preemption: the step computed but never
@@ -139,8 +141,11 @@ class TrainingHarness:
                     raise RuntimeError(
                         f"exceeded max_restarts={cfg.max_restarts}") from e
                 t0 = time.perf_counter()
-                self._join_pending()
-                state, resumed, skipped = self._restore_or_init(like)
+                with _obs_trace.span("train.recovery", level=2,
+                                     failed_step=step) as sp:
+                    self._join_pending()
+                    state, resumed, skipped = self._restore_or_init(like)
+                    sp["resumed_from"] = resumed
                 latency = time.perf_counter() - t0
                 entry = {
                     "failed_step": step,
@@ -149,9 +154,15 @@ class TrainingHarness:
                     "ckpt_skipped": [int(s) for s, _ in skipped],
                 }
                 recovery_log.append(entry)
+                # recovery_log fields ride into the telemetry payload as
+                # first-class event fields, so a fault-injection run is
+                # diagnosable from BENCH_train.json alone
                 self.telemetry.record_event(
                     "recovery", step=resumed, latency_s=latency,
-                    detail=f"{entry['kind']}@{step} -> resume@{resumed}")
+                    detail=f"{entry['kind']}@{step} -> resume@{resumed}",
+                    failed_step=entry["failed_step"],
+                    resumed_from=entry["resumed_from"],
+                    ckpt_skipped=entry["ckpt_skipped"])
                 step = resumed
         self._join_pending()
         if cfg.ckpt_dir and step % cfg.ckpt_every != 0:

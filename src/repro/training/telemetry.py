@@ -14,10 +14,11 @@ the recovery/replan log with latencies.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 from typing import Any, Dict, List, Optional
+
+from repro.obs import bench as _bench
+from repro.obs import registry as _obs
 
 
 class StepTimeRecorder:
@@ -35,6 +36,11 @@ class StepTimeRecorder:
         self.steps: List[Dict[str, Any]] = []
         self.events: List[Dict[str, Any]] = []
         self._created = time.time()
+        # registry mirror (process-wide obs substrate)
+        self._step_hist = _obs.histogram(
+            "train.step_wall_s", help="per-step wall time (seconds)")
+        self._event_ctr = _obs.counter(
+            "train.events", help="harness runtime events by kind")
 
     # -- recording --------------------------------------------------------
     def record_step(self, step: int, wall_s: float,
@@ -43,13 +49,22 @@ class StepTimeRecorder:
         if loss is not None:
             row["loss"] = float(loss)
         self.steps.append(row)
+        self._step_hist.observe(float(wall_s))
 
     def record_event(self, kind: str, *, step: int, latency_s: float = 0.0,
-                     detail: str = "") -> None:
-        """``kind``: 'recovery' | 'replan' | anything the harness emits."""
-        self.events.append({"kind": str(kind), "step": int(step),
-                            "latency_s": float(latency_s),
-                            "detail": str(detail)})
+                     detail: str = "", **extra: Any) -> None:
+        """``kind``: 'recovery' | 'replan' | anything the harness emits.
+
+        ``extra`` keys ride into the event row verbatim — the harness
+        uses this to promote its ``recovery_log`` fields (failed step,
+        resume point, skipped checkpoints) to first-class event fields.
+        """
+        row = {"kind": str(kind), "step": int(step),
+               "latency_s": float(latency_s), "detail": str(detail)}
+        for k, v in extra.items():
+            row.setdefault(k, v)
+        self.events.append(row)
+        self._event_ctr.inc(kind=str(kind))
 
     # -- reporting --------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
@@ -70,6 +85,9 @@ class StepTimeRecorder:
         }
         if self.tokens_per_step and total > 0:
             out["tokens_per_sec"] = self.tokens_per_step * n / total
+        from repro.kernels import plan as plan_mod
+
+        out["plan_execution"] = plan_mod.execution_telemetry()
         return out
 
     def payload(self, *, note: str = "") -> Dict[str, Any]:
@@ -85,13 +103,19 @@ class StepTimeRecorder:
             "created_unix": self._created,
         }
 
+    # regression-gate rules for BENCH_train.json: step timings and
+    # tokens/sec are machine-relative, so only very generous slack;
+    # steps/recoveries depend on the run config and are not gated
+    GATE = [
+        _bench.gate_rule("mean_step_s", "lower", 4.0),
+        _bench.gate_rule("p50_step_s", "lower", 4.0),
+        _bench.gate_rule("tokens_per_sec", "higher", 0.8),
+    ]
+
     def write(self, path: str, *, note: str = "") -> str:
-        """Atomic JSON dump (tmp + rename, like every store here)."""
-        path = str(path)
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.payload(note=note), f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-        return path
+        """Atomic JSON dump (tmp + rename) via ``obs.bench.write_bench``."""
+        p = self.payload(note=note)
+        return _bench.write_bench(
+            path, bench=p["bench"], results=p["results"], config=p["config"],
+            note=p["note"], trajectory=p["trajectory"], events=p["events"],
+            gate=self.GATE, created_unix=p["created_unix"])

@@ -1,0 +1,336 @@
+"""Observability layer: registry scoping, span JSONL, plan telemetry, gate.
+
+Four contracts:
+
+* the metrics registry is get-or-create with labeled series, and
+  ``reset(prefix)`` / ``scope()`` bound what a caller can see or clear;
+* nested spans round-trip through the JSONL sink with correct paths,
+  depths and attrs, and respect the sink's level threshold;
+* plan-cache / winner-cache counters surfaced by
+  ``plan.execution_telemetry()`` agree with ``autotune_stats()`` across
+  a cold build -> ``PlanStore.restore`` -> warm rebuild cycle;
+* ``tools/bench_gate.py`` passes identical trajectories, fails on a
+  regression beyond tolerance, and ``--update`` ratchets the baseline
+  (old results appended to ``history``).
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro import obs
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import MsdaSpec
+from repro.obs import bench as obs_bench
+from repro.obs import registry as obs_registry
+from repro.serving import persistence
+
+
+@pytest.fixture(autouse=True)
+def _isolated(tmp_path, monkeypatch):
+    """Private winner cache + fresh plan/obs counters per test."""
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    plan_mod.clear_plans()
+    plan_mod.reset_autotune_stats()
+    obs.reset("msda")
+    yield
+    plan_mod.clear_plans()
+    obs.disable_trace()
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_get_or_create_and_labels():
+    r = obs_registry.Registry()
+    c = r.counter("req.total")
+    assert r.counter("req.total") is c
+    c.inc()
+    c.inc(2, route="decode")
+    assert c.value() == 1.0
+    assert c.value(route="decode") == 2.0
+    assert c.total() == 3.0
+    assert c.values() == {"req.total": 1.0, 'req.total{route="decode"}': 2.0}
+    with pytest.raises(TypeError):
+        r.gauge("req.total")  # same name, different kind
+
+
+def test_registry_snapshot_and_reset_scoping():
+    r = obs_registry.Registry()
+    r.counter("a").inc()
+    r.counter("a.b").inc(5)
+    r.counter("ab").inc(7)  # shares the prefix string but not the dot scope
+    r.gauge("a.g").set(3.0)
+    snap = r.snapshot()
+    assert snap["counters"] == {"a": 1.0, "a.b": 5.0, "ab": 7.0}
+    assert snap["gauges"] == {"a.g": 3.0}
+
+    r.reset("a")
+    assert r.counter("a").value() == 0.0
+    assert r.counter("a.b").value() == 0.0
+    assert r.gauge("a.g").value() == 0.0
+    assert r.counter("ab").value() == 7.0, "reset('a') must not touch 'ab'"
+
+
+def test_registry_scope_sees_only_deltas():
+    r = obs_registry.Registry()
+    r.counter("x").inc(10)
+    with r.scope() as sc:
+        r.counter("x").inc(2)
+        r.counter("y").inc()
+    d = sc.deltas()
+    assert d["x"] == 2.0 and d["y"] == 1.0
+    assert r.counter("x").value() == 12.0  # scope is a view, not a reset
+
+
+def test_histogram_summary():
+    r = obs_registry.Registry()
+    h = r.histogram("lat")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["sum"] == 10.0
+    assert s["min"] == 1.0 and s["max"] == 4.0 and s["mean"] == 2.5
+    assert 2.0 <= s["p50"] <= 3.0
+
+
+# ------------------------------------------------------------------- spans
+
+
+def test_span_feeds_histogram_without_sink():
+    assert obs.trace_path() is None
+    with obs.scope() as sc:
+        with obs.span("unit.test_hist", level=1):
+            pass
+    assert sc.hist_deltas().get("span.unit.test_hist") == 1.0
+
+
+def test_span_nesting_jsonl_round_trip(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    obs.enable_trace(str(path), level=3)
+    with obs.span("outer", level=1, phase="build") as sp:
+        sp["n"] = 2
+        with obs.span("inner", level=2, idx=0):
+            pass
+        with obs.span("too_fine", level=4):  # above threshold: not written
+            pass
+    obs.disable_trace()
+
+    records = [json.loads(line) for line in path.read_text().splitlines()]
+    by_name = {rec["name"]: rec for rec in records}
+    assert set(by_name) == {"outer", "inner"}
+    assert by_name["inner"]["path"] == "outer/inner"
+    assert by_name["inner"]["depth"] == 1
+    assert by_name["outer"]["path"] == "outer"
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["outer"]["attrs"] == {"phase": "build", "n": 2}
+    assert by_name["outer"]["dur_s"] >= by_name["inner"]["dur_s"]
+    # inner closes before outer, so it is written first
+    assert records[0]["name"] == "inner"
+
+
+def test_trace_level_can_be_raised(tmp_path):
+    path = tmp_path / "t.jsonl"
+    obs.enable_trace(str(path), level=5)
+    with obs.span("fine", level=4):
+        pass
+    obs.disable_trace()
+    assert "fine" in path.read_text()
+
+
+# ------------------------------------------------- plan execution telemetry
+
+
+def _spec(q=16):
+    return MsdaSpec(spatial_shapes=((4, 4), (2, 2)), num_heads=2, head_dim=8,
+                    num_points=2, num_queries=q)
+
+
+def test_plan_cache_counters_match_plan_cache_info():
+    plan_mod.msda_plan(_spec(), backend="ref")
+    plan_mod.msda_plan(_spec(), backend="ref")  # warm: in-process cache hit
+    info = plan_mod.plan_cache_info()
+    tele = plan_mod.execution_telemetry()["plan_cache"]
+    assert tele["hits"] == info["hits"] == 1
+    assert tele["misses"] == info["misses"] == 1
+    assert tele["size"] == info["size"] == 1
+    assert tele["hit_rate"] == 0.5
+
+
+def test_winner_cache_counters_cold_store_restore_warm(tmp_path):
+    # cpu is blockless, so give autotune a dtype race to actually time
+    spec = MsdaSpec(spatial_shapes=((8, 8), (4, 4)), num_heads=2, head_dim=8,
+                    num_points=2, num_queries=32, slab_dtype="auto")
+
+    # --- cold: private empty winner cache, autotune really races
+    plan = plan_mod.msda_plan(spec, backend="cpu", tune="autotune")
+    cold = plan_mod.autotune_stats()
+    assert cold["raced"] >= 1
+    tele = plan_mod.execution_telemetry()["winner_cache"]
+    assert tele["hits"] == cold["cache_hits"] == 0
+    assert tele["misses"] >= 1, "cold disk lookup must count as a miss"
+
+    store = persistence.PlanStore(str(tmp_path / "plans.json"))
+    assert store.save_plans([plan]) == 1
+
+    # --- restart: plan cache gone, fresh winner cache file, restore seeds it
+    plan_mod.clear_plans()
+    os.environ["REPRO_MSDA_AUTOTUNE_CACHE"] = str(tmp_path / "autotune2.json")
+    plan_mod.reset_autotune_stats()
+    report = persistence.PlanStore(store.path).restore()
+    assert len(report.plans) == 1
+    seeded = plan_mod.autotune_stats()
+    assert seeded["raced"] == 0 and seeded["seeded"] >= 1
+    tele = plan_mod.execution_telemetry()["winner_cache"]
+    assert tele["seeded"] == seeded["seeded"]
+
+    # --- warm: rebuild from scratch against the seeded winner cache
+    plan_mod.clear_plans()
+    plan_mod.msda_plan(spec, backend="cpu", tune="autotune")
+    warm = plan_mod.autotune_stats()
+    assert warm["raced"] == 0, "seeded winner cache must preempt the race"
+    assert warm["cache_hits"] >= seeded["cache_hits"] + 1
+    tele = plan_mod.execution_telemetry()["winner_cache"]
+    assert tele["hits"] == warm["cache_hits"]
+    assert tele["seeded"] == warm["seeded"]
+    assert tele["hit_rate"] is not None and tele["hit_rate"] > 0.0
+
+
+def test_launch_counters_and_plan_calls():
+    import jax
+    import jax.numpy as jnp
+
+    spec = _spec(q=8)
+    plan = plan_mod.msda_plan(spec, backend="ref")
+    assert plan.launches_per_call() == {"fwd": 0, "bwd": 0}
+    B, H, D, L, P = 1, spec.num_heads, spec.head_dim, spec.num_levels, \
+        spec.num_points
+    S = sum(h * w for h, w in spec.spatial_shapes)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    value = jax.random.normal(ks[0], (B, S, H, D))
+    loc = jax.random.uniform(ks[1], (B, spec.num_queries, H, L, P, 2))
+    attn = jax.nn.softmax(jax.random.normal(
+        ks[2], (B, spec.num_queries, H, L, P)).reshape(B, spec.num_queries,
+                                                       H, -1)
+    ).reshape(B, spec.num_queries, H, L, P)
+    before = plan_mod.execution_telemetry()["launches"]
+    out = plan(value, loc, attn)
+    after = plan_mod.execution_telemetry()["launches"]
+    assert after["plan_calls"] == before["plan_calls"] + 1
+    assert after["fwd"] == before["fwd"]  # ref backend launches no kernels
+    assert jnp.all(jnp.isfinite(out))
+
+
+# -------------------------------------------------------------- bench gate
+
+
+def _bench_gate():
+    path = os.path.join(obs_bench.repo_root(), "tools", "bench_gate.py")
+    spec = importlib.util.spec_from_file_location("bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write(path, results, *, gate=None, bench="unit"):
+    obs_bench.write_bench(str(path), bench=bench, results=results,
+                          gate=gate, created_unix=1000.0)
+
+
+GATE = [obs_bench.gate_rule("*.launches", "lower", 0.0),
+        obs_bench.gate_rule("*.us", "lower", 0.5)]
+
+
+def test_bench_gate_passes_identical(tmp_path, capsys):
+    bg = _bench_gate()
+    res = {"L4": {"launches": 1, "us": 100.0}}
+    _write(tmp_path / "base.json", res, gate=GATE)
+    _write(tmp_path / "fresh.json", res, gate=GATE)
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_bench_gate_fails_on_regression(tmp_path, capsys):
+    bg = _bench_gate()
+    _write(tmp_path / "base.json", {"L4": {"launches": 1, "us": 100.0}},
+           gate=GATE)
+    # structural count doubled: regression regardless of tolerance
+    _write(tmp_path / "fresh.json", {"L4": {"launches": 2, "us": 100.0}},
+           gate=GATE)
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 2
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_bench_gate_timing_within_tolerance_passes(tmp_path):
+    bg = _bench_gate()
+    _write(tmp_path / "base.json", {"L4": {"us": 100.0}}, gate=GATE)
+    _write(tmp_path / "fresh.json", {"L4": {"us": 140.0}}, gate=GATE)
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+
+
+def test_bench_gate_missing_gated_metric_is_regression(tmp_path):
+    bg = _bench_gate()
+    _write(tmp_path / "base.json", {"L4": {"launches": 1}}, gate=GATE)
+    _write(tmp_path / "fresh.json", {"L4": {}}, gate=GATE)
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 2
+
+
+def test_bench_gate_update_ratchets_baseline(tmp_path):
+    bg = _bench_gate()
+    base = tmp_path / "base.json"
+    _write(base, {"L4": {"us": 100.0}}, gate=GATE)
+    _write(tmp_path / "fresh.json", {"L4": {"us": 40.0}}, gate=GATE)
+    rc = bg.main(["--baseline", str(base),
+                  "--fresh", str(tmp_path / "fresh.json"), "--update"])
+    assert rc == 0
+    updated = obs_bench.read_bench(str(base))
+    assert updated["results"]["L4"]["us"] == 40.0
+    assert len(updated["history"]) == 1
+    assert updated["history"][0]["results"]["L4"]["us"] == 100.0
+    assert updated["gate"] == GATE, "gate rules survive the ratchet"
+
+
+def test_bench_gate_bench_id_mismatch_is_error(tmp_path):
+    bg = _bench_gate()
+    _write(tmp_path / "base.json", {"x": 1}, bench="a")
+    _write(tmp_path / "fresh.json", {"x": 1}, bench="b")
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 1
+
+
+def test_bench_gate_heuristic_fallback_for_legacy_payloads(tmp_path):
+    bg = _bench_gate()
+    # no gate block at all: count-like keys still gate structurally
+    (tmp_path / "base.json").write_text(json.dumps(
+        {"bench": "legacy", "results": {"launches_per_call": 1, "us": 9.0}}))
+    (tmp_path / "fresh.json").write_text(json.dumps(
+        {"bench": "legacy", "results": {"launches_per_call": 3, "us": 2.0}}))
+    rc = bg.main(["--baseline", str(tmp_path / "base.json"),
+                  "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 2
+
+
+# --------------------------------------------------------------- exporters
+
+
+def test_exporters_render_counters(tmp_path):
+    obs.counter("unit.export.hits").inc(3)
+    text = obs.prometheus_text()
+    assert "unit_export_hits 3" in text
+    payload = obs.metrics_json()
+    assert payload["counters"]["unit.export.hits"] == 3.0
+    out = obs.write_metrics(str(tmp_path / "m.json"))
+    assert json.loads(open(out).read())["counters"]["unit.export.hits"] == 3.0
+    out = obs.write_metrics(str(tmp_path / "m.prom"))
+    assert "unit_export_hits" in open(out).read()
