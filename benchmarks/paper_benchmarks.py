@@ -356,6 +356,78 @@ def fused_vs_per_level(out_path=None):
     return results
 
 
+def fusion_tiers(out_path=None):
+    """Per-level vs strict-prefix vs whole-pyramid fusion tiers.
+
+    The partial-fusion tier is the middle rung ``fused_vs_per_level``
+    cannot see: one fused launch over the prefix [0:k) plus per-level
+    tail launches, ``L - k + 1`` per direction.  As above, interpret-
+    mode wall time is trend only; the launch schedule (read from
+    ``plan.launches_per_call()``, the same method the observability
+    gauge bills from) is the structural fact that transfers.  Writes
+    the ``BENCH_fusion_tiers.json`` trajectory file at the repo root.
+    """
+    import dataclasses
+
+    from repro.obs import bench as obs_bench
+
+    levels = ((16, 16), (8, 8), (4, 4))
+    q, b, h = 64, 1, 2
+    S = sum(hh * ww for hh, ww in levels)
+    L = len(levels)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    value = jax.random.normal(ks[0], (b, S, h, D))
+    loc = jax.random.uniform(ks[1], (b, q, h, L, P, 2))
+    attn = jax.nn.softmax(
+        jax.random.normal(ks[2], (b, q, h, L, P)).reshape(b, q, h, -1)
+    ).reshape(b, q, h, L, P)
+    gout = jax.random.normal(ks[3], (b, q, h * D))
+
+    tiers = {"per_level": "off", "prefix2": "prefix:2", "full": "on"}
+    print("# Fusion tiers: per-level vs prefix [0:2) vs whole pyramid (interpret mode)")
+    results = {}
+    for train in (False, True):
+        spec = plan_mod.MsdaSpec(
+            spatial_shapes=levels, num_heads=h, head_dim=D, num_points=P,
+            num_queries=q, dtype="float32", train=train)
+        plans = {name: plan_mod.msda_plan(
+            dataclasses.replace(spec, fuse_levels=fuse), backend="pallas")
+            for name, fuse in tiers.items()}
+        if train:
+            fns = {name: jax.jit(jax.grad(
+                lambda v, l, a, p=p: jnp.vdot(p(v, l, a), gout),
+                argnums=(0, 1, 2))) for name, p in plans.items()}
+        else:
+            fns = {name: jax.jit(lambda v, l, a, p=p: p(v, l, a))
+                   for name, p in plans.items()}
+        t = _time_interleaved(fns, (value, loc, attn), iters=3)
+        tag = "train" if train else "fwd"
+        for name, us in t.items():
+            lp = plans[name].launches_per_call()
+            launches = lp["fwd"] + (lp["bwd"] if train else 0)
+            results[f"{tag}.{name}"] = {"us": us, "launches_per_call": launches}
+            row(f"fusion_tiers.{tag}.{name}", us, f"launches={launches}")
+
+    if out_path is None:
+        out_path = obs_bench.bench_path("fusion_tiers")
+    obs_bench.write_bench(
+        out_path,
+        bench="fusion_tiers",
+        config={"levels": [list(hw) for hw in levels], "Q": q, "B": b,
+                "H": h, "D": D, "P": P, "prefix_k": 2},
+        note="interpret-mode wall time is trend only; launch schedule transfers",
+        results=results,
+        gate=[
+            # the launch schedule is geometry-determined: any increase
+            # means a tier stopped fusing what it promised to fuse
+            obs_bench.gate_rule("*.launches_per_call", "lower", 0.0),
+            # raw interpret-mode timings vary across runner hardware
+            obs_bench.gate_rule("*.us", "lower", 4.0),
+        ])
+    print(f"# wrote {out_path}")
+    return results
+
+
 # --------------------------------------------------------------------------
 # pruned top-k vs dense plans (PR 7 sparsity ablation)
 # --------------------------------------------------------------------------

@@ -239,6 +239,8 @@ def _bwd_fused_kernel(
     row_offsets: Tuple[int, ...],
     fuse_scatter: bool,
     onehot_levels: Tuple[bool, ...] = (),
+    slab_dtypes: Tuple[str, ...] = (),
+    gather_offsets: Tuple[int, ...] = (),
 ):
     """Whole-pyramid backward step.
 
@@ -251,6 +253,12 @@ def _bwd_fused_kernel(
     one-hot levels via the MXU matmul against their own sub-slab rows.
     ``gout`` is streamed ONCE for the whole pyramid instead of once per
     level, and the grad super-slab goes to HBM exactly once.
+
+    Mixed-dtype super-slabs (``slab_dtypes``) only change the regather
+    side: the value slab is carrier-coded so its row offsets
+    (``gather_offsets``) differ from the grad super-slab's — the grad
+    slab is ALWAYS a uniform accum-dtype array at the plain
+    ``row_offsets`` layout, so phase 2 is untouched.
     """
     q_idx = pl.program_id(2)
 
@@ -277,7 +285,9 @@ def _bwd_fused_kernel(
     else:
         # same routing as the forward: shared helper, directions can't drift
         corners = msda_fwd.fused_gather_corners(
-            value_ref[0, 0], cidx, row_offsets, onehot, fuse_gather=True)
+            value_ref[0, 0], cidx,
+            tuple(gather_offsets) or row_offsets, onehot,
+            fuse_gather=True, slab_dtypes=slab_dtypes)
 
     # ---- phase 1 per level + collect phase-2 scatter contributions -------
     glocs, gattns = [], []
@@ -361,6 +371,8 @@ def msda_bwd_fused(
     onehot_levels: Tuple[bool, ...] = (),
     interpret: bool = False,
     accum_dtype=jnp.float32,
+    slab_dtypes: Tuple[str, ...] = (),
+    gather_offsets: Tuple[int, ...] = (),
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Whole-pyramid backward: ONE ``pallas_call`` for all levels.
 
@@ -368,6 +380,9 @@ def msda_bwd_fused(
     grad_attn)`` — the grad slab covers every level (packed layout,
     written back to HBM exactly once when the (batch, head) block
     retires); grad_loc/grad_attn come back ``(B, H, Q, L, P, ...)``.
+    ``row_offsets`` / ``total_rows`` describe the (uniform accum-dtype)
+    grad super-slab; a mixed-dtype value slab passes its own carrier
+    layout via ``slab_dtypes`` + ``gather_offsets`` for the regather.
     """
     B, Hh, Q, L, P, _ = loc_f.shape
     D = gout.shape[-1]
@@ -377,14 +392,18 @@ def msda_bwd_fused(
     kernel = functools.partial(
         _bwd_fused_kernel, hws=tuple(hws), row_offsets=tuple(row_offsets),
         fuse_scatter=fuse_scatter, onehot_levels=tuple(onehot_levels),
+        slab_dtypes=tuple(slab_dtypes), gather_offsets=tuple(gather_offsets),
     )
 
     in_specs = []
     operands = []
     if saved_p is None:
         assert value_p is not None
+        # the value slab's own row extent, NOT total_rows: a mixed-dtype
+        # carrier slab holds MORE rows than the plain grad layout
         in_specs.append(
-            pl.BlockSpec((1, 1, total_rows, D), lambda b, h, q: (b, h, 0, 0)))
+            pl.BlockSpec((1, 1, value_p.shape[2], D),
+                         lambda b, h, q: (b, h, 0, 0)))
         operands.append(value_p)
         kernel_fn = functools.partial(_regather_wrap, kernel)
     else:

@@ -249,8 +249,42 @@ def fused_level_corner_indices(loc, hws: Shapes):
     return cidx, geom
 
 
+def packed_ratios(slab_dtypes: Tuple[str, ...], carrier_dtype) -> Tuple[int, ...]:
+    """Per-level carrier-rows-per-slab-row of a mixed-dtype super-slab.
+
+    The packed super-slab is stored in the NARROWEST committed dtype
+    (the carrier); a level committed to a wider dtype occupies
+    ``itemsize(level) // itemsize(carrier)`` carrier rows per logical
+    row (its bytes reinterpreted row-major), so row offsets stay
+    sublane-aligned while every level keeps its own dtype — bf16-winner
+    levels keep their residency win under fusion.
+    """
+    ci = jnp.dtype(carrier_dtype).itemsize
+    return tuple(jnp.dtype(d).itemsize // ci for d in slab_dtypes)
+
+
+def decode_packed_rows(seg: jax.Array, ratio: int, dtype) -> jax.Array:
+    """(n*ratio, D) carrier rows -> (n, D) rows in the level's dtype.
+
+    Inverse of the row-major byte reinterpretation ``ops._pack_pyramid``
+    applies when packing a wide level into a narrow carrier: ``ratio``
+    consecutive carrier rows hold one logical row, consecutive carrier
+    elements pairing into one wide element.
+    """
+    dt = jnp.dtype(dtype)
+    if dt == seg.dtype:
+        return seg
+    if ratio == 1:  # same itemsize, different dtype (e.g. bf16 vs f16)
+        return jax.lax.bitcast_convert_type(seg, dt)
+    n = seg.shape[0] // ratio
+    d = seg.shape[1]
+    return jax.lax.bitcast_convert_type(
+        seg.reshape(n, ratio * d).reshape(n, d, ratio), dt)
+
+
 def fused_gather_corners(v, cidx, row_offsets: Tuple[int, ...],
-                         onehot: Tuple[bool, ...], fuse_gather: bool):
+                         onehot: Tuple[bool, ...], fuse_gather: bool,
+                         *, slab_dtypes: Tuple[str, ...] = ()):
     """Gather every level's bilinear corners from the packed super-slab.
 
     Shared by the fused forward and the fused backward's regather
@@ -259,13 +293,26 @@ def fused_gather_corners(v, cidx, row_offsets: Tuple[int, ...],
     levels (``row_offsets`` lift local indices into the super-slab;
     ``fuse_gather=False`` degrades to four merged per-corner gathers);
     one-hot levels ride the MXU against their own sub-slab rows.
+
+    ``slab_dtypes`` commits a per-level storage dtype inside the packed
+    slab (see :func:`packed_ratios`): ``row_offsets`` are then CARRIER
+    row offsets, each logical corner row widens to ``ratio`` consecutive
+    carrier rows inside the same merged index vector, and the gathered
+    carrier rows are bitcast back to the level dtype before the fp32
+    upcast.  Empty / uniform-carrier ``slab_dtypes`` take the exact
+    legacy path (bitwise-stable).
     Returns ``corners[l]``: list of 4 ``(Qb*P, D)`` fp32 arrays.
     """
     L = len(cidx)
     n = cidx[0][0].shape[0]  # Qb*P
+    carrier = str(v.dtype)
+    dts = (tuple(str(jnp.dtype(d)) for d in slab_dtypes) if slab_dtypes
+           else (carrier,) * L)
+    ratios = packed_ratios(dts, v.dtype)
+    mixed = any(d != carrier for d in dts)
     corners = [None] * L
     vpu = [l for l in range(L) if not onehot[l]]
-    if vpu:
+    if vpu and not mixed:
         if fuse_gather:
             big = jnp.concatenate(
                 [c + row_offsets[l] for l in vpu for c in cidx[l]])
@@ -282,11 +329,44 @@ def fused_gather_corners(v, cidx, row_offsets: Tuple[int, ...],
             for i, l in enumerate(vpu):
                 sl = slice(i * n, (i + 1) * n)
                 corners[l] = [pc[sl] for pc in per_corner]
+    elif vpu:
+        # mixed-dtype super-slab: still ONE merged gather over carrier
+        # rows — a ratio-r level contributes r consecutive carrier rows
+        # per corner, decoded back to its dtype after the take
+        def _carrier_idx(l, c):
+            base = c * ratios[l] + row_offsets[l]
+            if ratios[l] == 1:
+                return base
+            return (base[:, None] + jnp.arange(ratios[l])).reshape(-1)
+
+        if fuse_gather:
+            big = jnp.concatenate(
+                [_carrier_idx(l, c) for l in vpu for c in cidx[l]])
+            g = jnp.take(v, big, axis=0)
+            pos = 0
+            for l in vpu:
+                cs = []
+                for _ in range(4):
+                    m = n * ratios[l]
+                    cs.append(decode_packed_rows(
+                        g[pos:pos + m], ratios[l], dts[l]).astype(jnp.float32))
+                    pos += m
+                corners[l] = cs
+        else:
+            for l in vpu:
+                corners[l] = [
+                    decode_packed_rows(
+                        jnp.take(v, _carrier_idx(l, c), axis=0),
+                        ratios[l], dts[l]).astype(jnp.float32)
+                    for c in cidx[l]
+                ]
     for l in range(L):
         if not onehot[l]:
             continue
         end = row_offsets[l + 1] if l + 1 < L else v.shape[0]
         sub = v[row_offsets[l]:end]
+        if dts[l] != carrier:
+            sub = decode_packed_rows(sub, ratios[l], dts[l])
         all_idx = jnp.concatenate(cidx[l])
         oh = (all_idx[:, None] == jnp.arange(sub.shape[0])[None, :]).astype(
             jnp.float32)
@@ -305,6 +385,7 @@ def _fwd_fused_kernel(
     row_offsets: Tuple[int, ...],
     fuse_gather: bool,
     onehot_levels: Tuple[bool, ...] = (),
+    slab_dtypes: Tuple[str, ...] = (),
 ):
     """Whole-pyramid forward step: cross-level accumulation in-kernel.
 
@@ -326,9 +407,10 @@ def _fwd_fused_kernel(
 
     cidx, geom = fused_level_corner_indices(loc, hws)
     onehot = tuple(onehot_levels) if onehot_levels else (False,) * L
-    corners = fused_gather_corners(v, cidx, row_offsets, onehot, fuse_gather)
+    corners = fused_gather_corners(v, cidx, row_offsets, onehot, fuse_gather,
+                                   slab_dtypes=slab_dtypes)
 
-    out = jnp.zeros((Qb, D), jnp.float32)
+    contribs = []
     saved_parts = []
     for l in range(L):
         lx, ly, (m00, m10, m01, m11) = geom[l]
@@ -339,9 +421,24 @@ def _fwd_fused_kernel(
         w01 = ((1 - lx) * ly * m01).reshape(shape)
         w11 = (lx * ly * m11).reshape(shape)
         sampled = v00 * w00 + v10 * w10 + v01 * w01 + v11 * w11  # (Qb,P,D)
-        out = out + jnp.einsum("qpd,qp->qd", sampled, attn[:, l])
+        contribs.append(jnp.einsum("qpd,qp->qd", sampled, attn[:, l]))
         if saved_ref is not None:
             saved_parts.append(jnp.concatenate([v00, v10, v01, v11], axis=1))
+    # Cross-level accumulation through a fori_loop over MATERIALISED
+    # per-level partials — not a straight-line `out += contrib` chain.
+    # The loop boundary forces each contribution to be rounded to fp32
+    # before its add, exactly like the per-level path's partial outputs
+    # (separate launches round at the HBM write).  Straight-line code
+    # lets XLA:CPU contract a P=1 einsum (which simplifies to a bare
+    # multiply) with the accumulation into one FMA — the product then
+    # reaches the add UNROUNDED and tier parity breaks by 1 ulp; no
+    # optimization_barrier or bitcast survives that contraction pass.
+    stacked = jnp.stack(contribs)  # (L, Qb, D) rounded fp32 partials
+    out = jax.lax.fori_loop(
+        0, L,
+        lambda l, acc: acc + jax.lax.dynamic_index_in_dim(
+            stacked, l, keepdims=False),
+        jnp.zeros((Qb, D), jnp.float32))
     out_ref[0, 0] = out.astype(out_ref.dtype)
     if saved_ref is not None:
         # train mode: corners packed (Qb, L*4P, D), streamed once
@@ -362,6 +459,7 @@ def msda_fwd_fused(
     onehot_levels: Tuple[bool, ...] = (),
     interpret: bool = False,
     out_dtype=None,
+    slab_dtypes: Tuple[str, ...] = (),
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Whole-pyramid forward: ONE ``pallas_call`` for all levels.
 
@@ -370,22 +468,33 @@ def msda_fwd_fused(
     single shared ``block_q``; the output (and, in train mode, the
     packed saved corners ``(Qb, L*4P, D)``) are written to HBM exactly
     once.  ``out_dtype`` is the in-kernel cross-level accumulator dtype.
+
+    ``slab_dtypes`` commits mixed per-level storage dtypes inside the
+    packed slab — ``value_p`` is then CARRIER-coded (narrowest dtype;
+    ``row_offsets`` in carrier rows, see :func:`packed_ratios`) and the
+    train-mode saved corners are emitted in the WIDEST committed dtype
+    so no level's corners round through a narrower type.
     """
     B, Hh, R, D = value_p.shape
     out_dtype = value_p.dtype if out_dtype is None else jnp.dtype(out_dtype)
     _, _, Q, L, P, _ = loc_f.shape
     assert Q % block_q == 0, (Q, block_q)
     nq = Q // block_q
+    saved_dtype = value_p.dtype
+    if slab_dtypes:
+        saved_dtype = jnp.dtype(max(slab_dtypes,
+                                    key=lambda d: jnp.dtype(d).itemsize))
 
     kernel = functools.partial(
         _fwd_fused_kernel, hws=tuple(hws), row_offsets=tuple(row_offsets),
         fuse_gather=fuse_gather, onehot_levels=tuple(onehot_levels),
+        slab_dtypes=tuple(slab_dtypes),
     )
     out_shapes = [jax.ShapeDtypeStruct((B, Hh, Q, D), out_dtype)]
     out_specs = [pl.BlockSpec((1, 1, block_q, D), lambda b, h, q: (b, h, q, 0))]
     if save_sampled:
         out_shapes.append(
-            jax.ShapeDtypeStruct((B, Hh, Q, L * 4 * P, D), value_p.dtype))
+            jax.ShapeDtypeStruct((B, Hh, Q, L * 4 * P, D), saved_dtype))
         out_specs.append(
             pl.BlockSpec((1, 1, block_q, L * 4 * P, D),
                          lambda b, h, q: (b, h, q, 0, 0)))

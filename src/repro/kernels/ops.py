@@ -89,22 +89,69 @@ def pyramid_row_offsets(spatial_shapes: Shapes) -> Tuple[Tuple[int, ...], int]:
     return tuple(offs), total
 
 
+def _per_level_itemsizes(spatial_shapes: Shapes, value_itemsize) -> Tuple[int, ...]:
+    """Normalise a scalar-or-per-level itemsize spec to a per-level tuple."""
+    if isinstance(value_itemsize, (tuple, list)):
+        assert len(value_itemsize) == len(spatial_shapes), (
+            value_itemsize, spatial_shapes)
+        return tuple(int(i) for i in value_itemsize)
+    return (int(value_itemsize),) * len(spatial_shapes)
+
+
 def fused_resident_bytes(spatial_shapes: Shapes, head_dim: int, *,
-                         slab_itemsize: int = 4, train: bool = True,
+                         slab_itemsize=4, train: bool = True,
                          accum_itemsize: int = 4) -> int:
     """VMEM-resident bytes of the fused whole-pyramid kernels.
 
-    Σ slab_rows(hw) x D in the (uniform, widest-committed) slab dtype,
-    plus — in train mode — the same extent again in the accum dtype for
-    the resident grad super-slab.  The ONE definition of the packed
-    pyramid's residency: the fitting rung, the fused block planner and
+    Σ slab_rows(hw) x D in each level's COMMITTED slab dtype
+    (``slab_itemsize`` may be a per-level sequence — the mixed-dtype
+    super-slab stores every level at its own width), plus — in train
+    mode — the same row extent again in the accum dtype for the resident
+    grad super-slab.  The ONE definition of the packed pyramid's
+    residency: the fitting rung, the fused block planner and
     ``MsdaPlan.level_report`` all read it from here.
     """
+    items = _per_level_itemsizes(spatial_shapes, slab_itemsize)
     _, total = pyramid_row_offsets(spatial_shapes)
-    resident = total * head_dim * slab_itemsize
+    resident = sum(slab_rows(hw) * head_dim * it
+                   for hw, it in zip(spatial_shapes, items))
     if train:
         resident += total * head_dim * accum_itemsize
     return resident
+
+
+def fusion_prefix(
+    spatial_shapes: Shapes,
+    num_points: int,
+    head_dim: int,
+    *,
+    value_itemsize=4,
+    train: bool = True,
+    vmem_budget: int = VMEM_BUDGET,
+    accum_itemsize: int = 4,
+) -> int:
+    """The planner's partial-fusion occupancy model.
+
+    Returns the largest level prefix length ``k`` such that the packed
+    super-slab of levels ``[0..k)`` (:func:`fused_resident_bytes`, each
+    level at its committed itemsize) PLUS a minimal one-sublane query
+    step's working set over those ``k`` levels fits ``vmem_budget`` —
+    ``k == len(spatial_shapes)`` means the whole pyramid fuses, ``0``
+    means not even a single level does.  The fused launch covers
+    ``[0..k)`` and the tail runs per-level, so launches per direction
+    drop from ``L`` to ``L - k + 1``.
+    """
+    L = len(spatial_shapes)
+    items = _per_level_itemsizes(spatial_shapes, value_itemsize)
+    for k in range(L, 0, -1):
+        resident = fused_resident_bytes(
+            spatial_shapes[:k], head_dim, slab_itemsize=items[:k],
+            train=train, accum_itemsize=accum_itemsize)
+        per_q = per_query_bytes(num_points, head_dim, train=train,
+                                slab_itemsize=max(items[:k]), levels=k)
+        if resident + _SUBLANE * per_q <= vmem_budget:
+            return k
+    return 0
 
 
 def fused_pyramid_fits(
@@ -112,24 +159,20 @@ def fused_pyramid_fits(
     num_points: int,
     head_dim: int,
     *,
-    value_itemsize: int = 4,
+    value_itemsize=4,
     train: bool = True,
     vmem_budget: int = VMEM_BUDGET,
     accum_itemsize: int = 4,
 ) -> bool:
-    """The planner's fusion-rung fitting model.
+    """Whole-pyramid fitting rung: does the FULL prefix fit?
 
-    Fused when the whole packed pyramid (:func:`fused_resident_bytes`)
-    AND a minimal (one-sublane) query step's working set fit the VMEM
-    budget together.
+    Thin compatibility wrapper over :func:`fusion_prefix` — fused-all
+    exactly when the largest fitting prefix is the whole pyramid.
     """
-    resident = fused_resident_bytes(
-        spatial_shapes, head_dim, slab_itemsize=value_itemsize,
-        train=train, accum_itemsize=accum_itemsize)
-    per_q = per_query_bytes(num_points, head_dim, train=train,
-                            slab_itemsize=value_itemsize,
-                            levels=len(spatial_shapes))
-    return resident + _SUBLANE * per_q <= vmem_budget
+    return fusion_prefix(
+        spatial_shapes, num_points, head_dim, value_itemsize=value_itemsize,
+        train=train, vmem_budget=vmem_budget,
+        accum_itemsize=accum_itemsize) == len(spatial_shapes)
 
 
 def plan_blocks(
@@ -138,7 +181,7 @@ def plan_blocks(
     head_dim: int,
     num_queries: int,
     *,
-    value_itemsize: int = 4,
+    value_itemsize=4,
     train: bool = True,
     vmem_budget: int = VMEM_BUDGET,
     adaptive: bool = True,
@@ -152,44 +195,48 @@ def plan_blocks(
     reproduces the "-Adaptive VecLen" ablation (fixed minimal block).
 
     ``value_itemsize`` is the itemsize of the dtype the value slab is
-    *stored* in (a bf16-slab plan halves residency and widens blocks);
-    ``accum_itemsize`` sizes the train-mode grad slab, which stays wide
-    (fp32) regardless of the slab dtype.  The per-step working set
+    *stored* in (a bf16-slab plan halves residency and widens blocks) —
+    a scalar, or a per-level sequence when the committed slab dtypes
+    mix; ``accum_itemsize`` sizes the train-mode grad slab, which stays
+    wide (fp32) regardless of the slab dtype.  The per-step working set
     includes the train-mode saved-corner output block (see
     :func:`per_query_bytes`).
 
     ``fused=True`` plans the whole-pyramid kernel instead: the resident
-    set is the PACKED super-slab (all levels, plus the train grad
-    super-slab) and one shared block serves every level — returned
-    replicated per level so the tuple shape stays uniform.
+    set is the PACKED super-slab (all given levels at their own
+    itemsizes, plus the train grad super-slab) and one shared block
+    serves every level — returned replicated per level so the tuple
+    shape stays uniform.  To plan a partial-fusion prefix, pass the
+    prefix's shapes/itemsizes only.
     """
     def _clamp(bq: int) -> int:
         bq = max(_SUBLANE, min(2048, (bq // _SUBLANE) * _SUBLANE))
         return min(bq, _round_up(num_queries, _SUBLANE))
 
+    items = _per_level_itemsizes(spatial_shapes, value_itemsize)
     if fused:
         L = len(spatial_shapes)
         if not adaptive:
             return (_SUBLANE,) * L
         resident = fused_resident_bytes(
-            spatial_shapes, head_dim, slab_itemsize=value_itemsize,
+            spatial_shapes, head_dim, slab_itemsize=items,
             train=train, accum_itemsize=accum_itemsize)
         avail = max(vmem_budget - resident, 1 * 2**20)
         per_q = per_query_bytes(num_points, head_dim, train=train,
-                                slab_itemsize=value_itemsize, levels=L)
+                                slab_itemsize=max(items), levels=L)
         return (int(_clamp(avail // per_q)),) * L
 
     out = []
-    for hw in spatial_shapes:
+    for hw, it in zip(spatial_shapes, items):
         if not adaptive:
             out.append(_SUBLANE)
             continue
-        resident = slab_rows(hw) * head_dim * value_itemsize
+        resident = slab_rows(hw) * head_dim * it
         if train:  # bwd keeps a widened (accum-dtype) grad slab too
             resident += slab_rows(hw) * head_dim * accum_itemsize
         avail = max(vmem_budget - resident, 1 * 2**20)
         per_q = per_query_bytes(num_points, head_dim, train=train,
-                                slab_itemsize=value_itemsize)
+                                slab_itemsize=it)
         out.append(int(_clamp(avail // per_q)))
     return tuple(out)
 
@@ -217,23 +264,37 @@ class MSDAParams:
     # the primal); '' -> infer from the residual slab (legacy behaviour,
     # only correct when slab dtype == operand dtype)
     io_dtype: str = ""
-    # fused whole-pyramid kernels: all levels packed into ONE super-slab,
+    # fused whole-pyramid kernels: levels packed into ONE super-slab,
     # one pallas launch per direction with a single shared block_q
-    # (block_q[0]; the planner replicates it per level)
+    # (block_q[0]; the planner replicates it across the fused levels)
     fuse_levels: bool = False
+    # partial fusion: number of levels in the fused prefix [0..k).
+    # 0 means "all levels" when fuse_levels is set (legacy whole-pyramid
+    # fusion); 0 < k < L runs ONE fused launch over the prefix plus
+    # per-level launches for the tail, summed into the same accumulator.
+    fuse_prefix: int = 0
 
     def slab_dtype(self, level: int) -> str:
         if self.slab_dtypes and self.slab_dtypes[level]:
             return self.slab_dtypes[level]
         return ""
 
-    def fused_slab_dtype(self, operand_dtype) -> str:
-        """Uniform storage dtype of the packed super-slab (one array, one
-        dtype): the WIDEST committed per-level dtype, so fusing a plan
-        never narrows any level below what the planner committed."""
-        names = [self.slab_dtype(l) or str(operand_dtype)
-                 for l in range(len(self.spatial_shapes))]
-        return max(names, key=lambda n: jnp.dtype(n).itemsize)
+    def fused_prefix_len(self) -> int:
+        """Committed fused prefix length k: L when fully fused, 0 when
+        per-level, else the strict prefix ``0 < k < L``."""
+        L = len(self.spatial_shapes)
+        if not self.fuse_levels:
+            return 0
+        return min(self.fuse_prefix, L) if self.fuse_prefix else L
+
+    def fused_slab_dtypes(self, operand_dtype) -> Tuple[str, ...]:
+        """Per-level storage dtypes INSIDE the packed super-slab: each
+        level keeps its committed slab dtype (operand dtype where
+        uncommitted), so bf16-winner levels keep their residency win
+        under fusion — the slab is carrier-coded when they mix (see
+        :func:`packed_pyramid_layout`)."""
+        return tuple(self.slab_dtype(l) or str(jnp.dtype(operand_dtype))
+                     for l in range(len(self.spatial_shapes)))
 
 
 # levels with padded slabs up to this many rows use the MXU one-hot path
@@ -276,10 +337,80 @@ def _pad_q(x: jax.Array, q_axis: int, qpad: int, fill=0.0) -> jax.Array:
     return jnp.pad(x, pads, constant_values=fill)
 
 
+def packed_pyramid_layout(spatial_shapes: Shapes,
+                          dtype_names: Tuple[str, ...]):
+    """Carrier layout of a (possibly mixed-dtype) packed super-slab.
+
+    One JAX array has one dtype, so a super-slab whose levels commit
+    DIFFERENT dtypes is stored in an UNSIGNED-INT *carrier* whose
+    itemsize is the narrowest committed itemsize, with each level's
+    rows reinterpreted byte-for-byte: a level whose itemsize is
+    ``ratio`` x the carrier's occupies ``slab_rows(hw) * ratio``
+    carrier rows.  ``slab_rows`` is always a sublane multiple and
+    ``ratio >= 1``, so every offset stays aligned.  The carrier must
+    be an integer dtype: reinterpreting fp32 halves as bfloat16 can
+    produce NaN bit patterns that backends silently canonicalise in
+    transit (payload 0x7fc0), corrupting the wide level's low bytes —
+    integer lanes move bytes verbatim.
+
+    Returns ``(carrier, offsets, total, ratios)``: carrier dtype name,
+    per-level CARRIER row offsets, total carrier rows, and per-level
+    carrier-rows-per-logical-row.  With uniform dtypes the committed
+    dtype itself is the carrier and this degenerates to exactly
+    :func:`pyramid_row_offsets` (ratios all 1).
+    """
+    names = tuple(str(jnp.dtype(d)) for d in dtype_names)
+    assert len(names) == len(spatial_shapes), (names, spatial_shapes)
+    if len(set(names)) == 1:
+        carrier = names[0]
+    else:
+        carrier = f"uint{8 * min(jnp.dtype(n).itemsize for n in names)}"
+    ci = jnp.dtype(carrier).itemsize
+    ratios = tuple(jnp.dtype(n).itemsize // ci for n in names)
+    offs, total = [], 0
+    for hw, r in zip(spatial_shapes, ratios):
+        offs.append(total)
+        total += slab_rows(hw) * r
+    return carrier, tuple(offs), total, ratios
+
+
+def _encode_packed_level(lvl: jax.Array, carrier) -> jax.Array:
+    """(B,H,rows,D) level slab -> (B,H,rows*ratio,D) carrier rows.
+
+    Row-major byte reinterpretation — the exact inverse of
+    ``msda_fwd.decode_packed_rows`` (ratio consecutive carrier rows per
+    logical row, consecutive carrier elements per wide element).
+    """
+    dt = jnp.dtype(carrier)
+    if lvl.dtype == dt:
+        return lvl
+    ratio = lvl.dtype.itemsize // dt.itemsize
+    out = jax.lax.bitcast_convert_type(lvl, dt)
+    if ratio == 1:  # same itemsize, different dtype: shape unchanged
+        return out
+    B, Hh, rows, D = lvl.shape
+    return out.reshape(B, Hh, rows * ratio, D)
+
+
 def _pack_pyramid(value_t: jax.Array, spatial_shapes: Shapes,
-                  dtype=None) -> jax.Array:
+                  dtype=None, dtypes: Tuple[str, ...] = ()) -> jax.Array:
     """(B,H,S,D) -> packed super-slab (B,H,total_rows,D), every level
-    zero-padded to its ``slab_rows`` extent at its static row offset."""
+    zero-padded to its ``slab_rows`` extent at its static row offset.
+
+    ``dtype`` casts the whole slab uniformly (legacy whole-pyramid
+    path); ``dtypes`` instead commits a PER-LEVEL storage dtype — each
+    level is cast to its own dtype and byte-packed into the carrier
+    layout of :func:`packed_pyramid_layout`.
+    """
+    if dtypes:
+        carrier, _, _, _ = packed_pyramid_layout(spatial_shapes, dtypes)
+        parts = []
+        offset = 0
+        for hw, dt in zip(spatial_shapes, dtypes):
+            lvl = _pad_level(value_t, offset, hw).astype(dt)
+            parts.append(_encode_packed_level(lvl, carrier))
+            offset += hw[0] * hw[1]
+        return jnp.concatenate(parts, axis=2)
     parts = []
     offset = 0
     for hw in spatial_shapes:
@@ -303,6 +434,18 @@ def _unpack_grad_pyramid(slab: jax.Array, spatial_shapes: Shapes) -> jax.Array:
     return jnp.concatenate(outs, axis=2)
 
 
+def _fused_launch_meta(p: MSDAParams, operand_dtype, k: int):
+    """Static layout of the fused prefix launch over levels [0..k):
+    (per-level dtype names, carrier gather offsets, plain grad offsets,
+    grad total rows, mixed?)."""
+    hws = p.spatial_shapes[:k]
+    dtypes = p.fused_slab_dtypes(operand_dtype)[:k]
+    carrier, goffs, _, _ = packed_pyramid_layout(hws, dtypes)
+    row_offsets, total_rows = pyramid_row_offsets(hws)
+    mixed = any(str(jnp.dtype(d)) != carrier for d in dtypes)
+    return dtypes, goffs, row_offsets, total_rows, mixed
+
+
 def _fwd_impl_fused(p: MSDAParams, value, loc, attn):
     """Fused whole-pyramid forward: ONE pallas launch. Returns (out, res)."""
     B, S, Hh, D = value.shape
@@ -313,9 +456,8 @@ def _fwd_impl_fused(p: MSDAParams, value, loc, attn):
     attn_f = jnp.transpose(attn, (0, 2, 1, 3, 4))
 
     accum = jnp.dtype(p.accum_dtype)
-    slab = _pack_pyramid(value_t, p.spatial_shapes,
-                         dtype=p.fused_slab_dtype(value.dtype))
-    row_offsets, _ = pyramid_row_offsets(p.spatial_shapes)
+    dtypes, goffs, _, _, mixed = _fused_launch_meta(p, value.dtype, L)
+    slab = _pack_pyramid(value_t, p.spatial_shapes, dtypes=dtypes)
     bq = p.block_q[0]
     qpad = _round_up(Q, bq)
     loc_f = _pad_q(loc_f, 2, qpad, 0.5)
@@ -325,13 +467,14 @@ def _fwd_impl_fused(p: MSDAParams, value, loc, attn):
         loc_f,
         attn_f,
         hws=p.spatial_shapes,
-        row_offsets=row_offsets,
+        row_offsets=goffs,
         block_q=bq,
         fuse_gather=p.fuse_gather,
         save_sampled=p.save_sampled,
         onehot_levels=p.onehot_levels,
         interpret=p.interpret,
         out_dtype=accum,
+        slab_dtypes=dtypes if mixed else (),
     )
     out = jnp.transpose(out[:, :, :Q], (0, 2, 1, 3)).reshape(B, Q, Hh * D)
     out = out.astype(value.dtype)
@@ -351,7 +494,9 @@ def _bwd_impl_fused(p: MSDAParams, residuals, gout):
     Q = gout.shape[1]
     gout_t = jnp.transpose(gout.reshape(B, Q, Hh, D), (0, 2, 1, 3))
     gout_t = _pad_q(gout_t, 2, Qpad, 0.0)
-    row_offsets, total_rows = pyramid_row_offsets(p.spatial_shapes)
+    io_dtype = p.io_dtype or (slab.dtype if saved is None else saved.dtype)
+    dtypes, goffs, row_offsets, total_rows, mixed = _fused_launch_meta(
+        p, io_dtype, L)
     gval, gloc, gattn = msda_bwd.msda_bwd_fused(
         slab,
         loc_f,
@@ -366,6 +511,8 @@ def _bwd_impl_fused(p: MSDAParams, residuals, gout):
         onehot_levels=p.onehot_levels,
         interpret=p.interpret,
         accum_dtype=p.accum_dtype,
+        slab_dtypes=dtypes if mixed else (),
+        gather_offsets=goffs if mixed else (),
     )
     gvalue = _unpack_grad_pyramid(gval, p.spatial_shapes)  # (B,H,S,D)
     gvalue = jnp.transpose(gvalue, (0, 2, 1, 3))
@@ -374,10 +521,162 @@ def _bwd_impl_fused(p: MSDAParams, residuals, gout):
     return gvalue, gloc, gattn
 
 
+def _fwd_impl_prefix(p: MSDAParams, k: int, value, loc, attn):
+    """Partial-fusion forward: ONE fused launch over levels [0..k) plus
+    per-level launches for the tail, summed into the same accumulator —
+    ``L - k + 1`` launches instead of ``L``.  Returns (out, res)."""
+    B, S, Hh, D = value.shape
+    _, Q, _, L, P, _ = loc.shape
+    value_t = jnp.transpose(value, (0, 2, 1, 3))
+    # fused-layout loc/attn (query-major); tail levels slice level l out
+    loc_f = jnp.transpose(loc, (0, 2, 1, 3, 4, 5))   # (B,H,Q,L,P,2)
+    attn_f = jnp.transpose(attn, (0, 2, 1, 3, 4))    # (B,H,Q,L,P)
+
+    accum = jnp.dtype(p.accum_dtype)
+    dtypes, goffs, _, _, mixed = _fused_launch_meta(p, value.dtype, k)
+    slab_pre = _pack_pyramid(value_t, p.spatial_shapes[:k], dtypes=dtypes)
+
+    bq0 = p.block_q[0]
+    qpad0 = _round_up(Q, bq0)
+    out_pre, saved_pre = msda_fwd.msda_fwd_fused(
+        slab_pre,
+        _pad_q(loc_f[:, :, :, :k], 2, qpad0, 0.5),
+        _pad_q(attn_f[:, :, :, :k], 2, qpad0, 0.0),
+        hws=p.spatial_shapes[:k],
+        row_offsets=goffs,
+        block_q=bq0,
+        fuse_gather=p.fuse_gather,
+        save_sampled=p.save_sampled,
+        onehot_levels=p.onehot_levels[:k] if p.onehot_levels else (),
+        interpret=p.interpret,
+        out_dtype=accum,
+        slab_dtypes=dtypes if mixed else (),
+    )
+    out = out_pre[:, :, :Q]  # (B,H,Q,D) accum dtype
+
+    tail_slabs, tail_saved = [], []
+    offset = sum(h * w for h, w in p.spatial_shapes[:k])
+    for l in range(k, L):
+        hw = p.spatial_shapes[l]
+        bq = p.block_q[l]
+        qpad = _round_up(Q, bq)
+        slab = _pad_level(value_t, offset, hw)
+        sdt = p.slab_dtype(l)
+        if sdt:
+            slab = slab.astype(sdt)
+        offset += hw[0] * hw[1]
+        out_l, saved_l = msda_fwd.msda_fwd_level(
+            slab,
+            _pad_q(loc_f[:, :, :, l], 2, qpad, 0.5),
+            _pad_q(attn_f[:, :, :, l], 2, qpad, 0.0),
+            hw=hw,
+            block_q=bq,
+            fuse_gather=p.fuse_gather,
+            save_sampled=p.save_sampled,
+            onehot_gather=p.onehot_levels[l] if p.onehot_levels else False,
+            interpret=p.interpret,
+            out_dtype=accum,
+        )
+        out = out + out_l[:, :, :Q]
+        tail_slabs.append(slab)
+        tail_saved.append(saved_l)
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(B, Q, Hh * D)
+    out = out.astype(value.dtype)
+    # residuals carry UNPADDED loc/attn in the fused layout — fwd/bwd
+    # re-pad per launch (the fused prefix and each tail level may
+    # commit different block sizes)
+    loc_r = loc_f[:, :, :Q]
+    attn_r = attn_f[:, :, :Q]
+    if p.save_sampled:
+        residuals = (None, (saved_pre, *tail_saved), loc_r, attn_r)
+    else:
+        residuals = ((slab_pre, *tail_slabs), None, loc_r, attn_r)
+    return out, residuals
+
+
+def _bwd_impl_prefix(p: MSDAParams, k: int, residuals, gout):
+    """Partial-fusion backward: ONE fused launch over the prefix plus
+    per-level launches for the tail."""
+    slabs, saved_all, loc_f, attn_f = residuals
+    B, Hh, Q, L, P, _ = loc_f.shape
+    HD = gout.shape[-1]
+    D = HD // Hh
+    gout_t = jnp.transpose(gout.reshape(B, Q, Hh, D), (0, 2, 1, 3))  # (B,H,Q,D)
+
+    slab_pre = slabs[0] if slabs is not None else None
+    saved_pre = saved_all[0] if saved_all is not None else None
+    io_dtype = p.io_dtype or (slab_pre if slab_pre is not None
+                              else saved_pre).dtype
+    dtypes, goffs, row_offsets, total_rows, mixed = _fused_launch_meta(
+        p, io_dtype, k)
+
+    bq0 = p.block_q[0]
+    qpad0 = _round_up(Q, bq0)
+    gval_pre, gloc_pre, gattn_pre = msda_bwd.msda_bwd_fused(
+        slab_pre,
+        _pad_q(loc_f[:, :, :, :k], 2, qpad0, 0.5),
+        _pad_q(attn_f[:, :, :, :k], 2, qpad0, 0.0),
+        _pad_q(gout_t, 2, qpad0, 0.0),
+        saved_pre,
+        hws=p.spatial_shapes[:k],
+        row_offsets=row_offsets,
+        total_rows=total_rows,
+        block_q=bq0,
+        fuse_scatter=p.fuse_scatter,
+        onehot_levels=p.onehot_levels[:k] if p.onehot_levels else (),
+        interpret=p.interpret,
+        accum_dtype=p.accum_dtype,
+        slab_dtypes=dtypes if mixed else (),
+        gather_offsets=goffs if mixed else (),
+    )
+    gvals = [_unpack_grad_pyramid(gval_pre, p.spatial_shapes[:k])]
+    glocs = [gloc_pre[:, :, :Q]]    # (B,H,Q,k,P,2)
+    gattns = [gattn_pre[:, :, :Q]]  # (B,H,Q,k,P)
+
+    for l in range(k, L):
+        hw = p.spatial_shapes[l]
+        bq = p.block_q[l]
+        qpad = _round_up(Q, bq)
+        saved_l = saved_all[1 + l - k] if saved_all is not None else None
+        slab_l = slabs[1 + l - k] if slabs is not None else None
+        gval, gloc, gattn = msda_bwd.msda_bwd_level(
+            slab_l,
+            _pad_q(loc_f[:, :, :, l], 2, qpad, 0.5),
+            _pad_q(attn_f[:, :, :, l], 2, qpad, 0.0),
+            _pad_q(gout_t, 2, qpad, 0.0),
+            saved_l,
+            hw=hw,
+            hwp_rows=slab_rows(hw),
+            block_q=bq,
+            fuse_scatter=p.fuse_scatter,
+            onehot_scatter=p.onehot_levels[l] if p.onehot_levels else False,
+            interpret=p.interpret,
+            accum_dtype=p.accum_dtype,
+        )
+        gvals.append(_unpad_grad(gval, hw))
+        glocs.append(gloc[:, :, :Q])    # (B,H,Q,P,2)
+        gattns.append(gattn[:, :, :Q])  # (B,H,Q,P)
+
+    gvalue = jnp.concatenate(gvals, axis=2)  # (B,H,S,D) accum dtype
+    gvalue = jnp.transpose(gvalue, (0, 2, 1, 3))
+    # tail grads are (B,H,Q,P,...) per level — lift to the L axis and
+    # append after the prefix block
+    gloc = jnp.concatenate(
+        [glocs[0]] + [g.reshape(B, Hh, Q, 1, P, 2) for g in glocs[1:]], axis=3)
+    gattn = jnp.concatenate(
+        [gattns[0]] + [g.reshape(B, Hh, Q, 1, P) for g in gattns[1:]], axis=3)
+    gloc = jnp.transpose(gloc, (0, 2, 1, 3, 4, 5))  # (B,Q,H,L,P,2)
+    gattn = jnp.transpose(gattn, (0, 2, 1, 3, 4))   # (B,Q,H,L,P)
+    return gvalue, gloc, gattn
+
+
 def _fwd_impl(p: MSDAParams, value, loc, attn):
     """Kernel-backed forward. Returns (out, residuals)."""
-    if p.fuse_levels:
+    k = p.fused_prefix_len()
+    if k == len(p.spatial_shapes) and k:
         return _fwd_impl_fused(p, value, loc, attn)
+    if k:
+        return _fwd_impl_prefix(p, k, value, loc, attn)
     B, S, Hh, D = value.shape
     _, Q, _, L, P, _ = loc.shape
     # (B,S,H,D) -> (B,H,S,D); (B,Q,H,L,P,2) -> (B,H,L,Q,P,2)
@@ -425,8 +724,11 @@ def _fwd_impl(p: MSDAParams, value, loc, attn):
 
 
 def _bwd_impl(p: MSDAParams, residuals, gout):
-    if p.fuse_levels:
+    k = p.fused_prefix_len()
+    if k == len(p.spatial_shapes) and k:
         return _bwd_impl_fused(p, residuals, gout)
+    if k:
+        return _bwd_impl_prefix(p, k, residuals, gout)
     slabs, saved_all, loc_t, attn_t = residuals
     B, Hh, L, Q, P, _ = loc_t.shape
     HD = gout.shape[-1]

@@ -75,6 +75,19 @@ _SUBLANE = 8
 
 FUSE_LEVELS_CHOICES = ("auto", "on", "off")
 
+
+def _is_prefix_pin(value: Any) -> bool:
+    """True for a ``"prefix:k"`` fuse_levels pin (k >= 1): commit the
+    partial-fusion tier with a fused prefix of exactly k levels."""
+    if not (isinstance(value, str) and value.startswith("prefix:")):
+        return False
+    try:
+        return int(value.split(":", 1)[1]) >= 1
+    except ValueError:
+        return False
+
+
+
 SPARSITY_CHOICES = ("off", "topk", "auto")
 QUERY_ORDER_CHOICES = ("identity", "morton", "auto")
 
@@ -153,12 +166,17 @@ class MsdaSpec:
     # reduced-precision-sampling / wide-accumulation observation.
     slab_dtype: str = ""
     accum_dtype: str = "float32"
-    # -- whole-pyramid kernel fusion (the third planned axis) -------------
-    # 'auto' fuses when the packed pyramid (all level slabs + the train
-    # grad super-slab) fits the VMEM budget (ops.fused_pyramid_fits);
-    # tune="autotune" races fused vs per-level instead of trusting the
-    # model.  'on'/'off' pin the decision.  Only kernel backends that
-    # understand fusion (pallas) honour it; others stay per-level.
+    # -- pyramid kernel fusion tiers (the third planned axis) -------------
+    # 'auto' plans the largest level prefix [0..k) whose packed
+    # super-slab + per-query working set fits the VMEM budget
+    # (ops.fusion_prefix): a full fit fuses the whole pyramid, a strict
+    # prefix commits the partial-fusion tier (one fused launch over the
+    # prefix + per-level tail launches), no useful prefix stays
+    # per-level.  tune="autotune" races full-fuse vs the model's prefix
+    # vs per-level instead of trusting the model.  'on'/'off' pin the
+    # whole-pyramid/per-level extremes; 'prefix:k' pins the tier.  Only
+    # kernel backends that understand fusion (pallas) honour any of
+    # this; others stay per-level.
     fuse_levels: str = "auto"
     # -- sparsity (the fourth planned axis) -------------------------------
     # 'off' executes dense MSDA exactly as before (bitwise-identical
@@ -188,10 +206,11 @@ class MsdaSpec:
         if self.slab_dtype not in ("", "auto"):
             object.__setattr__(self, "slab_dtype", str(jnp.dtype(self.slab_dtype)))
         object.__setattr__(self, "accum_dtype", str(jnp.dtype(self.accum_dtype)))
-        if self.fuse_levels not in FUSE_LEVELS_CHOICES:
+        if (self.fuse_levels not in FUSE_LEVELS_CHOICES
+                and not _is_prefix_pin(self.fuse_levels)):
             raise ValueError(
                 f"unknown fuse_levels {self.fuse_levels!r}; "
-                f"one of {FUSE_LEVELS_CHOICES}")
+                f"one of {FUSE_LEVELS_CHOICES} or 'prefix:k' (k >= 1)")
         if self.sparsity not in SPARSITY_CHOICES:
             raise ValueError(
                 f"unknown sparsity {self.sparsity!r}; "
@@ -232,6 +251,12 @@ class MsdaSpec:
     @property
     def accum_itemsize(self) -> int:
         return jnp.dtype(self.accum_dtype).itemsize
+
+    def fuse_prefix_pin(self) -> int:
+        """The k of a ``"prefix:k"`` fuse_levels pin, else 0."""
+        if _is_prefix_pin(self.fuse_levels):
+            return int(self.fuse_levels.split(":", 1)[1])
+        return 0
 
     def resolved_sparsity_k(self) -> int:
         """Cells kept per query when the pruned executor runs (0 pins
@@ -328,9 +353,15 @@ class PlanTuning:
     # per-level committed slab storage dtype; () -> the spec's resolved
     # slab dtype for every level (autotune may mix fp32/bf16 per level)
     slab_dtypes: Tuple[str, ...] = ()
-    # committed whole-pyramid fusion decision: one pallas launch per
-    # direction (block_q is then one shared value, replicated per level)
+    # committed pyramid-fusion decision: one pallas launch per direction
+    # over the fused levels (the fused share of block_q is one shared
+    # value, replicated across those levels)
     fuse_levels: bool = False
+    # committed fused-prefix length when fuse_levels is set: 0 fuses ALL
+    # levels (legacy whole-pyramid fusion), 0 < k < L commits the
+    # partial tier — one fused launch over levels [0..k) plus per-level
+    # launches for the tail
+    fuse_prefix: int = 0
     # committed sparsity decision: 'dense' runs the backend executor
     # unchanged; 'topk' swaps in the pruned top-k gather executor
     sparsity: str = "dense"
@@ -382,33 +413,79 @@ _FUSABLE_BACKENDS = frozenset({"pallas"})
 
 
 def _fused_slab_itemsize(slab_dtypes: Tuple[str, ...]) -> int:
-    """Itemsize of the packed super-slab's uniform storage dtype (the
-    widest committed per-level dtype — see MSDAParams.fused_slab_dtype)."""
+    """Widest committed per-level slab itemsize — the per-query working
+    set of a fused launch is sized by its widest resident level."""
     return max(jnp.dtype(d).itemsize for d in slab_dtypes)
 
 
-def _resolve_fuse_levels(spec: MsdaSpec, slab_dtypes: Tuple[str, ...],
-                         backend_name: str) -> bool:
-    """The planner's fusion rung (heuristic side).
+def _slab_itemsizes(slab_dtypes: Tuple[str, ...]) -> Tuple[int, ...]:
+    return tuple(jnp.dtype(d).itemsize for d in slab_dtypes)
 
-    ``'on'``/``'off'`` pin the decision; ``'auto'`` fuses exactly when
-    the packed pyramid plus the per-query working set fits the spec's
-    VMEM budget (``ops.fused_pyramid_fits``) — single-level pyramids
-    stay per-level (already one launch, nothing to fuse).
+
+def _resolve_fuse_tier(spec: MsdaSpec, slab_dtypes: Tuple[str, ...],
+                       backend_name: str) -> Tuple[bool, int]:
+    """The planner's fusion rung (heuristic side): ``(fused, prefix)``.
+
+    ``prefix == 0`` means ALL levels (whole-pyramid fusion) when
+    ``fused``; ``0 < k < L`` commits the partial-fusion tier (one fused
+    launch over levels [0..k) plus a per-level tail).  ``'off'`` and
+    non-fusable backends resolve ``(False, 0)``; ``'on'`` pins
+    whole-pyramid fusion; ``'prefix:k'`` pins the tier (k >= L
+    degenerates to whole-pyramid).  ``'auto'`` plans the prefix from
+    the occupancy model (:func:`ops.fusion_prefix`) with the committed
+    per-level slab itemsizes: a full fit fuses everything, a strict
+    prefix of at least 2 levels commits the tier, anything shorter
+    stays per-level — a 1-level fused launch replaces exactly one
+    per-level launch, saving nothing.
     """
     from repro.kernels import ops
 
     if backend_name not in _FUSABLE_BACKENDS or spec.fuse_levels == "off":
-        return False
+        return False, 0
+    L = spec.num_levels
+    pin = spec.fuse_prefix_pin()
+    if pin:
+        return (True, 0) if pin >= L else (True, pin)
     if spec.fuse_levels == "on":
-        return True
-    if spec.num_levels < 2:
-        return False
-    return ops.fused_pyramid_fits(
+        return True, 0
+    if L < 2:
+        return False, 0
+    k = ops.fusion_prefix(
         spec.spatial_shapes, spec.num_points, spec.head_dim,
-        value_itemsize=_fused_slab_itemsize(slab_dtypes),
+        value_itemsize=_slab_itemsizes(slab_dtypes),
         train=spec.train, vmem_budget=spec.vmem_budget,
         accum_itemsize=spec.accum_itemsize)
+    if k == L:
+        return True, 0
+    if k >= 2:
+        return True, k
+    return False, 0
+
+
+def _tier_block_q(spec: MsdaSpec, slab_dtypes: Tuple[str, ...],
+                  prefix: int) -> Tuple[int, ...]:
+    """Heuristic block plan for a fusion tier: ONE shared block for the
+    fused prefix — planned against the prefix's packed residency and
+    replicated across the prefix levels so ``block_q`` keeps one entry
+    per level — plus per-level tail blocks at their own itemsizes.
+    ``prefix=0`` plans whole-pyramid fusion (no tail)."""
+    from repro.kernels import ops
+
+    k = prefix if prefix else spec.num_levels
+    items = _slab_itemsizes(slab_dtypes)
+    pre = ops.plan_blocks(
+        spec.spatial_shapes[:k], spec.num_points, spec.head_dim,
+        spec.num_queries, value_itemsize=items[:k], train=spec.train,
+        vmem_budget=spec.vmem_budget, adaptive=spec.adaptive_block,
+        accum_itemsize=spec.accum_itemsize, fused=True)
+    bq = (pre[0],) * k
+    for hw, it in zip(spec.spatial_shapes[k:], items[k:]):
+        bq += (ops.plan_blocks(
+            (hw,), spec.num_points, spec.head_dim, spec.num_queries,
+            value_itemsize=it, train=spec.train,
+            vmem_budget=spec.vmem_budget, adaptive=spec.adaptive_block,
+            accum_itemsize=spec.accum_itemsize)[0],)
+    return bq
 
 
 # --------------------------------------------------------------------------
@@ -446,6 +523,7 @@ def _build_pallas(spec: MsdaSpec, tuning: PlanTuning) -> Callable:
         accum_dtype=spec.accum_dtype,
         io_dtype=spec.dtype,
         fuse_levels=bool(tuning.fuse_levels),
+        fuse_prefix=int(tuning.fuse_prefix),
     )
     return ops.build_kernel_op(params)
 
@@ -654,7 +732,8 @@ _SLAB_DTYPE_CANDIDATES = ("float32", "bfloat16")
 # else a cache entry carries was written by a NEWER build and must ride
 # through this build's parse/rewrite cycle untouched (the "extras" dict)
 _WINNER_FIELDS = ("block_q", "slab_dtypes", "sharding", "onehot_levels",
-                  "fuse_levels", "grad_reduce", "sparsity", "query_order")
+                  "fuse_levels", "fuse_prefix", "grad_reduce", "sparsity",
+                  "query_order")
 
 
 def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
@@ -669,7 +748,10 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
     1D-vs-2D and ring-vs-psum races of distributed plans);
     ``fuse_levels`` records the whole-pyramid fusion race;
     ``onehot_levels`` the per-level MXU-routing race; ``sparsity`` /
-    ``query_order`` the pruned-vs-dense and Morton-vs-identity races.
+    ``query_order`` the pruned-vs-dense and Morton-vs-identity races;
+    ``fuse_prefix`` the partial-fusion tier a fused winner committed
+    (absent on whole-pyramid winners, so pre-tier entries mean "fuse
+    everything" exactly as they always did).
     All are OPTIONAL, so every pre-existing entry still parses with
     ``None`` there.  Keys this build does NOT know land in ``extras``
     verbatim and :func:`_winner_entry` writes them back — a field
@@ -683,9 +765,10 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
     L = spec.num_levels
 
     def _out(bq, dts, sharding=None, onehot=None, fused=None, gr=None,
-             sparsity=None, query_order=None, extras=None):
+             sparsity=None, query_order=None, extras=None, fuse_prefix=None):
         return {"block_q": bq, "slab_dtypes": dts, "sharding": sharding,
                 "onehot_levels": onehot, "fuse_levels": fused,
+                "fuse_prefix": fuse_prefix,
                 "grad_reduce": gr, "sparsity": sparsity,
                 "query_order": query_order, "extras": dict(extras or {})}
 
@@ -720,9 +803,14 @@ def _parse_cache_entry(hit, spec: MsdaSpec) -> Optional[Dict[str, Any]]:
             fused = hit.get("fuse_levels")
             if fused is not None:
                 fused = bool(fused)
+            fp = hit.get("fuse_prefix")
+            if fp is not None:
+                fp = int(fp)
+                if fp < 0:
+                    return None
             extras = {k: v for k, v in hit.items() if k not in _WINNER_FIELDS}
             return _out(tuple(int(b) for b in bq), dts, sharding, onehot,
-                        fused, gr, sparsity, qorder, extras)
+                        fused, gr, sparsity, qorder, extras, fp)
     except (TypeError, ValueError):  # hand-edited / corrupted entries
         return None
     return None
@@ -793,6 +881,8 @@ def _winner_entry(parsed: Dict[str, Any]) -> Dict[str, Any]:
         out["onehot_levels"] = [bool(x) for x in parsed["onehot_levels"]]
     if parsed.get("fuse_levels") is not None:
         out["fuse_levels"] = bool(parsed["fuse_levels"])
+    if parsed.get("fuse_prefix"):  # only a committed STRICT tier is written
+        out["fuse_prefix"] = int(parsed["fuse_prefix"])
     if parsed.get("grad_reduce") is not None:
         out["grad_reduce"] = parsed["grad_reduce"]
     if parsed.get("sparsity") is not None:
@@ -848,8 +938,8 @@ def seed_autotune_winner(spec: MsdaSpec, backend: str, winner: Any,
 @_obs_trace.traced_span("autotune.race", level=3)
 def _autotune_plan(
     spec: MsdaSpec, backend_name: str, builder: Callable, interpret: bool
-) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, str,
-           str, str]:
+) -> Tuple[Tuple[int, ...], Tuple[str, ...], Tuple[bool, ...], bool, int,
+           str, str, str]:
     """Measure candidate plans; persist the winner per (device, spec).
 
     Six raced axes:
@@ -866,11 +956,14 @@ def _autotune_plan(
       each level's routing is raced with greedy flips, so a level moves
       between the VPU gather and the MXU matmul on measurement, not on a
       hand-picked row count.
-    * whole-pyramid fusion — under ``fuse_levels="auto"``, the fused
-      single-launch plan (its own shared block, packed super-slab) races
-      the per-level incumbent.  **Train specs time forward + full VJP**:
-      fusion changes the backward's launch count and gout re-streaming,
-      so a forward-only race would crown the wrong side for training.
+    * pyramid fusion tiers — under ``fuse_levels="auto"``, the
+      whole-pyramid fused plan (its own shared block, packed
+      super-slab) AND the occupancy model's partial tier (fused prefix
+      [0..k) + per-level tail, when the model proposes a strict one)
+      race the per-level incumbent three ways.  **Train specs time
+      forward + full VJP**: fusion changes the backward's launch count
+      and gout re-streaming, so a forward-only race would crown the
+      wrong side for training.
     * top-k point pruning — under ``sparsity="auto"``, the pruned
       executor (4k corner gathers per query instead of 4LP, LOSSY —
       see ``kernels/msda_sparse.py``) races the committed dense winner;
@@ -886,10 +979,11 @@ def _autotune_plan(
     load jitter must never pick a winner.
 
     Winners ``{"block_q", "slab_dtypes"}`` (+ optional ``onehot_levels``
-    / ``fuse_levels`` / ``sparsity`` / ``query_order``) are keyed by
-    spec + device kind so a cache produced on one part never mis-tunes
-    another.  Returns ``(block_q, slab_dtypes, onehot_levels,
-    fuse_levels, sparsity, query_order, source)``.
+    / ``fuse_levels`` / ``fuse_prefix`` / ``sparsity`` /
+    ``query_order``) are keyed by spec + device kind so a cache
+    produced on one part never mis-tunes another.  Returns ``(block_q,
+    slab_dtypes, onehot_levels, fuse_levels, fuse_prefix, sparsity,
+    query_order, source)``.
     """
     from repro.kernels import msda_sparse
 
@@ -899,7 +993,10 @@ def _autotune_plan(
     fusable = backend_name in _FUSABLE_BACKENDS
     key = autotune_winner_key(spec, backend_name)
     disk = _load_autotune_cache()
-    pin_fused = fusable and spec.fuse_levels == "on"
+    # an 'on' / 'prefix:k' pin fixes the tier; only 'auto' races it
+    pinned_tier = spec.fuse_levels == "on" or spec.fuse_prefix_pin() > 0
+    pin_fused, pin_prefix = (_resolve_fuse_tier(spec, base_dts, backend_name)
+                             if pinned_tier else (False, 0))
     parsed = _parse_cache_entry(disk.get(key), spec)
     if parsed is None:
         _WINNER_CACHE_MISSES.inc()
@@ -907,9 +1004,16 @@ def _autotune_plan(
         _AUTOTUNE_STATS["cache_hits"].inc()
         oh = parsed["onehot_levels"] if parsed["onehot_levels"] is not None else onehot
         # entries without the field (hand-authored / pre-fusion schema)
-        # must not override an explicit 'on' pin
-        fused = (bool(parsed["fuse_levels"])
-                 if parsed["fuse_levels"] is not None else pin_fused)
+        # must not override an explicit 'on'/'prefix:k' pin
+        if parsed["fuse_levels"] is not None:
+            fused = bool(parsed["fuse_levels"])
+            # pre-tier fused entries carry no prefix: whole-pyramid,
+            # exactly what they committed when written
+            prefix = int(parsed["fuse_prefix"] or 0) if fused else 0
+            if prefix >= spec.num_levels:
+                prefix = 0
+        else:
+            fused, prefix = pin_fused, pin_prefix
         # field-less entries (older schema) resolve the sparsity rungs
         # the way a pin/heuristic would — never surprise-lossy
         sp = (parsed["sparsity"] if parsed["sparsity"] is not None
@@ -918,8 +1022,8 @@ def _autotune_plan(
               else _resolve_query_order(spec))
         if qo == "morton" and not msda_sparse.morton_eligible(spec):
             qo = "identity"  # entry from a differently-shaped past: ignore
-        return (parsed["block_q"], parsed["slab_dtypes"], oh, fused, sp, qo,
-                "autotune-cache")
+        return (parsed["block_q"], parsed["slab_dtypes"], oh, fused, prefix,
+                sp, qo, "autotune-cache")
 
     qcap = _round_up(spec.num_queries, _SUBLANE)
     race_fuse = fusable and spec.fuse_levels == "auto" and spec.num_levels >= 2
@@ -928,12 +1032,11 @@ def _autotune_plan(
                    and msda_sparse.morton_eligible(spec))
     candidates = []
     if backend_name not in _BLOCKLESS_BACKENDS:
-        # pin_fused: the only plan family is fused, so the block race
-        # scales the SHARED whole-pyramid block instead of per-level ones
-        base_bq = (_heuristic_block_q(
-            spec, fused=True,
-            value_itemsize=_fused_slab_itemsize(base_dts))
-            if pin_fused else heur)
+        # pin_fused: the only plan family is the pinned tier, so the
+        # block race scales ITS geometry (shared prefix block + tail
+        # blocks) instead of the per-level ones
+        base_bq = (_tier_block_q(spec, base_dts, pin_prefix)
+                   if pin_fused else heur)
         for scale_num, scale_den in ((1, 2), (1, 1), (2, 1)):
             cand = tuple(
                 max(_SUBLANE, min(2048, qcap, (b * scale_num // scale_den) // _SUBLANE * _SUBLANE))
@@ -947,7 +1050,7 @@ def _autotune_plan(
     race_onehot = bool(onehot) and backend_name not in _BLOCKLESS_BACKENDS
     if len(candidates) == 1 and not (race_dtypes or race_onehot or race_fuse
                                      or race_sparsity or race_qorder):
-        return (candidates[0], base_dts, onehot, pin_fused,
+        return (candidates[0], base_dts, onehot, pin_fused, pin_prefix,
                 _resolve_sparsity(spec), _resolve_query_order(spec),
                 "autotune")
 
@@ -956,17 +1059,19 @@ def _autotune_plan(
     args = _autotune_inputs(spec)
     jit_cache: Dict[tuple, Callable] = {}
 
-    def get_fn(bq, dts, oh=None, fused=None, timed="fwd"):
+    def get_fn(bq, dts, oh=None, fused=None, prefix=None, timed="fwd"):
         """Jitted + warmed executor for one candidate, cached so incumbent
         re-appearances across race rounds never recompile.  ``timed``:
         'fwd' times the forward, 'train' times forward + full VJP."""
         oh = onehot if oh is None else oh
         fused = pin_fused if fused is None else fused
-        ck = (bq, dts, oh, fused, timed)
+        prefix = pin_prefix if prefix is None else prefix
+        ck = (bq, dts, oh, fused, prefix, timed)
         if ck not in jit_cache:
             tuning = PlanTuning(block_q=bq, onehot_levels=oh,
                                 interpret=interpret, source="autotune",
-                                slab_dtypes=dts, fuse_levels=fused)
+                                slab_dtypes=dts, fuse_levels=fused,
+                                fuse_prefix=prefix)
             exec_fn = builder(spec, tuning)
             if timed == "train":
                 f = jax.jit(jax.grad(
@@ -979,8 +1084,8 @@ def _autotune_plan(
         return jit_cache[ck]
 
     def race(variants: Dict[Any, tuple], timed="fwd"):
-        """Interleave-time variants {key: (bq, dts[, oh[, fused]])};
-        unbuildable candidates drop out."""
+        """Interleave-time variants {key: (bq, dts[, oh[, fused[,
+        prefix]]])}; unbuildable candidates drop out."""
         fns = {}
         for k, v in variants.items():
             try:
@@ -997,7 +1102,7 @@ def _autotune_plan(
         # every candidate failed to build: fall back to the heuristic and
         # do NOT persist — a never-validated plan must not poison the
         # per-device winner cache for future processes
-        return (heur, base_dts, onehot, False, _resolve_sparsity(spec),
+        return (heur, base_dts, onehot, False, 0, _resolve_sparsity(spec),
                 _resolve_query_order(spec), "heuristic")
     best = bkey
 
@@ -1009,12 +1114,11 @@ def _autotune_plan(
         # marginal saving genuinely beats its cast cost end-to-end
         wide, narrow = (str(jnp.dtype(d)) for d in _SLAB_DTYPE_CANDIDATES)
         current = (wide,) * spec.num_levels
-        # a pinned-fused plan stores ONE super-slab whose dtype is the
-        # widest committed level — per-level flips can't mix, so the
-        # race is a single uniform wide-vs-narrow flip there
-        flips = ([tuple(range(spec.num_levels))] if pin_fused
-                 else [(l,) for l in range(spec.num_levels)])
-        for ls in flips:
+        # per-level flips even under a fused pin: the packed super-slab
+        # keeps each level's committed dtype (carrier-coded when they
+        # mix — see ops.packed_pyramid_layout), so a bf16-winner level
+        # keeps its residency win inside the fused launch
+        for ls in [(l,) for l in range(spec.num_levels)]:
             trial = tuple(narrow if l in ls else d
                           for l, d in enumerate(current))
             k, times = race({"cur": (best, current), "trial": (best, trial)})
@@ -1025,11 +1129,9 @@ def _autotune_plan(
         if best_dts != base_dts and backend_name not in _BLOCKLESS_BACKENDS:
             # flipped levels halved their residency: re-plan blocks with
             # the committed itemsizes (the 'bf16 frees VMEM -> wider
-            # vec-len' payoff — per-level itemsizes, or the whole-pyramid
-            # residency for a pinned-fused plan) and keep the clear winner
-            rebq = (_heuristic_block_q(
-                        spec, fused=True,
-                        value_itemsize=_fused_slab_itemsize(best_dts))
+            # vec-len' payoff — per-level itemsizes, or the pinned
+            # tier's packed residency) and keep the clear winner
+            rebq = (_tier_block_q(spec, best_dts, pin_prefix)
                     if pin_fused else _blocks_for_slab_dtypes(spec, best_dts))
             if rebq != best:
                 k, times = race({"cur": (best, best_dts), "re": (rebq, best_dts)})
@@ -1054,26 +1156,46 @@ def _autotune_plan(
                 current = trial
         best_onehot = current
 
-    best_fused = pin_fused
+    best_fused, best_prefix = pin_fused, pin_prefix
     if race_fuse:
-        # fused challenger at its OWN geometry: one shared block planned
-        # against the whole-pyramid residency, uniform (widest) slab
-        # dtype; timed fwd+VJP for train specs — the backward is where
-        # fusion changes launch count and gout streaming the most
-        uni = (max(best_dts, key=lambda n: jnp.dtype(n).itemsize),) * spec.num_levels
-        fused_bq = _heuristic_block_q(
-            spec, fused=True, value_itemsize=_fused_slab_itemsize(uni))
+        # fusion-tier race, three ways: the per-level incumbent, the
+        # whole-pyramid fused challenger, and — when the occupancy
+        # model proposes a strict prefix — the partial tier at the
+        # model's k.  Every challenger runs at its OWN geometry (shared
+        # prefix block planned against the packed residency, per-level
+        # tail blocks) with the COMMITTED per-level slab dtypes (the
+        # carrier-coded super-slab keeps mixed commitments).  Timed
+        # fwd+VJP for train specs — the backward is where fusion
+        # changes launch count and gout streaming the most.
+        from repro.kernels import ops
+
+        k_model = ops.fusion_prefix(
+            spec.spatial_shapes, spec.num_points, spec.head_dim,
+            value_itemsize=_slab_itemsizes(best_dts),
+            train=spec.train, vmem_budget=spec.vmem_budget,
+            accum_itemsize=spec.accum_itemsize)
         timed = "train" if spec.train else "fwd"
-        k, times = race(
-            {"per-level": (best, best_dts, best_onehot, False),
-             "fused": (fused_bq, uni, best_onehot, True)}, timed=timed)
-        if k is not None and "fused" in times:
-            if "per-level" not in times:
-                best_fused = True  # per-level didn't build; fused did
-            elif times["fused"] < times["per-level"] * (1 - _AUTOTUNE_MARGIN):
-                best_fused = True
-        if best_fused:
-            best, best_dts = fused_bq, uni
+        full_bq = _tier_block_q(spec, best_dts, 0)
+        tier_bqs = {"fused": (full_bq, 0)}
+        variants = {"per-level": (best, best_dts, best_onehot, False, 0),
+                    "fused": (full_bq, best_dts, best_onehot, True, 0)}
+        if 2 <= k_model < spec.num_levels:
+            pre_bq = _tier_block_q(spec, best_dts, k_model)
+            tier_bqs["prefix"] = (pre_bq, k_model)
+            variants["prefix"] = (pre_bq, best_dts, best_onehot, True, k_model)
+        k, times = race(variants, timed=timed)
+        if k is not None:
+            challengers = {n: t for n, t in times.items() if n != "per-level"}
+            if challengers:
+                champ = min(challengers, key=challengers.get)
+                inc = times.get("per-level")
+                # per-level stays incumbent: a fused tier wins only by
+                # clearing the noise margin (or when per-level itself
+                # failed to build)
+                if (inc is None
+                        or challengers[champ] < inc * (1 - _AUTOTUNE_MARGIN)):
+                    best, best_prefix = tier_bqs[champ]
+                    best_fused = True
 
     def _warm(exec_fn, timed):
         """Jit + warm an executor built OUTSIDE the (bq, dts, ...) tuning
@@ -1097,7 +1219,7 @@ def _autotune_plan(
         try:
             fns = {
                 "dense": get_fn(best, best_dts, best_onehot, best_fused,
-                                timed=timed),
+                                best_prefix, timed=timed),
                 "topk": _warm(msda_sparse.build_topk_exec(spec), timed),
             }
             times = _time_executors(fns, args)
@@ -1121,7 +1243,8 @@ def _autotune_plan(
                 base_exec = builder(spec, PlanTuning(
                     block_q=best, onehot_levels=best_onehot,
                     interpret=interpret, source="autotune",
-                    slab_dtypes=best_dts, fuse_levels=best_fused))
+                    slab_dtypes=best_dts, fuse_levels=best_fused,
+                    fuse_prefix=best_prefix))
             wrapped = msda_sparse.wrap_query_permutation(
                 base_exec, spec.spatial_shapes)
             fns = {"identity": _warm(base_exec, timed),
@@ -1138,12 +1261,19 @@ def _autotune_plan(
               "sharding": None, "grad_reduce": None,
               "onehot_levels": best_onehot if race_onehot else None,
               "fuse_levels": best_fused if fusable else None,
+              # only a committed STRICT tier persists the field — full-
+              # fusion / per-level winners stay byte-identical to the
+              # pre-tier entry schema
+              "fuse_prefix": (best_prefix
+                              if fusable and best_fused and best_prefix
+                              else None),
               "sparsity": best_sparsity if race_sparsity else None,
               "query_order": best_qorder if race_qorder else None,
               "extras": {}}
     disk[key] = _winner_entry(parsed)
     _store_autotune_cache(disk)
-    return best, best_dts, best_onehot, best_fused, best_sparsity, best_qorder, "autotune"
+    return (best, best_dts, best_onehot, best_fused, best_prefix,
+            best_sparsity, best_qorder, "autotune")
 
 
 @_obs_trace.traced_span("autotune.race_sharding", level=3)
@@ -1258,6 +1388,9 @@ def _autotune_sharding(spec: MsdaSpec, backend_name: str, mesh,
         "onehot_levels": None,
         "fuse_levels": (t.fuse_levels
                         if backend_name in _FUSABLE_BACKENDS else None),
+        "fuse_prefix": (t.fuse_prefix
+                        if (backend_name in _FUSABLE_BACKENDS
+                            and t.fuse_levels and t.fuse_prefix) else None),
         "grad_reduce": None})
     _store_autotune_cache(disk)
     return winner, built[winner]
@@ -1335,7 +1468,8 @@ def _autotune_grad_reduce(spec: MsdaSpec, backend_name: str, mesh,
         prev = {"block_q": tuning.block_q,
                 "slab_dtypes": tuning.slab_dtypes or _default_slab_dtypes(local_spec),
                 "sharding": None, "onehot_levels": None,
-                "fuse_levels": None, "grad_reduce": None,
+                "fuse_levels": None, "fuse_prefix": None,
+                "grad_reduce": None,
                 "sparsity": None, "query_order": None, "extras": {}}
     prev["grad_reduce"] = choice
     disk[key] = _winner_entry(prev)
@@ -1672,75 +1806,95 @@ class MsdaPlan:
     def launches_per_call(self) -> Dict[str, int]:
         """Static Pallas launch schedule for one plan call, by direction.
 
-        Fused plans launch once per direction over the packed super-slab;
-        per-level plans launch once per level.  The ref/cpu backends and
-        the top-k pruned executor run as plain XLA — zero Pallas
-        launches.  ``bwd`` counts the custom-VJP backward a ``train``
-        plan carries (0 for inference plans).
+        Whole-pyramid fused plans launch once per direction over the
+        packed super-slab; a partial-fusion tier with a fused prefix of
+        ``k`` levels launches ``L - k + 1`` times (one fused prefix
+        launch + the per-level tail); per-level plans launch once per
+        level.  The ref/cpu backends and the top-k pruned executor run
+        as plain XLA — zero Pallas launches.  ``bwd`` counts the
+        custom-VJP backward a ``train`` plan carries (0 for inference
+        plans).
         """
         if self.backend != "pallas" or self.tuning.sparsity == "topk":
             return {"fwd": 0, "bwd": 0}
-        per_dir = 1 if self.fused else self.local_spec.num_levels
+        L = self.local_spec.num_levels
+        k = self.fuse_prefix
+        per_dir = L if k == 0 else L - k + 1
         return {"fwd": per_dir, "bwd": per_dir if self.spec.train else 0}
 
     # -- inspectability ---------------------------------------------------
     @property
     def fused(self) -> bool:
-        """True when this plan runs the whole-pyramid fused kernels."""
+        """True when this plan runs fused pyramid kernels (whole-pyramid
+        or a partial-fusion tier)."""
         return bool(self.tuning.fuse_levels)
+
+    @property
+    def fuse_prefix(self) -> int:
+        """Effective committed fused-prefix length: 0 for per-level
+        plans, L for whole-pyramid fusion, else the strict tier
+        ``0 < k < L``."""
+        if not self.fused:
+            return 0
+        L = self.local_spec.num_levels
+        k = int(self.tuning.fuse_prefix)
+        return L if (k == 0 or k >= L) else k
 
     def level_report(self) -> List[Dict[str, Any]]:
         """Per-level planning facts (the numbers ``describe`` prints).
 
         Reported against ``local_spec`` — the per-shard geometry the
-        tuning was actually computed for.  For fused plans the
-        ``vmem_frac`` is the WHOLE pyramid's occupancy (every level's
-        slab is resident at once), identical on every row.
+        tuning was actually computed for.  ``vmem_frac`` is PER TIER:
+        levels inside the fused prefix report the packed prefix's
+        occupancy (every prefix slab resident at once, identical on
+        those rows); tail levels (and fully per-level plans) report
+        their own slab's.
         """
         from repro.kernels import ops
 
         s = self.local_spec
         dts = self.tuning.slab_dtypes or _default_slab_dtypes(s)
-        fused = self.fused
-        fused_resident = 0
-        if fused:
-            fused_resident = ops.fused_resident_bytes(
-                s.spatial_shapes, s.head_dim,
-                slab_itemsize=_fused_slab_itemsize(dts), train=s.train,
+        resolved = tuple(
+            dts[l] if l < len(dts) and dts[l] else s.resolved_slab_dtype()
+            for l in range(s.num_levels))
+        items = _slab_itemsizes(resolved)
+        k = self.fuse_prefix  # 0 per-level, L whole-pyramid, else the tier
+        prefix_resident = 0
+        if k:
+            prefix_resident = ops.fused_resident_bytes(
+                s.spatial_shapes[:k], s.head_dim,
+                slab_itemsize=items[:k], train=s.train,
                 accum_itemsize=s.accum_itemsize)
         # what the occupancy model would have picked on its own, so the
         # report carries predicted-vs-committed occupancy per level (a
         # raced/overridden block plan can land far from the model)
-        if fused:
-            heur_bq = _heuristic_block_q(
-                s, fused=True, value_itemsize=_fused_slab_itemsize(dts))
+        if k:
+            heur_bq = _tier_block_q(s, resolved, self.tuning.fuse_prefix)
         else:
-            resolved = tuple(
-                dts[l] if l < len(dts) and dts[l] else s.resolved_slab_dtype()
-                for l in range(s.num_levels))
             heur_bq = _blocks_for_slab_dtypes(s, resolved)
         rows = []
         for l, hw in enumerate(s.spatial_shapes):
             slab = ops.slab_rows(hw)
-            sdt = dts[l] if l < len(dts) and dts[l] else s.resolved_slab_dtype()
+            sdt = resolved[l]
             if self.backend == "ref":
                 # the oracle ignores the slab policy: pure fp32 compute,
                 # no resident slabs — report what actually executes
                 sdt = "float32"
+            in_prefix = l < k
             slab_bytes = slab * s.head_dim * jnp.dtype(sdt).itemsize
             if s.train:  # widened (accum-dtype) grad slab rides along
                 slab_bytes += slab * s.head_dim * s.accum_itemsize
             bq = self.tuning.block_q[l] if l < len(self.tuning.block_q) else 0
-            # fused plans store ONE super-slab in the widest committed
-            # dtype — the per-step working set is sized by it, not by
-            # the level's own (possibly narrower) commitment
-            step_item = (_fused_slab_itemsize(dts) if fused
+            # the fused prefix's per-step working set is sized by its
+            # widest resident level, not by this level's own (possibly
+            # narrower) commitment
+            step_item = (_fused_slab_itemsize(resolved[:k]) if in_prefix
                          else jnp.dtype(sdt).itemsize)
             per_q = ops.per_query_bytes(
                 s.num_points, s.head_dim, train=s.train,
                 slab_itemsize=step_item,
-                levels=s.num_levels if fused else 1)
-            resident = fused_resident if fused else slab_bytes
+                levels=k if in_prefix else 1)
+            resident = prefix_resident if in_prefix else slab_bytes
             occupancy = (resident + bq * per_q) / max(s.vmem_budget, 1)
             pred_bq = heur_bq[l] if l < len(heur_bq) else bq
             predicted = (resident + pred_bq * per_q) / max(s.vmem_budget, 1)
@@ -1769,7 +1923,7 @@ class MsdaPlan:
                 "vmem_frac": occupancy,
                 "block_q_predicted": pred_bq,
                 "vmem_frac_predicted": predicted,
-                "fused": fused,
+                "fused": in_prefix,
             })
             _VMEM_GAUGE.set(occupancy, level=l, kind="committed")
             _VMEM_GAUGE.set(predicted, level=l, kind="predicted")
@@ -1819,8 +1973,12 @@ class MsdaPlan:
     def describe(self) -> str:
         """Human-readable plan report.
 
-        The header states the resolved sharding MODE; mesh-carrying
-        plans add a ``mesh:`` line with the topology, which mesh axes
+        The header states the resolved sharding MODE and the committed
+        fusion tier (``fuse=per-level`` / ``fuse=pyramid`` /
+        ``fuse=pyramid[0:k)+per-level`` for a partial tier, whose
+        ``fused prefix`` line carries the launch count and the prefix
+        super-slab extent); mesh-carrying plans add a ``mesh:`` line
+        with the topology, which mesh axes
         shard which operand dims, the per-shard geometry, and the
         committed grad_value reduction (``ring`` / ``psum`` / ``local``)
         — so the report is the full distribution contract, not just the
@@ -1856,10 +2014,20 @@ class MsdaPlan:
         if self.fused:
             from repro.kernels import ops
 
-            _, total = ops.pyramid_row_offsets(self.local_spec.spatial_shapes)
-            fuse_note = (
-                f"  fused pyramid: 1 launch/direction  "
-                f"super_slab_rows={total}  shared block_q={self.block_q[0]}\n")
+            ls = self.local_spec
+            k = self.fuse_prefix
+            if k == ls.num_levels:
+                _, total = ops.pyramid_row_offsets(ls.spatial_shapes)
+                fuse_note = (
+                    f"  fused pyramid: 1 launch/direction  "
+                    f"super_slab_rows={total}  shared block_q={self.block_q[0]}\n")
+            else:
+                _, total = ops.pyramid_row_offsets(ls.spatial_shapes[:k])
+                fuse_note = (
+                    f"  fused prefix [0:{k}): {ls.num_levels - k + 1} "
+                    f"launches/direction  super_slab_rows={total}  "
+                    f"shared block_q={self.block_q[0]}  "
+                    f"tail levels {k}..{ls.num_levels - 1} per-level\n")
         sparse_note = ""
         if self.tuning.sparsity == "topk":
             ls = self.local_spec
@@ -1876,10 +2044,16 @@ class MsdaPlan:
                        + ("" if self.backend == "pallas"
                           else f"  (no pallas kernels on '{self.backend}')")
                        + "\n")
+        if not self.fused:
+            fuse_hdr = "per-level"
+        elif self.fuse_prefix == self.local_spec.num_levels:
+            fuse_hdr = "pyramid"
+        else:
+            fuse_hdr = f"pyramid[0:{self.fuse_prefix})+per-level"
         head = (
             f"MsdaPlan(backend={self.backend}, tune={self.tuning.source}, "
             f"sharding={self.sharding_mode}, "
-            f"fuse={'pyramid' if self.fused else 'per-level'}, "
+            f"fuse={fuse_hdr}, "
             f"train={s.train}, dtype={s.dtype}, "
             f"accum={s.accum_dtype})\n"
             f"  Q={s.num_queries} H={s.num_heads} D={s.head_dim} P={s.num_points} "
@@ -2045,25 +2219,27 @@ def msda_plan(
             # a NON-uniform override pins per-level blocks the fused
             # kernel (one shared block) cannot honour — never silently
             # reinterpret it; only a uniform override may still fuse
-            fused = (len(set(bq)) == 1
-                     and _resolve_fuse_levels(s, dts, backend_name))
+            if len(set(bq)) == 1:
+                fused, prefix = _resolve_fuse_tier(s, dts, backend_name)
+            else:
+                fused, prefix = False, 0
         elif tune == "autotune" and backend_name != "ref":
-            bq, dts, onehot, fused, sparsity, qorder, source = _autotune_plan(
-                s, backend_name, builder, interpret)
+            (bq, dts, onehot, fused, prefix, sparsity, qorder,
+             source) = _autotune_plan(s, backend_name, builder, interpret)
         else:
-            fused = _resolve_fuse_levels(s, dts, backend_name)
-            bq, source = _heuristic_block_q(
-                s, fused=fused,
-                value_itemsize=(_fused_slab_itemsize(dts) if fused
-                                else None)), "heuristic"
+            fused, prefix = _resolve_fuse_tier(s, dts, backend_name)
+            bq = (_tier_block_q(s, dts, prefix) if fused
+                  else _heuristic_block_q(s))
+            source = "heuristic"
         if sparsity == "topk":
             # the pruned executor is one XLA computation — it neither
             # fuses pyramid launches nor routes through the MXU; the
             # committed tuning must describe what actually runs
-            fused = False
+            fused, prefix = False, 0
         tuning = PlanTuning(block_q=bq, onehot_levels=onehot,
                             interpret=interpret, source=source,
                             slab_dtypes=dts, fuse_levels=fused,
+                            fuse_prefix=prefix,
                             sparsity=sparsity, query_order=qorder)
         # a pruned plan swaps in the top-k executor (the backend's dense
         # executor is the fallback every other decision still describes);

@@ -47,11 +47,16 @@ from repro.obs import trace as _obs_trace
 # sparsity axes: specs carry ``sparsity``/``sparsity_k``/``query_order``
 # and autotune winners the optional ``sparsity`` / ``query_order``
 # fields (pruned-vs-dense and Morton-vs-identity race decisions).
-# v1-v4 stores load unchanged; entries a NEWER schema writes still
+# v6 grew the partial-fusion tier: specs may pin ``fuse_levels`` to
+# "prefix:k" and autotune winners carry the optional ``fuse_prefix``
+# field (the 3-way per-level / prefix / full-pyramid race's decision) —
+# absent means what it always meant, "fuse everything fuse_levels says
+# to", so every pre-tier winner keeps its exact historical semantics.
+# v1-v5 stores load unchanged; entries a NEWER schema writes still
 # degrade per entry, and unknown winner fields ride through the
 # parse/rewrite cycle untouched (``_winner_entry`` extras).
-PLAN_STORE_VERSION = 5
-_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+PLAN_STORE_VERSION = 6
+_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 # stored sharding mode -> the planner's sharding= pin that reproduces it
 _MODE_TO_CHOICE = {"query2d": "2d", "batchquery": "hybrid"}
@@ -152,6 +157,11 @@ class PlanStore:
                     # restored plan re-commits it with zero timing runs
                     "fuse_levels": bool(plan.tuning.fuse_levels),
                 }
+                # strict partial-fusion tier (0 < k < L): persisted only
+                # when the race actually chose one, so full-fusion and
+                # per-level winners stay byte-identical to pre-v6 stores
+                if plan.tuning.fuse_levels and plan.tuning.fuse_prefix:
+                    winner["fuse_prefix"] = int(plan.tuning.fuse_prefix)
                 if plan.spec.onehot_small_levels and plan.tuning.onehot_levels:
                     winner["onehot_levels"] = [
                         bool(x) for x in plan.tuning.onehot_levels]

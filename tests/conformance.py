@@ -10,8 +10,9 @@ registry).  CI shards the matrix via two env vars:
   (e.g. ``"ref,cpu"`` for the Pallas-free CPU lane),
 * ``REPRO_CONFORMANCE_POLICIES`` — comma list restricting the dtype
   policies (``"float32"`` / ``"bfloat16"``),
-* ``REPRO_CONFORMANCE_FUSE`` — comma list restricting the
-  whole-pyramid fusion variants (``"off"`` / ``"on"``),
+* ``REPRO_CONFORMANCE_FUSE`` — comma list restricting the fusion
+  tiers (``"off"`` per-level / ``"prefix"`` partial fusion /
+  ``"full"`` whole pyramid),
 * ``REPRO_CONFORMANCE_SPARSITY`` — comma list restricting the sparsity
   variants (``"off"`` / ``"topk"``).
 
@@ -26,6 +27,15 @@ Tolerance tiers (documented, per dtype policy):
   value slab (8-bit mantissa => ~4e-3 relative per element, amplified
   by the P*L-term reduction); accumulation error does NOT grow with Q
   because the accumulator stays fp32.
+
+Fusion tiers add **no tolerance of their own** — the same per-policy
+tiers above apply to every ``fuse`` variant, mixed-dtype prefixes
+included.  The packed super-slab is carrier-coded (an unsigned-int
+carrier moves each level's committed bytes verbatim, uniform slabs
+keep their float dtype), so a fused-prefix plan reads bit-identical
+level data to the per-level plan under the same dtype policy: the only
+numeric difference between tiers is gather order inside one fp32
+accumulation, which the fp32 reassociation tier already budgets for.
 
 Sparsity tier (``sparsity="topk"`` — lossy BY DESIGN): the pruned plan
 is conformance-checked against the *masked-renormalised* oracle
@@ -78,10 +88,15 @@ def _env_subset(env_var, names):
 
 BACKENDS = _env_subset("REPRO_CONFORMANCE_BACKENDS", registry.list_backends())
 POLICIES = _env_subset("REPRO_CONFORMANCE_POLICIES", ("float32", "bfloat16"))
-# whole-pyramid fusion variants: every backend is exercised both with the
-# fused single-launch plan and the per-level one ('on' is honoured only
-# by fusable backends — elsewhere it's a no-op, which this matrix proves)
-FUSES = _env_subset("REPRO_CONFORMANCE_FUSE", ("off", "on"))
+# fusion tiers: every backend is exercised per-level ('off'), with a
+# strict partial-fusion prefix ('prefix' — one fused launch over level 0
+# plus a per-level tail; k=1 is the only strict tier a 2-level pyramid
+# has) and with the whole-pyramid single launch ('full').  Fusion pins
+# are honoured only by fusable backends — elsewhere they're a no-op,
+# which this matrix proves.
+FUSES = _env_subset("REPRO_CONFORMANCE_FUSE", ("off", "prefix", "full"))
+# tier name -> the spec's fuse_levels pin that commits it
+_FUSE_PIN = {"off": "off", "prefix": "prefix:1", "full": "on"}
 SPARSITIES = _env_subset("REPRO_CONFORMANCE_SPARSITY", ("off", "topk"))
 
 
@@ -126,7 +141,7 @@ def _spec(policy, *, train=False, levels=LEVELS, q=Q, h=H, d=D, p=P,
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_fwd_matches_ref_oracle(backend, policy, fuse):
     value, loc, attn = _inputs()
-    plan = msda_plan(_spec(policy, fuse=fuse), backend=backend)
+    plan = msda_plan(_spec(policy, fuse=_FUSE_PIN[fuse]), backend=backend)
     out = plan(value, loc, attn)
     ref = msda_ref(value, LEVELS, loc, attn)
     assert out.shape == ref.shape and out.dtype == ref.dtype
@@ -165,7 +180,8 @@ def test_bf16_policy_commits_bf16_slabs(backend, policy):
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_vjp_matches_ref_oracle(backend, policy, fuse):
     value, loc, attn = _inputs()
-    plan = msda_plan(_spec(policy, train=True, fuse=fuse), backend=backend)
+    plan = msda_plan(_spec(policy, train=True, fuse=_FUSE_PIN[fuse]),
+                     backend=backend)
 
     g = jax.grad(lambda v, l, a: jnp.sum(plan(v, l, a) ** 2),
                  argnums=(0, 1, 2))(value, loc, attn)

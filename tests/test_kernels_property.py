@@ -153,38 +153,67 @@ def test_bf16_slab_never_narrows_blocks(args):
 
 @given(spec_dims)
 @settings(**SET)
-def test_fusion_rung_respects_vmem_fitting_model(args):
-    """The fusion rung's 'auto' decision is exactly the documented
-    fitting model: packed-pyramid residency (+ train grad super-slab)
-    plus one minimal query step's working set within the budget — and
-    'on'/'off' pin it regardless."""
+def test_fusion_tier_respects_vmem_fitting_model(args):
+    """The fusion tier's 'auto' decision is exactly the documented
+    prefix model: ``ops.fusion_prefix`` walks k from L down until the
+    packed prefix residency (+ train grad super-slab) plus one minimal
+    query step's working set fits the budget — k == L fully fuses,
+    2 <= k < L commits a strict prefix, k < 2 falls back to per-level.
+    'on'/'off'/'prefix:k' pin the tier regardless."""
     levels, P, D, Q, budget, train, slab = args
+    L = len(levels)
     mk = lambda fuse: plan_mod.MsdaSpec(
         spatial_shapes=levels, num_heads=2, head_dim=D, num_points=P,
         num_queries=Q, train=train, vmem_budget=budget, slab_dtype=slab,
         fuse_levels=fuse)
     spec = mk("auto")
     dts = plan_mod._default_slab_dtypes(spec)
-    decided = plan_mod._resolve_fuse_levels(spec, dts, "pallas")
-    fits = ops.fused_pyramid_fits(
-        levels, P, D, value_itemsize=spec.slab_itemsize, train=train,
-        vmem_budget=spec.vmem_budget, accum_itemsize=spec.accum_itemsize)
-    if len(levels) >= 2:
-        assert decided == fits
+    fused, prefix = plan_mod._resolve_fuse_tier(spec, dts, "pallas")
+    k_model = ops.fusion_prefix(
+        levels, P, D, value_itemsize=plan_mod._slab_itemsizes(dts),
+        train=train, vmem_budget=spec.vmem_budget,
+        accum_itemsize=spec.accum_itemsize)
+    if L >= 2:
+        if k_model == L:
+            assert (fused, prefix) == (True, 0)  # whole pyramid
+        elif k_model >= 2:
+            assert (fused, prefix) == (True, k_model)  # strict tier
+        else:
+            assert (fused, prefix) == (False, 0)  # per-level
+        # the k == L rung is the historical whole-pyramid fitting model
+        fits = ops.fused_pyramid_fits(
+            levels, P, D, value_itemsize=spec.slab_itemsize, train=train,
+            vmem_budget=spec.vmem_budget, accum_itemsize=spec.accum_itemsize)
+        assert (k_model == L) == fits
         rows = sum(ops.slab_rows(hw) for hw in levels)
         resident = rows * D * spec.slab_itemsize
         if train:
             resident += rows * D * spec.accum_itemsize
         per_q = ops.per_query_bytes(P, D, train=train,
                                     slab_itemsize=spec.slab_itemsize,
-                                    levels=len(levels))
+                                    levels=L)
         assert fits == (resident + 8 * per_q <= spec.vmem_budget)
+        # every committed prefix actually fits its own residency model
+        if 0 < k_model:
+            kth = ops.fusion_prefix(
+                levels[:k_model], P, D,
+                value_itemsize=plan_mod._slab_itemsizes(dts[:k_model]),
+                train=train, vmem_budget=spec.vmem_budget,
+                accum_itemsize=spec.accum_itemsize)
+            assert kth == k_model
     else:
-        assert not decided  # single level: nothing to fuse
-    assert plan_mod._resolve_fuse_levels(mk("on"), dts, "pallas")
-    assert not plan_mod._resolve_fuse_levels(mk("off"), dts, "pallas")
+        assert (fused, prefix) == (False, 0)  # single level: nothing to fuse
+    assert plan_mod._resolve_fuse_tier(mk("on"), dts, "pallas") == (True, 0)
+    assert plan_mod._resolve_fuse_tier(mk("off"), dts, "pallas") == (False, 0)
+    if L >= 3:
+        # a strict pin commits exactly that tier; k >= L degenerates to
+        # the whole pyramid (prefix 0 == "all levels")
+        assert plan_mod._resolve_fuse_tier(
+            mk(f"prefix:{L - 1}"), dts, "pallas") == (True, L - 1)
+    assert plan_mod._resolve_fuse_tier(
+        mk(f"prefix:{L + 3}"), dts, "pallas") == (True, 0)
     # non-fusable backends never fuse, whatever the policy says
-    assert not plan_mod._resolve_fuse_levels(mk("on"), dts, "cpu")
+    assert plan_mod._resolve_fuse_tier(mk("on"), dts, "cpu") == (False, 0)
 
 
 # --------------------------------------------------------------------------
@@ -202,8 +231,8 @@ cache_entries = st.dictionaries(
                     st.sampled_from(["float32", "bfloat16"]), min_size=2, max_size=2),
             },
             # entries grew OPTIONAL fields: "sharding"/"grad_reduce"
-            # (mesh-keyed race winners), "fuse_levels" (whole-pyramid
-            # fusion race), "onehot_levels" (MXU-routing race) and
+            # (mesh-keyed race winners), "fuse_levels" / "fuse_prefix"
+            # (fusion-tier race), "onehot_levels" (MXU-routing race) and
             # "sparsity"/"query_order" (pruning/Morton races) — any
             # subset must keep parsing, pre-existing entries included.
             # Keys NO build knows ("future_field"...) must ride through
@@ -211,6 +240,7 @@ cache_entries = st.dictionaries(
             optional={
                 "sharding": st.sampled_from(["1d", "2d"]),
                 "fuse_levels": st.booleans(),
+                "fuse_prefix": st.integers(1, 4),
                 "onehot_levels": st.lists(st.booleans(), min_size=2, max_size=2),
                 "grad_reduce": st.sampled_from(["ring", "psum"]),
                 "sparsity": st.sampled_from(["dense", "topk"]),
@@ -253,6 +283,7 @@ def test_autotune_cache_roundtrips_through_xdg_cache_home(tmp_path_factory, entr
                 assert parsed["sharding"] == hit.get("sharding")
                 assert parsed["grad_reduce"] == hit.get("grad_reduce")
                 assert parsed["fuse_levels"] == hit.get("fuse_levels")
+                assert parsed["fuse_prefix"] == hit.get("fuse_prefix")
                 oh = hit.get("onehot_levels")
                 assert parsed["onehot_levels"] == (
                     tuple(oh) if oh is not None else None)

@@ -1,0 +1,109 @@
+"""PlanStore schema migration: every historical version still restores.
+
+``tests/data/plan_store_v{1..5}.json`` are frozen stores as the v1-v5
+schemas wrote them (v1 flat-list winners, v2 per-level slab dtypes, v3
+fusion + one-hot routing decisions, v4 heuristic entries, v5 sparsity
+axes + a newer-build extra field).  Each must restore on the current
+build with ZERO autotune timing runs and re-save as a version-6 store
+without dropping any winner decision — the compatibility promise the
+version-history comment in ``repro/serving/persistence.py`` makes.
+"""
+import json
+import os
+
+import pytest
+
+from repro.kernels import plan as plan_mod
+from repro.serving import persistence
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+@pytest.fixture(autouse=True)
+def _isolated(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MSDA_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    plan_mod.clear_plans()
+    plan_mod.reset_autotune_stats()
+    yield
+    plan_mod.clear_plans()
+
+
+def _fixture(version):
+    return os.path.join(DATA, f"plan_store_v{version}.json")
+
+
+def _winner_of(path):
+    with open(path) as f:
+        data = json.load(f)
+    entry = data["entries"][0]
+    return entry.get("winner"), entry
+
+
+@pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
+def test_historic_store_restores_with_zero_races(version, tmp_path):
+    report = persistence.PlanStore(_fixture(version)).restore()
+    assert not report.skipped, report.skipped
+    assert len(report.plans) == 1
+    assert report.describe_mismatches == []
+    assert plan_mod.autotune_stats()["raced"] == 0, \
+        f"v{version} restore ran a timing race"
+    winner, entry = _winner_of(_fixture(version))
+    assert report.seeded_winners == (1 if winner is not None else 0)
+
+    # the restored plan carries the stored decisions, not re-derived ones
+    plan = report.plans[0]
+    assert plan.backend == entry["backend"]
+    if isinstance(winner, list):  # v1 flat block_q list
+        assert list(plan.tuning.block_q) == winner
+    elif isinstance(winner, dict):
+        assert list(plan.tuning.block_q) == winner["block_q"]
+        if "slab_dtypes" in winner:
+            assert list(plan.tuning.slab_dtypes) == winner["slab_dtypes"]
+        if "fuse_levels" in winner:
+            assert plan.fused == winner["fuse_levels"]
+        if "onehot_levels" in winner:
+            assert list(plan.tuning.onehot_levels) == winner["onehot_levels"]
+        if "sparsity" in winner:
+            assert plan.tuning.sparsity == winner["sparsity"]
+
+    # re-save: the store comes out at the CURRENT version with every
+    # winner decision intact (the upgrade path a rolling fleet follows)
+    out = persistence.PlanStore(str(tmp_path / "resaved.json"))
+    assert out.save_plans(report.plans) == 1
+    with open(out.path) as f:
+        resaved = json.load(f)
+    assert resaved["version"] == persistence.PLAN_STORE_VERSION
+    if winner is not None:
+        re_winner = resaved["entries"][0]["winner"]
+        if isinstance(winner, list):
+            assert re_winner["block_q"] == winner
+        else:
+            for field in ("block_q", "slab_dtypes", "fuse_levels",
+                          "onehot_levels", "sparsity"):
+                if field in winner:
+                    assert re_winner[field] == winner[field], field
+        # pre-v6 winners never grow a fuse_prefix: absent keeps meaning
+        # "fuse everything fuse_levels says to"
+        assert "fuse_prefix" not in re_winner
+
+    # the resaved v6 store round-trips again, still race-free
+    plan_mod.clear_plans()
+    os.environ["REPRO_MSDA_AUTOTUNE_CACHE"] = str(tmp_path / "autotune2.json")
+    plan_mod.reset_autotune_stats()
+    again = persistence.PlanStore(out.path).restore()
+    assert len(again.plans) == 1 and not again.skipped
+    assert plan_mod.autotune_stats()["raced"] == 0
+    assert (persistence._norm_describe(again.plans[0].describe())
+            == persistence._norm_describe(plan.describe()))
+
+
+def test_newer_build_extras_survive_the_winner_cache(tmp_path):
+    """The v5 fixture's winner carries a field only a newer build knows
+    (``fleet_epoch``) — it must ride through seeding and be served back
+    by the winner cache untouched, per the extras contract."""
+    report = persistence.PlanStore(_fixture(5)).restore()
+    assert len(report.plans) == 1
+    plan = report.plans[0]
+    cached = plan_mod.get_autotune_winner(plan.spec, plan.backend)
+    assert cached is not None and cached.get("fleet_epoch") == 3

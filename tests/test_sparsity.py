@@ -229,16 +229,17 @@ def test_winner_cache_preserves_unknown_keys():
 
 
 def test_sparsity_winners_survive_plan_store_roundtrip(tmp_path, monkeypatch):
-    """Acceptance: auto-axis winners survive a PlanStore v5 save/restore
+    """Acceptance: auto-axis winners survive a PlanStore save/restore
     with zero timing runs and identical describe()."""
-    from repro.serving.persistence import PlanStore, _norm_describe
+    from repro.serving.persistence import (PLAN_STORE_VERSION, PlanStore,
+                                           _norm_describe)
 
     spec = _spec("auto", "auto", train=True)
     plan = msda_plan(spec, backend="cpu", tune="autotune")
     store = PlanStore(str(tmp_path / "plans.json"))
     assert store.save_plans([plan]) == 1
     raw = json.load(open(tmp_path / "plans.json"))
-    assert raw["version"] == 5
+    assert raw["version"] == PLAN_STORE_VERSION
 
     pm.clear_plans()
     pm.reset_autotune_stats()
