@@ -75,16 +75,29 @@ def save_async(state, directory: str, step: int, *, keep_last: int = 3) -> threa
     return t
 
 
+def _step_number(entry: str) -> Optional[int]:
+    """``"step_00000007"`` -> 7; None for anything malformed (``step_``,
+    ``step_final``, ...) — junk entries must never make listing raise."""
+    try:
+        return int(entry.split("_", 1)[1])
+    except (IndexError, ValueError):
+        return None
+
+
 def available_steps(directory: str) -> list:
-    """All committed step numbers, ascending (empty when none)."""
+    """All committed step numbers, ascending (empty when none — a
+    missing, empty, or junk-entry-only directory is not an error)."""
     if not os.path.isdir(directory):
         return []
-    return sorted(
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-        and os.path.exists(os.path.join(directory, d, "manifest.json"))
-    )
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        n = _step_number(d)
+        if n is not None and os.path.exists(
+                os.path.join(directory, d, "manifest.json")):
+            steps.append(n)
+    return sorted(steps)
 
 
 def latest_step(directory: str) -> Optional[int]:

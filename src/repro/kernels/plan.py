@@ -2074,6 +2074,75 @@ class MsdaPlan:
                 f"{100 * r['vmem_frac']:<6.1f} {100 * r['vmem_frac_predicted']:.1f}")
         return "\n".join(lines)
 
+    # -- degradation ladder -----------------------------------------------
+    def rung_label(self) -> str:
+        """Short human token for this plan's ladder rung, e.g.
+        ``"pallas/fused+topk"`` / ``"pallas/per-level"`` / ``"ref"``."""
+        if self.backend == "ref":
+            return "ref"
+        traits = []
+        if self.fused:
+            traits.append("fused")
+        if self.tuning.sparsity == "topk":
+            traits.append("topk")
+        if self.tuning.query_order == "morton":
+            traits.append("morton")
+        return f"{self.backend}/{'+'.join(traits) if traits else 'per-level'}"
+
+    def fallback(self, *, mesh=None) -> Optional["MsdaPlan"]:
+        """One rung down the degradation ladder (None at the bottom).
+
+        The ladder walks from most- to least-optimised, one committed
+        decision at a time::
+
+            sparse / reordered (topk, morton)  ->  dense identity, same backend
+            fused (whole-pyramid or prefix)    ->  per-level, same backend
+            per-level dense, non-ref backend   ->  the "ref" oracle
+            ref                                ->  None (nothing below the oracle)
+
+        Built RACE-FREE from the existing spec: the demoted plan pins
+        the axes it drops (``sparsity="off"``, ``query_order=
+        "identity"``, ``fuse_levels="off"``) and is constructed with
+        ``tune="heuristic"`` — no autotune timing run executes and no
+        winner is ever persisted, so a circuit-breaker demotion cannot
+        poison the winner cache with panic-built plans (conformance:
+        every rung is numerically consistent with the primary — see
+        ``tests/conformance.py``).  Mesh-carrying plans need the live
+        ``mesh`` object to rebuild their shard wiring; demoting one
+        without it raises rather than silently going local.
+        """
+        if self.mesh_axes and mesh is None:
+            raise ValueError(
+                f"mesh-carrying plan (mode={self.sharding_mode}) needs "
+                "mesh= to build its fallback rung")
+        s = self.spec
+        if self.tuning.sparsity == "topk" or self.tuning.query_order == "morton":
+            ns = dataclasses.replace(s, sparsity="off", query_order="identity")
+            backend = self.backend
+        elif self.fused:
+            ns = dataclasses.replace(s, sparsity="off", query_order="identity",
+                                     fuse_levels="off")
+            backend = self.backend
+        elif self.backend != "ref":
+            ns = dataclasses.replace(s, sparsity="off", query_order="identity",
+                                     fuse_levels="off")
+            backend = "ref"
+        else:
+            return None
+        return msda_plan(ns, backend=backend, tune="heuristic", mesh=mesh,
+                         query_parallel=self.query_parallel,
+                         interpret=self.tuning.interpret)
+
+    def fallback_chain(self, *, mesh=None) -> Tuple["MsdaPlan", ...]:
+        """Every rung below this plan, top to bottom (ends at the ref
+        oracle; empty for a plan already on the bottom rung)."""
+        chain: List[MsdaPlan] = []
+        p = self.fallback(mesh=mesh)
+        while p is not None:
+            chain.append(p)
+            p = p.fallback(mesh=mesh)
+        return tuple(chain)
+
 
 # --------------------------------------------------------------------------
 # the plan cache (explicit, bounded — replaces the old unbounded lru_cache

@@ -16,6 +16,16 @@ Serving-runtime extras:
     # entries — the process exits non-zero otherwise.
     PYTHONPATH=src python -m repro.launch.serve --serving-smoke \
         --store /tmp/store/plans.json --compile-cache /tmp/store/xla-cache
+
+    # CI chaos smoke: clean boot proves zero resilience overhead, then a
+    # second boot under a SEEDED fault schedule (executor raises,
+    # straggler ticks, boot-time store corruption) must give every
+    # admitted request a typed response and drive the circuit breaker
+    # through a full demote -> half-open -> close cycle.  --bench-out
+    # writes the event counts BENCH_resilience.json gates.
+    PYTHONPATH=src python -m repro.launch.serve --chaos-smoke \
+        --store /tmp/chaos/plans.json --fault-seed 7 \
+        --bench-out /tmp/chaos/BENCH_resilience.json
 """
 from __future__ import annotations
 
@@ -122,6 +132,253 @@ def serving_smoke(arch: str, store_path: str, compile_cache_dir: str,
     return summary
 
 
+def resilience_smoke(arch: str, store_path: str, *, fault_seed: int = 7,
+                     bench_out: str = None, slots: int = 1,
+                     capacity: int = 64) -> dict:
+    """Chaos smoke: seeded faults, typed responses, breaker cycle.
+
+    Three self-asserting phases (``docs/serving.md`` §Resilience):
+
+    1. **Clean boot** — no injector: traffic must show zero sheds, zero
+       transitions, zero retries, NO fallback rungs built, and zero
+       request-time traces (the resilience layer is free on the healthy
+       path).  This boot also persists the plan store phase 2 corrupts.
+    2. **Chaos boot** — a seeded :class:`FaultSchedule` with all three
+       serving kinds: ``corrupt_store`` damages the store at boot (the
+       engine must cold-warm + re-persist), ``exec_raise`` arms enough
+       decode failures to open the breaker and demote to the jit rung,
+       ``straggler`` stalls one tick.  Admission (``max_queue=3``) sheds
+       the over-submitted burst; one request carries a short deadline
+       and times out.  EVERY submitted request must end with a typed
+       ``ServeResponse`` — no silent drops.
+    3. **Plan-breaker incident** — a second seeded schedule drives a
+       :func:`repro.serving.resilience.guard_plan` breaker over the
+       warmed MSDA plan through demote -> half-open probe -> close,
+       TWICE with fresh guards from the same seed: both runs must make
+       identical decisions (the reproducibility contract).
+    """
+    from repro.kernels import plan as plan_mod
+    from repro.runtime.faults import (
+        SERVING_FAULT_KINDS, FaultInjector, FaultSchedule)
+    from repro.serving import aot, persistence, resilience
+
+    cfg = reduced(get_config(arch))
+    params = train_state.init_model(jax.random.PRNGKey(0), cfg)
+    vc = cfg.vision
+    rng = np.random.default_rng(0)
+    policy = resilience.ResilienceConfig(
+        max_queue=3, max_retries=1, breaker_threshold=2, probe_interval=2)
+
+    def _requests(n, deadline_rid=None):
+        S = sum(h * w for h, w in vc.levels)
+        out = []
+        for i in range(n):
+            out.append(Request(
+                rid=i, prompt=np.arange(4, dtype=np.int32) + i, max_new=3,
+                pyramid=rng.standard_normal((S, vc.vision_dim)).astype(np.float32),
+                deadline_ticks=2 if i == deadline_rid else None))
+        return out
+
+    # -- phase 1: clean boot — resilience must be free ---------------------
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity,
+                      store_path=store_path, resilience=policy)
+    eng.warmup(prompt_lengths=(4,))
+    clean_reqs = _requests(2)
+    exec0 = plan_mod.execution_telemetry()
+    with aot.probe() as probe:
+        for r in clean_reqs:
+            eng.submit(r)
+        eng.run()
+    clean_state = eng.resilience_state()
+    clean = {
+        "request_traces": probe.traces, "request_compiles": probe.compiles,
+        "sheds": clean_state["sheds"],
+        "transitions": sum(len(e["transitions"])
+                           for e in clean_state["executors"].values()),
+        "retries": sum(e["retries"] for e in clean_state["executors"].values()),
+        "rungs_built": max(len(e["rungs_built"])
+                           for e in clean_state["executors"].values()),
+        "new_plan_builds": (plan_mod.execution_telemetry()["plan_cache"]["misses"]
+                            - exec0["plan_cache"]["misses"]),
+    }
+    assert all(r.response is not None and r.response.ok for r in clean_reqs), \
+        "clean run: non-ok response"
+    assert clean["request_traces"] == 0 and clean["request_compiles"] == 0, clean
+    assert clean["sheds"] == 0 and clean["transitions"] == 0 \
+        and clean["retries"] == 0 and clean["new_plan_builds"] == 0, clean
+    assert clean["rungs_built"] == 1, (
+        f"clean run materialised fallback rungs: {clean}")
+    eng.shutdown()
+    del eng
+
+    # -- phase 2: chaos boot on the now-corruptible store ------------------
+    # seeded schedule; n_faults == len(kinds) guarantees every serving
+    # kind fires exactly once (kinds cycle a seeded permutation)
+    sched = FaultSchedule.generate(fault_seed, 8, n_faults=3,
+                                   kinds=SERVING_FAULT_KINDS)
+    sched2 = FaultSchedule.generate(fault_seed, 8, n_faults=3,
+                                    kinds=SERVING_FAULT_KINDS)
+    assert sched.describe() == sched2.describe(), "seeded schedule drifted"
+    kinds_fired = sorted(e.kind for e in sched.events.values())
+    assert kinds_fired == sorted(SERVING_FAULT_KINDS), kinds_fired
+    # 4 armed raises = breaker_threshold * (max_retries + 1): enough to
+    # exhaust two consecutive decode calls and open the breaker
+    inj = FaultInjector(sched, raise_target="decode", raise_attempts=4,
+                        straggler_s=0.01)
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity,
+                      store_path=store_path, resilience=policy, faults=inj)
+    assert eng.boot_faults, "corrupt_store fault did not fire at boot"
+    assert eng.restore_report is None, "engine restored from a corrupt store"
+    assert persistence.PlanStore(store_path).load() is not None, \
+        "chaos boot did not re-persist the store"
+    eng.warmup(prompt_lengths=(4,))
+    chaos_reqs = _requests(5, deadline_rid=2)
+    for r in chaos_reqs:
+        eng.submit(r)
+    eng.run(max_ticks=64)
+    # the burst may finish before the later scheduled ticks: keep
+    # follow-up traffic flowing until every seeded fault has fired and
+    # every armed raise is consumed (deterministic — the loop is a pure
+    # function of the seeded schedule)
+    # function of the seeded schedule).  Traffic also continues until
+    # the demoted decode breaker has probed its primary and re-closed —
+    # the full demote -> half-open -> close cycle on the live engine.
+    extra = []
+    while (inj.pending_raises or inj.schedule.events
+           or eng._decode_guard.rung > 0) and len(extra) < 8:
+        r = _requests(1)[0]
+        r.rid = 100 + len(extra)
+        extra.append(r)
+        eng.submit(r)
+        eng.run(max_ticks=32)
+    chaos_state = eng.resilience_state()
+    statuses = sorted(r.response.status if r.response else "MISSING"
+                      for r in chaos_reqs)
+    by_status = {s: statuses.count(s) for s in set(statuses)}
+    assert "MISSING" not in by_status, (
+        f"request dropped without a typed response: {by_status}")
+    assert all(r.response is not None for r in extra), \
+        "follow-up request dropped without a typed response"
+    assert by_status.get("shed", 0) == 2, by_status  # rids 3, 4: queue at 3
+    assert by_status.get("timeout", 0) >= 1, by_status  # rid 2's deadline
+    decode_t = [t[0] for t in chaos_state["executors"]["decode"]["transitions"]]
+    assert decode_t and decode_t[0] == "open" and decode_t[-1] == "closed" \
+        and "half_open" in decode_t, (
+        f"decode breaker cycle incomplete: {decode_t}")
+    assert inj.pending_raises == 0, "armed executor raises left unconsumed"
+    assert not inj.schedule.events, f"unfired faults: {inj.schedule.describe()}"
+    m = eng.metrics.snapshot()
+    assert m["stragglers"] == 1, m["stragglers"]
+    eng.shutdown()
+    del eng
+
+    # -- phase 3: plan-breaker incident, twice, same seed ------------------
+    from repro.serving.engine import warmup_msda_plans
+
+    def plan_incident():
+        plan_mod.clear_plans()
+        plans = warmup_msda_plans(cfg)
+        # pick a plan with at least one fallback rung (heuristic-built,
+        # never persisted); the bottom-of-ladder ref plan has none
+        plan = next(p for p in plans if p.fallback() is not None)
+        s = FaultSchedule.generate(fault_seed + 1, 4, n_faults=1,
+                                   kinds=("exec_raise",))
+        pinj = FaultInjector(s, raise_target="plan", raise_attempts=4)
+        g = resilience.guard_plan(plan, policy, injector=pinj, name="plan",
+                                  engine="chaos")
+        structs = aot.plan_arg_structs(plan.spec, 1)
+        prng = np.random.default_rng(3)
+        args = tuple(prng.standard_normal(st.shape).astype(st.dtype)
+                     for st in structs)
+        outcomes = []
+        [pinj.begin_tick(t) for t in range(4)]  # arm the scheduled raises
+        for _ in range(8):
+            try:
+                g.call(*args)
+                outcomes.append("ok")
+            except resilience.ExecutorFailure:
+                outcomes.append("fail")
+        return outcomes, list(g.transitions), g.rung_labels(), list(pinj.log)
+
+    out1, trans1, rungs1, log1 = plan_incident()
+    out2, trans2, rungs2, log2 = plan_incident()
+    assert (out1, trans1, rungs1, log1) == (out2, trans2, rungs2, log2), (
+        "plan incident is not reproducible under the same seed")
+    t_kinds = [t[0] for t in trans1]
+    assert t_kinds[0] == "open" and "half_open" in t_kinds \
+        and t_kinds[-1] == "closed" and trans1[-1][1] == 0, trans1
+    assert len(rungs1) >= 2, f"ladder never materialised: {rungs1}"
+
+    summary = {
+        "arch": cfg.name,
+        "clean": clean,
+        "chaos": {
+            "fault_schedule": sched.describe(),
+            "responses": by_status,
+            "untyped_requests": statuses.count("MISSING"),
+            "sheds": chaos_state["sheds"],
+            "deadline_misses": chaos_state["deadline_misses"],
+            "exec_errors": chaos_state["exec_errors"],
+            "stragglers": chaos_state["stragglers"],
+            "boot_corruptions": len(chaos_state["boot_faults"]),
+            "decode_transitions": decode_t,
+        },
+        "plan_breaker": {
+            "transitions": trans1,
+            "rungs": rungs1,
+            "outcomes": out1,
+            "reproducible": True,
+        },
+    }
+    print(json.dumps(summary, indent=1))
+    if bench_out:
+        from repro.obs import bench as obs_bench
+
+        results = {
+            "untyped_requests": 0,
+            "clean_request_traces": clean["request_traces"],
+            "clean_sheds": clean["sheds"],
+            "clean_transitions": clean["transitions"],
+            "clean_rungs_built": clean["rungs_built"],
+            "responses_ok": by_status.get("ok", 0),
+            "responses_shed": by_status.get("shed", 0),
+            "responses_timeout": by_status.get("timeout", 0),
+            "responses_error": by_status.get("error", 0),
+            "boot_corruptions": len(chaos_state["boot_faults"]),
+            "stragglers": chaos_state["stragglers"],
+            "decode_breaker_opens": decode_t.count("open"),
+            "decode_breaker_closes": decode_t.count("closed"),
+            "breaker_opens": t_kinds.count("open"),
+            "breaker_closes": t_kinds.count("closed"),
+            "plan_rungs_exercised": len(rungs1),
+        }
+        gate = [
+            # structural: chaos event counts are seeded + deterministic,
+            # they must not grow (a drop is a structural win)
+            obs_bench.gate_rule("untyped_requests", "lower", 0.0),
+            obs_bench.gate_rule("clean_*", "lower", 0.0),
+            obs_bench.gate_rule("responses_error", "lower", 0.0),
+            obs_bench.gate_rule("responses_timeout", "lower", 0.0),
+            # the recovery machinery must keep firing under the seed
+            obs_bench.gate_rule("responses_ok", "higher", 0.0),
+            obs_bench.gate_rule("boot_corruptions", "higher", 0.0),
+            obs_bench.gate_rule("breaker_closes", "higher", 0.0),
+            obs_bench.gate_rule("decode_breaker_closes", "higher", 0.0),
+            obs_bench.gate_rule("plan_rungs_exercised", "higher", 0.0),
+        ]
+        import dataclasses as _dc
+
+        path = obs_bench.write_bench(
+            bench_out, bench="serving_resilience", results=results,
+            config={"arch": cfg.name, "fault_seed": fault_seed,
+                    "slots": slots, "policy": _dc.asdict(policy)},
+            note="seeded chaos smoke: typed responses, breaker cycle, "
+                 "boot store corruption (repro.launch.serve --chaos-smoke)",
+            events=summary["chaos"]["fault_schedule"], gate=gate)
+        print(f"[serve] resilience bench -> {path}")
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -150,6 +407,14 @@ def main() -> None:
                          "the sharding modes — see docs/sharding.md")
     ap.add_argument("--serving-smoke", action="store_true",
                     help="self-asserting double-boot CI smoke (see docstring)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="self-asserting resilience smoke under a seeded "
+                         "fault schedule (see docstring)")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="seed for the chaos smoke's FaultSchedule")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the chaos smoke's BENCH_resilience payload "
+                         "here (gated by tools/bench_gate.py)")
     ap.add_argument("--metrics-out", default=None,
                     help="dump the obs metrics registry at exit "
                          "(.json -> JSON, else Prometheus text)")
@@ -178,6 +443,19 @@ def main() -> None:
             serving_smoke(args.arch or "phi-3-vision-4.2b", args.store,
                           args.compile_cache,
                           slots=args.slots or 2, capacity=args.capacity or 64)
+        finally:
+            _export()
+        return
+
+    if args.chaos_smoke:
+        if not args.store:
+            ap.error("--chaos-smoke needs --store")
+        try:
+            resilience_smoke(args.arch or "phi-3-vision-4.2b", args.store,
+                             fault_seed=args.fault_seed,
+                             bench_out=args.bench_out,
+                             slots=args.slots or 1,
+                             capacity=args.capacity or 64)
         finally:
             _export()
         return

@@ -26,8 +26,10 @@ from __future__ import annotations
 
 from repro.obs.registry import (  # noqa: F401
     Counter,
+    EventWindow,
     Gauge,
     Histogram,
+    NumericWindow,
     Registry,
     REGISTRY,
     counter,

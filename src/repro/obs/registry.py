@@ -141,6 +141,69 @@ class Histogram(_Metric):
                     for k, row in self._series.items()}
 
 
+class EventWindow:
+    """A bounded ring of raw observations with EXACT aggregate stats.
+
+    The pattern :class:`Histogram` uses internally, packaged for any
+    long-lived recorder that must not grow without bound (serving
+    latency samples, training step times): raw items are kept only for
+    the last ``window`` observations (percentiles, trajectories), while
+    ``count`` / ``total`` / ``max`` stay exact over the full lifetime —
+    so summary shapes built on top of it are unchanged except that p50
+    becomes windowed (mean and max remain exact).
+    """
+
+    def __init__(self, window: int = _HIST_WINDOW):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.window = int(window)
+        self._items: List[Any] = []
+        self.count = 0
+
+    def append(self, item: Any) -> None:
+        self.count += 1
+        self._items.append(item)
+        if len(self._items) > self.window:
+            del self._items[: len(self._items) - self.window]
+
+    def items(self) -> List[Any]:
+        """The windowed raw items (newest last)."""
+        return list(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __bool__(self) -> bool:
+        return self.count > 0
+
+
+class NumericWindow(EventWindow):
+    """:class:`EventWindow` over floats with exact total/max running."""
+
+    def __init__(self, window: int = _HIST_WINDOW):
+        super().__init__(window)
+        self.total = 0.0
+        self.max = 0.0
+
+    def append(self, item: float) -> None:  # type: ignore[override]
+        v = float(item)
+        super().append(v)
+        self.total += v
+        self.max = max(self.max, v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    @property
+    def p50(self) -> float:
+        w = sorted(self._items)
+        return w[len(w) // 2] if w else 0.0
+
+
 class Scope:
     """Delta view over a registry's counters/histograms since entry."""
 

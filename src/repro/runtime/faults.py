@@ -1,0 +1,285 @@
+"""Shared deterministic fault injection: training steps AND serving ticks.
+
+Grown out of ``training/faults.py`` (which now re-exports this module):
+every recovery path — the training harness's checkpointed restarts and
+the serving engine's resilience layer — must be testable under the
+4-virtual-device conftest, so faults are *data*, not monkeypatches: a
+:class:`FaultSchedule` is an explicit (or seeded) list of
+:class:`FaultEvent`, each fired exactly once when the runtime reaches
+its step (training: optimizer step; serving: engine tick).  Because the
+schedule and the runtime around it are deterministic, two runs with the
+same schedule make IDENTICAL recovery decisions — which
+``tests/test_checkpoint_ft.py`` and ``tests/test_serving_resilience.py``
+assert literally.
+
+Training kinds (fired by ``training.harness.TrainingHarness``):
+
+* ``"host_loss"`` — raised BEFORE the step runs: the process "dies" and
+  the harness restores the newest checkpoint (losing any steps since).
+* ``"preempt"`` — raised AFTER the step computed but BEFORE it commits:
+  the classic mid-step preemption; the finished step's work is lost.
+* ``"corrupt_ckpt"`` — truncates the newest on-disk checkpoint, then
+  dies like ``host_loss``; recovery must fall back to the PREVIOUS
+  step (``checkpoint.manager.restore_latest_valid``).
+
+Serving kinds (fired by :class:`FaultInjector`, consumed by
+``serving/resilience.py`` + ``ServeEngine``):
+
+* ``"exec_raise"`` — arms N consecutive primary-executor attempts to
+  raise :class:`InjectedExecutorError` (N = the injector's
+  ``raise_attempts``): one armed attempt exercises retry-with-backoff,
+  enough of them exhaust the retry budget and drive the circuit
+  breaker's demote -> half-open -> close cycle.
+* ``"straggler"`` — the tick straggles: the engine stalls
+  ``straggler_s`` and records a straggler event (deadline sweeps then
+  see the lost time).
+* ``"corrupt_store"`` — damages the serving ``PlanStore`` file; fired
+  at BOOT (before the store is read) regardless of the scheduled step,
+  so a seeded schedule can include it without knowing boot timing —
+  the engine must degrade to a cold warm-up + re-persist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+
+TRAINING_FAULT_KINDS = ("host_loss", "preempt", "corrupt_ckpt")
+SERVING_FAULT_KINDS = ("exec_raise", "straggler", "corrupt_store")
+FAULT_KINDS = TRAINING_FAULT_KINDS + SERVING_FAULT_KINDS
+
+
+class HostLoss(RuntimeError):
+    """Simulated host/process loss (the harness restores and resumes)."""
+
+
+class Preemption(RuntimeError):
+    """Simulated mid-step preemption (the in-flight step is discarded)."""
+
+
+class InjectedExecutorError(RuntimeError):
+    """Simulated executor failure (the resilience layer retries/demotes)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+
+
+class FaultSchedule:
+    """An ordered, fire-once schedule of injected faults.
+
+    Each event fires the FIRST time the runtime reaches its step —
+    replayed steps after a recovery do NOT re-trigger it (a real host
+    doesn't die twice from one failure).  ``describe()`` returns the
+    schedule as plain dicts for telemetry.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self.events: Dict[int, FaultEvent] = {}
+        for e in events:
+            if e.step in self.events:
+                raise ValueError(f"two faults scheduled at step {e.step}")
+            self.events[e.step] = e
+        self.fired: List[FaultEvent] = []
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultSchedule":
+        """Parse the CLI format: ``"host_loss@5,corrupt_ckpt@9"``."""
+        events = []
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            kind, _, step = tok.partition("@")
+            if not step:
+                raise ValueError(f"fault {tok!r} is not kind@step")
+            events.append(FaultEvent(step=int(step), kind=kind))
+        return cls(events)
+
+    @classmethod
+    def generate(cls, seed: int, total_steps: int, *, n_faults: int = 2,
+                 kinds: Sequence[str] = TRAINING_FAULT_KINDS) -> "FaultSchedule":
+        """Seeded random schedule — same seed, same faults, every run.
+
+        Steps are drawn without replacement from ``[1, total_steps)``
+        (step 0 has no checkpoint to recover to yet), kinds cycle
+        through a seeded permutation of ``kinds``.  The default kinds
+        stay the TRAINING set so historical seeds keep producing the
+        schedules they always did; serving callers pass
+        ``kinds=SERVING_FAULT_KINDS``.
+        """
+        kinds = tuple(kinds)
+        if not kinds:
+            raise ValueError(
+                "FaultSchedule.generate needs at least one fault kind; "
+                f"pass a non-empty subset of {FAULT_KINDS}")
+        for k in kinds:
+            if k not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {k!r}; one of {FAULT_KINDS}")
+        if int(n_faults) < 0:
+            raise ValueError(f"n_faults must be >= 0, got {n_faults}")
+        rng = np.random.default_rng(seed)
+        hi = max(2, int(total_steps))
+        n = min(int(n_faults), hi - 1)
+        steps = sorted(rng.choice(np.arange(1, hi), size=n, replace=False))
+        order = list(rng.permutation(list(kinds)))
+        return cls([FaultEvent(step=int(s), kind=order[i % len(order)])
+                    for i, s in enumerate(steps)])
+
+    def take(self, step: int) -> Optional[FaultEvent]:
+        """The fault scheduled at ``step``, popped so it fires once."""
+        ev = self.events.pop(step, None)
+        if ev is not None:
+            self.fired.append(ev)
+        return ev
+
+    def take_kind(self, kind: str) -> List[FaultEvent]:
+        """Pop every pending event of ``kind`` regardless of step.
+
+        Boot-time faults (``corrupt_store``) fire before any tick runs,
+        so the injector drains them by kind instead of waiting for a
+        step the boot will never reach.
+        """
+        steps = [s for s, e in self.events.items() if e.kind == kind]
+        out = []
+        for s in sorted(steps):
+            ev = self.events.pop(s)
+            self.fired.append(ev)
+            out.append(ev)
+        return out
+
+    def describe(self) -> List[Dict[str, int]]:
+        pending = [dataclasses.asdict(e) for _, e in sorted(self.events.items())]
+        return [dict(d, fired=False) for d in pending] + \
+               [dict(dataclasses.asdict(e), fired=True) for e in self.fired]
+
+
+def corrupt_latest_checkpoint(directory: str) -> Optional[str]:
+    """Deterministically damage the newest committed checkpoint.
+
+    Truncates its first leaf ``.npy`` to 16 bytes — the manifest stays
+    valid, so ``latest_step`` still points at it, but ``restore()``
+    raises on the mangled array.  Exactly the shape of a crash that
+    tore a write.  Returns the damaged file's path (None when there is
+    no checkpoint to damage — an empty, missing, or junk-entry-only
+    checkpoint directory is a no-op, never a raise).
+    """
+    step = ckpt.latest_step(directory)
+    if step is None:
+        return None
+    path = os.path.join(directory, f"step_{step:08d}", "leaf_00000.npy")
+    if not os.path.exists(path):
+        return None
+    with open(path, "r+b") as f:
+        f.truncate(16)
+    return path
+
+
+def corrupt_plan_store(path: str) -> Optional[str]:
+    """Deterministically damage a serving ``PlanStore`` file.
+
+    Truncates the JSON to 16 bytes — ``PlanStore.load()`` must then
+    degrade to ``None`` (cold boot: warm fresh + re-persist), never
+    raise.  Returns the damaged path (None when there is no store yet,
+    in which case the fault is a no-op: a boot with no store is already
+    the cold path the fault forces).
+    """
+    if not path or not os.path.isfile(path):
+        return None
+    with open(path, "r+b") as f:
+        f.truncate(16)
+    return path
+
+
+class FaultInjector:
+    """The shared chaos runtime: drives serving faults off a schedule.
+
+    Deterministic by construction — every decision is a pure function
+    of ``(schedule, raise_target, raise_attempts)``, so two engines
+    built from equal seeded schedules and equal injector configs make
+    identical fault/recovery decisions (``self.log`` records each one
+    for the reproducibility asserts).
+
+    * ``begin_tick(tick)`` — called at the top of each engine tick;
+      pops the tick's event.  ``exec_raise`` arms ``raise_attempts``
+      consecutive rung-0 attempts of the ``raise_target`` executor;
+      ``straggler`` is returned for the engine to stall + meter;
+      ``corrupt_store`` (scheduled mid-run) damages the store file on
+      disk — the running engine keeps its in-memory plans, the NEXT
+      boot sees the corruption.
+    * ``should_raise(name, rung)`` — consulted by the resilience layer
+      before each executor attempt; consumes one armed raise when
+      ``name`` matches the target and the attempt is on the primary
+      rung (fallback rungs never raise: the injected fault models the
+      PRIMARY being broken, which is what a demotion must survive).
+    * ``apply_boot_faults(store_path)`` — drains every pending
+      ``corrupt_store`` event before the store is read.
+    """
+
+    def __init__(self, schedule: FaultSchedule, *,
+                 raise_target: str = "decode", raise_attempts: int = 1,
+                 straggler_s: float = 0.0,
+                 store_corruptor: Callable[[str], Optional[str]] = corrupt_plan_store):
+        self.schedule = schedule
+        self.raise_target = str(raise_target)
+        self.raise_attempts = int(raise_attempts)
+        self.straggler_s = float(straggler_s)
+        self._store_corruptor = store_corruptor
+        self._store_path: Optional[str] = None
+        self._armed = 0
+        self.log: List[Dict[str, Any]] = []
+
+    def apply_boot_faults(self, store_path: Optional[str]) -> List[str]:
+        """Fire every pending ``corrupt_store`` event; returns damaged paths."""
+        self._store_path = store_path
+        damaged = []
+        for ev in self.schedule.take_kind("corrupt_store"):
+            path = self._store_corruptor(store_path) if store_path else None
+            self.log.append({"at": "boot", "kind": ev.kind, "step": ev.step,
+                             "damaged": path})
+            if path:
+                damaged.append(path)
+        return damaged
+
+    def begin_tick(self, tick: int) -> Optional[FaultEvent]:
+        ev = self.schedule.take(tick)
+        if ev is None:
+            return None
+        if ev.kind == "exec_raise":
+            self._armed += self.raise_attempts
+            self.log.append({"at": tick, "kind": ev.kind,
+                             "armed": self.raise_attempts,
+                             "target": self.raise_target})
+        elif ev.kind == "straggler":
+            self.log.append({"at": tick, "kind": ev.kind,
+                             "stall_s": self.straggler_s})
+        elif ev.kind == "corrupt_store":
+            path = (self._store_corruptor(self._store_path)
+                    if self._store_path else None)
+            self.log.append({"at": tick, "kind": ev.kind, "damaged": path})
+        else:  # a training kind in a serving schedule: surface, don't fire
+            self.log.append({"at": tick, "kind": ev.kind, "ignored": True})
+        return ev
+
+    def should_raise(self, name: str, rung: int) -> bool:
+        if rung == 0 and self._armed > 0 and name == self.raise_target:
+            self._armed -= 1
+            self.log.append({"kind": "raise", "target": name})
+            return True
+        return False
+
+    @property
+    def pending_raises(self) -> int:
+        return self._armed

@@ -230,6 +230,23 @@ class PyramidBatcher:
                                     group_key, payload))
         return bucket
 
+    def expire(self, predicate) -> List[Any]:
+        """Remove queued requests whose payload matches ``predicate``.
+
+        The engine's deadline sweep: a request whose deadline passed
+        while waiting for a slot must leave the queue with a typed
+        timeout response instead of being admitted late.  Returns the
+        removed payloads in queue order; head-of-line order of the
+        survivors is preserved.
+        """
+        keep: Deque[_Pending] = deque()
+        out: List[Any] = []
+        for p in self._queue:
+            (out.append(p.payload) if predicate(p.payload)
+             else keep.append(p))
+        self._queue = keep
+        return out
+
     def next_batch(self, max_batch: int) -> Optional[PyramidBatch]:
         """Drain up to ``max_batch`` requests batchable with the head."""
         if not self._queue or max_batch <= 0:

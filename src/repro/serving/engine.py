@@ -35,10 +35,17 @@ The engine composes the serving-runtime subsystem:
   the bounded plan cache never churns and prefill programs are reused.
 * ``serving.metrics``     — per-bucket admission/padding/latency/retire
   counters, surfaced by ``launch/serve.py``.
+* ``serving.resilience``  — deadlines, bounded-queue admission with
+  load shedding, retry + circuit breakers with the plan degradation
+  ladder, chaos injection via ``runtime.faults.FaultInjector``
+  (``faults=`` kwarg).  Every ADMITTED request terminates with a typed
+  ``ServeResponse`` (``req.response``); sheds and deadline misses are
+  typed too, never silent drops.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
@@ -46,10 +53,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.faults import FaultInjector
 from repro.serving import aot
 from repro.serving import batcher as batcher_mod
 from repro.serving import persistence
+from repro.serving import resilience as resil_mod
 from repro.serving.metrics import ServeMetrics
+from repro.serving.resilience import (
+    AdmissionController,
+    ExecutorFailure,
+    GuardedExecutor,
+    ResilienceConfig,
+    ServeResponse,
+    ladder_of,
+)
 
 _LM_FAMILIES = ("dense", "moe", "hybrid", "ssm")
 
@@ -177,6 +194,12 @@ class Request:
     levels: Optional[Tuple[Tuple[int, int], ...]] = None  # None -> config levels
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # resilience: per-request deadline in engine ticks (None inherits the
+    # engine's ResilienceConfig.deadline_ticks); every request that
+    # reaches a terminal state carries its typed ServeResponse
+    deadline_ticks: Optional[int] = None
+    submit_tick: int = -1
+    response: Optional[ServeResponse] = None
 
 
 def _pow2_batches(slots: int) -> Tuple[int, ...]:
@@ -247,7 +270,10 @@ class ServeEngine:
                  dtype_policy: Optional[str] = None,
                  tune: Optional[str] = None,
                  buckets=None, metrics: Optional[ServeMetrics] = None,
-                 mesh=None, exact_buckets: bool = False):
+                 mesh=None, exact_buckets: bool = False,
+                 resilience: Optional[ResilienceConfig] = None,
+                 max_queue: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None):
         from repro.models import lm
 
         if cfg.family not in _LM_FAMILIES + ("vlm",):
@@ -260,7 +286,30 @@ class ServeEngine:
         self.metrics = metrics or ServeMetrics()
         self.is_vlm = cfg.family == "vlm"
         self._occupant: List[Optional[Request]] = [None] * slots
+        # the queue itself stays a deque; the BOUND is enforced by the
+        # admission controller in submit() (sheds with a typed response
+        # instead of growing without limit)
         self._queue: Deque[Request] = deque()
+        if max_queue is not None:
+            resilience = dataclasses.replace(
+                resilience or ResilienceConfig(), max_queue=max_queue)
+        self.resilience = resilience or ResilienceConfig()
+        self.faults = faults
+        eid = self.metrics._eid
+        self._admission = AdmissionController(
+            self.resilience.max_queue, engine=eid)
+        self._decode_guard = GuardedExecutor(
+            "decode",
+            lambda p, c, t: self._aot.get("decode", self._decode_jit)(p, c, t),
+            # degraded rung: bypass the AOT table and run the plain jit
+            # decode (still the warmed program in the steady state, but
+            # immune to a poisoned AOT executable)
+            demote_fn=ladder_of([lambda p, c, t: self._decode_jit(p, c, t)]),
+            policy=self.resilience, injector=faults, engine=eid)
+        self._prefill_guard = GuardedExecutor(
+            "prefill", lambda fn, *a: fn(*a),
+            policy=self.resilience, injector=faults, engine=eid)
+        self._plan_guards: Dict[int, GuardedExecutor] = {}
 
         if compile_cache_dir:
             persistence.enable_jax_compilation_cache(compile_cache_dir)
@@ -304,6 +353,12 @@ class ServeEngine:
             "buckets": [b.key for b in self.buckets],
             "mesh": plan_mod.mesh_token(mesh) if mesh is not None else None,
         }
+        # chaos: boot-time faults (corrupt_store) fire BEFORE the store
+        # is read — a damaged store must degrade to a cold warm-up +
+        # re-persist, which the meta-gated load below already does
+        # (PlanStore.load() returns None for unreadable JSON)
+        self.boot_faults: List[str] = (
+            faults.apply_boot_faults(store_path) if faults is not None else [])
         self.store = persistence.PlanStore(store_path) if store_path else None
         self.restore_report = None
         self.store_meta_mismatch = False
@@ -432,7 +487,24 @@ class ServeEngine:
         return self
 
     # -- request lifecycle -------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> Optional[ServeResponse]:
+        """Enqueue a request, or SHED it with a typed response.
+
+        Returns the shed response when admission rejects (queue at
+        ``resilience.max_queue``); None when accepted — the terminal
+        response then lands on ``req.response`` when the request
+        finishes, times out, or fails.
+        """
+        req.submit_tick = self.metrics.ticks
+        if req.deadline_ticks is None:
+            req.deadline_ticks = self.resilience.deadline_ticks
+        if not self._admission.admit(self.pending):
+            req.response = ServeResponse(
+                "shed", req.rid,
+                detail=f"queue at capacity ({self.resilience.max_queue})")
+            req.done = True
+            self.metrics.record_shed(req.rid)
+            return req.response
         if self.is_vlm:
             if req.pyramid is None:
                 raise ValueError("vlm requests need a pyramid")
@@ -443,6 +515,7 @@ class ServeEngine:
         else:
             self._queue.append(req)
         self.metrics.record_submit(req.rid)
+        return None
 
     @property
     def pending(self) -> int:
@@ -463,7 +536,72 @@ class ServeEngine:
 
     def _finish(self, req: Request):
         req.done = True
+        req.response = ServeResponse("ok", req.rid, tokens=tuple(req.out))
         self.metrics.record_retire(req.rid)
+
+    def _fail(self, req: Request, status: str, detail: str):
+        """Resolve a request with a non-ok typed response."""
+        req.done = True
+        req.response = ServeResponse(status, req.rid, detail=detail)
+        if status == "timeout":
+            self.metrics.record_deadline_miss(req.rid)
+        else:
+            self.metrics.record_exec_error(req.rid)
+
+    def _deadline_expired(self, req: Request) -> bool:
+        return (req.deadline_ticks is not None and req.submit_tick >= 0
+                and self.metrics.ticks - req.submit_tick >= req.deadline_ticks)
+
+    def _sweep_deadlines(self):
+        """Resolve every expired request — queued, bucketed, or
+        in-flight — with a typed timeout response.  Runs at the top of
+        each tick, before admission, so an expired queued request is
+        never admitted late."""
+        expired: List[Request] = []
+        if self._queue:
+            keep: Deque[Request] = deque()
+            for req in self._queue:
+                (expired if self._deadline_expired(req) else keep).append(req)
+            self._queue = keep
+        if self.batcher is not None:
+            expired.extend(self.batcher.expire(self._deadline_expired))
+        for s, req in enumerate(self._occupant):
+            if req is not None and not req.done and self._deadline_expired(req):
+                expired.append(req)
+                self._occupant[s] = None  # the cache row just goes stale
+        for req in expired:
+            self._fail(req, "timeout",
+                       f"deadline of {req.deadline_ticks} ticks exceeded "
+                       f"(submitted at tick {req.submit_tick})")
+
+    def guarded_plan(self, i: int = 0, *,
+                     policy: Optional[ResilienceConfig] = None,
+                     injector: Optional[FaultInjector] = None
+                     ) -> GuardedExecutor:
+        """The per-plan circuit breaker for warmed plan ``i`` —
+        retries, then demotes down ``MsdaPlan.fallback()`` (fused ->
+        per-level -> ref; sparse -> dense) and probes the primary on
+        the half-open schedule.  Built on first use; clean runs build
+        nothing."""
+        if i not in self._plan_guards:
+            self._plan_guards[i] = resil_mod.guard_plan(
+                self.plans[i], policy or self.resilience, mesh=self.mesh,
+                injector=injector if injector is not None else self.faults,
+                engine=self.metrics._eid)
+        return self._plan_guards[i]
+
+    def resilience_state(self) -> Dict[str, Any]:
+        """Machine-readable resilience block (smoke + bench artifact)."""
+        guards = [self._decode_guard, self._prefill_guard,
+                  *self._plan_guards.values()]
+        out = resil_mod.resilience_snapshot(guards, self._admission)
+        out["deadline_misses"] = self.metrics.deadline_misses
+        out["exec_errors"] = self.metrics.exec_errors
+        out["stragglers"] = self.metrics.stragglers
+        out["boot_faults"] = list(self.boot_faults)
+        if self.faults is not None:
+            out["fault_log"] = [dict(d) for d in self.faults.log]
+        return out
 
     def _splice_slot(self, new_cache, src_row: int, slot: int):
         """Copy row ``src_row`` of a (possibly batched) prefill cache
@@ -486,10 +624,15 @@ class ServeEngine:
         free = self._free_slots()
         while free and self._queue:
             req = self._queue.popleft()
-            s = free.pop(0)
             L = len(req.prompt)
             fn = self._aot.get(("prefill", 1, L), self._prefill_jit)
-            logits, cache1 = fn(self.params, jnp.asarray(req.prompt[None, :]))
+            try:
+                logits, cache1 = self._prefill_guard.call(
+                    fn, self.params, jnp.asarray(req.prompt[None, :]))
+            except ExecutorFailure as e:
+                self._fail(req, "error", str(e))
+                continue
+            s = free.pop(0)
             self._splice_slot(cache1, 0, s)
             req.out.append(self._sample(np.asarray(logits)[0]))
             if len(req.out) >= req.max_new:
@@ -519,8 +662,14 @@ class ServeEngine:
                     [tokens, np.zeros((pad, tokens.shape[1]), tokens.dtype)])
             key = ("prefill", batch.bucket.levels, Bp, tokens.shape[1])
             fn = self._aot.get(key) or self._vlm_prefill(batch.bucket)
-            logits, cache_b = fn(self.params, jnp.asarray(feats),
-                                 jnp.asarray(ratios), jnp.asarray(tokens))
+            try:
+                logits, cache_b = self._prefill_guard.call(
+                    fn, self.params, jnp.asarray(feats),
+                    jnp.asarray(ratios), jnp.asarray(tokens))
+            except ExecutorFailure as e:
+                for req in reqs:
+                    self._fail(req, "error", str(e))
+                continue
             if self.mesh is not None:
                 # a mesh-carrying prefill commits its outputs to the
                 # mesh (NamedSharding); decode is a single-device AOT
@@ -549,9 +698,18 @@ class ServeEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def step(self):
-        """One engine tick: retire, admit (into freed slots), batched decode."""
+        """One engine tick: faults, retire, deadline sweep, admit
+        (into freed slots), batched decode (guarded)."""
+        if self.faults is not None:
+            ev = self.faults.begin_tick(self.metrics.ticks)
+            if ev is not None and ev.kind == "straggler":
+                if self.faults.straggler_s > 0:
+                    time.sleep(self.faults.straggler_s)
+                self.metrics.record_straggler()
         self._retire()
+        self._sweep_deadlines()
         self._admit()
+        self._admission.observe(self.pending)
         tok = np.zeros((self.slots,), np.int32)
         active = [s for s, r in enumerate(self._occupant)
                   if r is not None and not r.done]
@@ -559,8 +717,18 @@ class ServeEngine:
             tok[s] = self._occupant[s].out[-1]
         if not active:
             return False
-        fn = self._aot.get("decode", self._decode_jit)
-        logits, self.cache = fn(self.params, self.cache, jnp.asarray(tok))
+        try:
+            logits, self.cache = self._decode_guard.call(
+                self.params, self.cache, jnp.asarray(tok))
+        except ExecutorFailure as e:
+            # the whole batched step failed past every retry and rung:
+            # resolve the in-flight requests with typed errors (the tick
+            # still counts — time passed)
+            self.metrics.record_tick()
+            for s in active:
+                self._fail(self._occupant[s], "error", str(e))
+                self._occupant[s] = None
+            return True
         logits = np.asarray(logits)
         self.metrics.record_tick()
         self.metrics.record_decode(len(active))

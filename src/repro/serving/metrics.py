@@ -14,15 +14,27 @@ registry (``serve.*`` series, labeled per engine instance) so
 ``--metrics-out`` exports the same numbers; ``snapshot()`` additionally
 embeds the plan-execution block (plan-cache / winner-cache hit rates,
 Pallas launches per direction) from ``kernels/plan.py``.
+
+Memory is bounded for arbitrarily long serving runs: raw latency /
+queue-wait samples live in an ``obs.NumericWindow`` ring (exact
+count/mean/max, windowed p50 — the same contract registry histograms
+already use), and the per-request submit/admit tick maps are dropped on
+retire.  Resilience events (PR 10: sheds, deadline misses, executor
+errors) are plain exact counters surfaced under ``snapshot()["shed"]``
+/ ``["deadline_misses"]`` and the ``serve.resilience.*`` registry
+series.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 from repro.obs import registry as _obs
 
 _ENGINE_IDS = itertools.count()
+
+# raw per-request samples kept for percentiles; counters stay exact
+_SAMPLE_WINDOW = 4096
 
 
 def _bucket_row() -> Dict[str, int]:
@@ -38,16 +50,23 @@ class ServeMetrics:
         self.admitted = 0
         self.retired = 0
         self.decode_tokens = 0
+        self.shed = 0
+        self.deadline_misses = 0
+        self.exec_errors = 0
+        self.stragglers = 0
         self.buckets: Dict[str, Dict[str, int]] = {}
         self._submit_tick: Dict[int, int] = {}
         self._admit_tick: Dict[int, int] = {}
-        self.latency_ticks: List[int] = []
-        self.queue_ticks: List[int] = []
+        self.latency_ticks = _obs.NumericWindow(_SAMPLE_WINDOW)
+        self.queue_ticks = _obs.NumericWindow(_SAMPLE_WINDOW)
         # registry mirror: one label value per engine instance so two
         # engines in one process stay separable in the export
         self._eid = f"e{next(_ENGINE_IDS)}"
         self._events = _obs.counter(
             "serve.events", help="engine lifecycle events by type")
+        self._resil = _obs.counter(
+            "serve.resilience.events",
+            help="resilience events by type (shed/deadline_miss/retry/...)")
         self._lat = _obs.histogram(
             "serve.latency_ticks", help="submit->retire latency in ticks")
         self._queue = _obs.histogram(
@@ -88,20 +107,44 @@ class ServeMetrics:
     def record_retire(self, rid: int) -> None:
         self.retired += 1
         self._events.inc(engine=self._eid, type="retire")
-        start = self._admit_tick.get(rid, self._submit_tick.get(rid))
+        # pop, not get: the per-request maps must not outlive the request
+        admit = self._admit_tick.pop(rid, None)
+        submit = self._submit_tick.pop(rid, None)
+        start = admit if admit is not None else submit
         if start is not None:
             lat = self.ticks - start
             self.latency_ticks.append(lat)
             self._lat.observe(lat, engine=self._eid)
 
+    # -- resilience events (PR 10) ----------------------------------------
+    # shed's obs mirror lives in resilience.AdmissionController (the
+    # component that makes the decision); here it is the exact counter
+    def record_shed(self, rid: int) -> None:
+        self.shed += 1
+        self._submit_tick.pop(rid, None)
+
+    def record_deadline_miss(self, rid: int) -> None:
+        self.deadline_misses += 1
+        self._resil.inc(engine=self._eid, type="deadline_miss")
+        self._submit_tick.pop(rid, None)
+        self._admit_tick.pop(rid, None)
+
+    def record_exec_error(self, rid: int) -> None:
+        self.exec_errors += 1
+        self._resil.inc(engine=self._eid, type="exec_error")
+        self._submit_tick.pop(rid, None)
+        self._admit_tick.pop(rid, None)
+
+    def record_straggler(self) -> None:
+        self.stragglers += 1
+        self._resil.inc(engine=self._eid, type="straggler")
+
     # -- views -------------------------------------------------------------
     @staticmethod
-    def _summ(xs: List[int]) -> Optional[Dict[str, float]]:
+    def _summ(xs: "_obs.NumericWindow") -> Optional[Dict[str, float]]:
         if not xs:
             return None
-        s = sorted(xs)
-        return {"p50": float(s[len(s) // 2]), "max": float(s[-1]),
-                "mean": sum(s) / len(s)}
+        return {"p50": xs.p50, "max": xs.max, "mean": xs.mean}
 
     def snapshot(self) -> Dict[str, Any]:
         buckets = {}
@@ -115,6 +158,8 @@ class ServeMetrics:
             "ticks": self.ticks, "submitted": self.submitted,
             "admitted": self.admitted, "retired": self.retired,
             "decode_tokens": self.decode_tokens, "buckets": buckets,
+            "shed": self.shed, "deadline_misses": self.deadline_misses,
+            "exec_errors": self.exec_errors, "stragglers": self.stragglers,
             "latency_ticks": self._summ(self.latency_ticks),
             "queue_ticks": self._summ(self.queue_ticks),
             "plan_execution": plan_mod.execution_telemetry(),
@@ -138,6 +183,11 @@ class ServeMetrics:
             lines.append(
                 f"  latency ticks p50={lt['p50']:.0f} max={lt['max']:.0f}"
                 + (f"  queue p50={qt['p50']:.0f} max={qt['max']:.0f}" if qt else ""))
+        if s["shed"] or s["deadline_misses"] or s["exec_errors"] or s["stragglers"]:
+            lines.append(
+                f"  resilience: {s['shed']} shed, {s['deadline_misses']} deadline "
+                f"misses, {s['exec_errors']} exec errors, "
+                f"{s['stragglers']} stragglers")
         if s["buckets"]:
             lines.append("  bucket                    admitted  batches  pad%")
             for key, row in sorted(s["buckets"].items()):

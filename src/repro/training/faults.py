@@ -1,143 +1,19 @@
 """Deterministic fault injection for the training harness.
 
-Every recovery path the harness has must be testable under the
-4-virtual-device conftest, so faults are *data*, not monkeypatches: a
-:class:`FaultSchedule` is an explicit (or seeded) list of
-:class:`FaultEvent`, each fired exactly once when the harness reaches
-its step.  Because the schedule, the data pipeline (pure function of
-``(seed, step)``) and the checkpoint cadence are all deterministic, two
-runs with the same schedule make IDENTICAL recovery decisions — which
-``tests/test_checkpoint_ft.py`` asserts literally.
-
-Kinds:
-
-* ``"host_loss"`` — raised BEFORE the step runs: the process "dies" and
-  the harness restores the newest checkpoint (losing any steps since).
-* ``"preempt"`` — raised AFTER the step computed but BEFORE it commits:
-  the classic mid-step preemption; the finished step's work is lost.
-* ``"corrupt_ckpt"`` — truncates the newest on-disk checkpoint, then
-  dies like ``host_loss``; recovery must fall back to the PREVIOUS
-  step (``checkpoint.manager.restore_latest_valid``).
+The implementation moved to :mod:`repro.runtime.faults` when serving
+grew its own fault kinds (PR 10) — one seeded, fire-once
+``FaultSchedule`` contract now drives both the training harness's
+recovery paths and the serving engine's resilience layer.  This module
+stays as the training-facing surface: it re-exports the shared types
+and keeps ``FAULT_KINDS`` pinned to the TRAINING subset so existing
+callers (and seeded schedules) see exactly the namespace they always
+did.  See the shared module's docstring for the kind semantics.
 """
-from __future__ import annotations
-
-import dataclasses
-import os
-from typing import Dict, List, Optional, Sequence
-
-import numpy as np
-
-from repro.checkpoint import manager as ckpt
-
-FAULT_KINDS = ("host_loss", "preempt", "corrupt_ckpt")
-
-
-class HostLoss(RuntimeError):
-    """Simulated host/process loss (the harness restores and resumes)."""
-
-
-class Preemption(RuntimeError):
-    """Simulated mid-step preemption (the in-flight step is discarded)."""
-
-
-@dataclasses.dataclass(frozen=True)
-class FaultEvent:
-    step: int
-    kind: str
-
-    def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
-            raise ValueError(f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
-        if self.step < 0:
-            raise ValueError(f"fault step must be >= 0, got {self.step}")
-
-
-class FaultSchedule:
-    """An ordered, fire-once schedule of injected faults.
-
-    Each event fires the FIRST time the harness reaches its step —
-    replayed steps after a recovery do NOT re-trigger it (a real host
-    doesn't die twice from one failure).  ``describe()`` returns the
-    schedule as plain dicts for telemetry.
-    """
-
-    def __init__(self, events: Sequence[FaultEvent] = ()):
-        self.events: Dict[int, FaultEvent] = {}
-        for e in events:
-            if e.step in self.events:
-                raise ValueError(f"two faults scheduled at step {e.step}")
-            self.events[e.step] = e
-        self.fired: List[FaultEvent] = []
-
-    @classmethod
-    def from_spec(cls, spec: str) -> "FaultSchedule":
-        """Parse the CLI format: ``"host_loss@5,corrupt_ckpt@9"``."""
-        events = []
-        for tok in spec.split(","):
-            tok = tok.strip()
-            if not tok:
-                continue
-            kind, _, step = tok.partition("@")
-            if not step:
-                raise ValueError(f"fault {tok!r} is not kind@step")
-            events.append(FaultEvent(step=int(step), kind=kind))
-        return cls(events)
-
-    @classmethod
-    def generate(cls, seed: int, total_steps: int, *, n_faults: int = 2,
-                 kinds: Sequence[str] = FAULT_KINDS) -> "FaultSchedule":
-        """Seeded random schedule — same seed, same faults, every run.
-
-        Steps are drawn without replacement from ``[1, total_steps)``
-        (step 0 has no checkpoint to recover to yet), kinds cycle
-        through a seeded permutation of ``kinds``.
-        """
-        kinds = tuple(kinds)
-        if not kinds:
-            raise ValueError(
-                "FaultSchedule.generate needs at least one fault kind; "
-                f"pass a non-empty subset of {FAULT_KINDS}")
-        for k in kinds:
-            if k not in FAULT_KINDS:
-                raise ValueError(f"unknown fault kind {k!r}; one of {FAULT_KINDS}")
-        if int(n_faults) < 0:
-            raise ValueError(f"n_faults must be >= 0, got {n_faults}")
-        rng = np.random.default_rng(seed)
-        hi = max(2, int(total_steps))
-        n = min(int(n_faults), hi - 1)
-        steps = sorted(rng.choice(np.arange(1, hi), size=n, replace=False))
-        order = list(rng.permutation(list(kinds)))
-        return cls([FaultEvent(step=int(s), kind=order[i % len(order)])
-                    for i, s in enumerate(steps)])
-
-    def take(self, step: int) -> Optional[FaultEvent]:
-        """The fault scheduled at ``step``, popped so it fires once."""
-        ev = self.events.pop(step, None)
-        if ev is not None:
-            self.fired.append(ev)
-        return ev
-
-    def describe(self) -> List[Dict[str, int]]:
-        pending = [dataclasses.asdict(e) for _, e in sorted(self.events.items())]
-        return [dict(d, fired=False) for d in pending] + \
-               [dict(dataclasses.asdict(e), fired=True) for e in self.fired]
-
-
-def corrupt_latest_checkpoint(directory: str) -> Optional[str]:
-    """Deterministically damage the newest committed checkpoint.
-
-    Truncates its first leaf ``.npy`` to 16 bytes — the manifest stays
-    valid, so ``latest_step`` still points at it, but ``restore()``
-    raises on the mangled array.  Exactly the shape of a crash that
-    tore a write.  Returns the damaged file's path (None when there is
-    no checkpoint to damage).
-    """
-    step = ckpt.latest_step(directory)
-    if step is None:
-        return None
-    path = os.path.join(directory, f"step_{step:08d}", "leaf_00000.npy")
-    if not os.path.exists(path):
-        return None
-    with open(path, "r+b") as f:
-        f.truncate(16)
-    return path
+from repro.runtime.faults import (  # noqa: F401
+    TRAINING_FAULT_KINDS as FAULT_KINDS,
+    FaultEvent,
+    FaultSchedule,
+    HostLoss,
+    Preemption,
+    corrupt_latest_checkpoint,
+)

@@ -15,7 +15,7 @@ the recovery/replan log with latencies.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 from repro.obs import bench as _bench
 from repro.obs import registry as _obs
@@ -30,11 +30,19 @@ class StepTimeRecorder:
     """
 
     def __init__(self, *, tokens_per_step: int = 0,
-                 config: Optional[Dict[str, Any]] = None):
+                 config: Optional[Dict[str, Any]] = None,
+                 window: int = 4096):
         self.tokens_per_step = int(tokens_per_step)
         self.config = dict(config or {})
-        self.steps: List[Dict[str, Any]] = []
-        self.events: List[Dict[str, Any]] = []
+        # bounded rings (arbitrarily long runs must not grow host
+        # memory): raw step/event rows are windowed to the last
+        # ``window`` entries — headline scalars stay EXACT via the
+        # running aggregates below; the p50 and the trajectory/events
+        # blocks of the payload are windowed views
+        self.steps: _obs.EventWindow = _obs.EventWindow(window)
+        self.events: _obs.EventWindow = _obs.EventWindow(window)
+        self._wall = _obs.NumericWindow(window)
+        self._event_counts: Dict[str, int] = {}
         self._created = time.time()
         # registry mirror (process-wide obs substrate)
         self._step_hist = _obs.histogram(
@@ -49,6 +57,7 @@ class StepTimeRecorder:
         if loss is not None:
             row["loss"] = float(loss)
         self.steps.append(row)
+        self._wall.append(float(wall_s))
         self._step_hist.observe(float(wall_s))
 
     def record_event(self, kind: str, *, step: int, latency_s: float = 0.0,
@@ -64,24 +73,26 @@ class StepTimeRecorder:
         for k, v in extra.items():
             row.setdefault(k, v)
         self.events.append(row)
+        self._event_counts[str(kind)] = self._event_counts.get(str(kind), 0) + 1
         self._event_ctr.inc(kind=str(kind))
 
     # -- reporting --------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
-        walls = sorted(r["wall_s"] for r in self.steps)
-        n = len(walls)
-        total = sum(walls)
+        # counts/total/mean/max are exact over the full run; p50 and
+        # recovery_latency_s come from the bounded window (the last
+        # ``window`` steps/events)
+        n = self._wall.count
+        total = self._wall.total
         recoveries = [e for e in self.events if e["kind"] == "recovery"]
-        replans = [e for e in self.events if e["kind"] == "replan"]
         out: Dict[str, Any] = {
             "steps": n,
             "total_step_wall_s": total,
-            "mean_step_s": (total / n) if n else 0.0,
-            "p50_step_s": (walls[n // 2] if n else 0.0),
-            "max_step_s": (walls[-1] if n else 0.0),
-            "recoveries": len(recoveries),
+            "mean_step_s": self._wall.mean,
+            "p50_step_s": self._wall.p50,
+            "max_step_s": self._wall.max,
+            "recoveries": self._event_counts.get("recovery", 0),
             "recovery_latency_s": [e["latency_s"] for e in recoveries],
-            "replan_count": len(replans),
+            "replan_count": self._event_counts.get("replan", 0),
         }
         if self.tokens_per_step and total > 0:
             out["tokens_per_sec"] = self.tokens_per_step * n / total

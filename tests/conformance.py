@@ -410,3 +410,78 @@ def test_new_backend_is_auto_covered():
         assert set(BACKENDS) <= set(registry.list_backends())
     finally:
         registry.unregister_backend("conformance-probe")
+
+
+# --------------------------------------------------------------------------
+# degradation-ladder conformance: every fallback rung vs its primary
+# --------------------------------------------------------------------------
+# The serving resilience layer (``serving/resilience.py``) demotes a
+# failing plan down ``MsdaPlan.fallback()`` — these tiers pin what a
+# demotion costs numerically, per backend x policy (and, via BACKENDS,
+# auto-cover any future ``register_backend`` the moment it lands):
+#
+# * same-backend rungs (fused -> per-level, sparse -> dense identity
+#   with a keep-everything k) are **bitwise** — the rung reads the same
+#   slab bytes and accumulates in the same dtype, only launch structure
+#   changes;
+# * the terminal ``ref`` rung matches within the documented per-policy
+#   forward tiers (FWD_TOL) — same budget as any backend-vs-oracle gap;
+# * every rung is a heuristic build: zero autotune races, never
+#   persisted as a winner, and the chain terminates at ``ref``.
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fallback_ladder_rungs_are_consistent(backend, policy):
+    value, loc, attn = _inputs()
+    plan_mod.reset_autotune_stats()
+    primary = msda_plan(_spec(policy, fuse="on"), backend=backend,
+                        tune="heuristic")
+    chain = primary.fallback_chain()
+    if primary.backend == "ref":
+        assert not chain and primary.fallback() is None
+        return
+    assert chain, f"{primary.rung_label()} has no fallback rung"
+    assert chain[-1].backend == "ref", [r.rung_label() for r in chain]
+    assert chain[-1].fallback() is None, "ladder does not terminate"
+    prev, prev_out = primary, np.asarray(primary(value, loc, attn))
+    for rung in chain:
+        assert rung.tune == "heuristic", rung.describe()
+        out = np.asarray(rung(value, loc, attn))
+        if rung.backend == prev.backend:
+            np.testing.assert_array_equal(
+                out, prev_out,
+                err_msg=f"{prev.rung_label()} -> {rung.rung_label()} "
+                        f"must be bitwise (same backend, same slab bytes)")
+        else:
+            np.testing.assert_allclose(
+                out, prev_out, rtol=0, atol=FWD_TOL[policy],
+                err_msg=f"{prev.rung_label()} -> {rung.rung_label()}")
+        prev, prev_out = rung, out
+    # demotions must never race or persist winners
+    assert plan_mod.autotune_stats()["raced"] == 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fallback_sparse_demotes_to_dense(backend):
+    """A top-k plan's first rung drops sparsity (and Morton order) on
+    the SAME backend.  With a keep-every-cell ``sparsity_k`` the prune
+    is a no-op, so the demotion is numerically the dense plan — the
+    fp32 tier bounds the renormalisation round-trip.  (The lossy gap of
+    a truly pruned primary is covered by the masked-renormalised oracle
+    tests above; a demotion never has to reproduce the loss.)"""
+    L = len(LEVELS)
+    spec = _spec("float32", sparsity="topk", sparsity_k=L * P)
+    primary = msda_plan(spec, backend=backend, tune="heuristic")
+    if primary.tuning.sparsity != "topk":
+        pytest.skip(f"{backend} does not execute top-k plans")
+    rung = primary.fallback()
+    assert rung is not None and rung.backend == primary.backend
+    assert rung.tuning.sparsity == "dense"
+    assert rung.tuning.query_order == "identity"
+    value, loc, attn = _inputs()
+    np.testing.assert_allclose(
+        np.asarray(rung(value, loc, attn)),
+        np.asarray(primary(value, loc, attn)),
+        rtol=0, atol=FWD_TOL["float32"],
+        err_msg=f"{primary.rung_label()} -> {rung.rung_label()}")

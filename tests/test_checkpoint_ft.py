@@ -229,6 +229,32 @@ def test_restore_latest_valid_all_corrupt_raises(tmp_path):
     assert "5" in str(ei.value)  # names what it skipped
 
 
+def test_corrupt_latest_checkpoint_empty_dir_returns_none(tmp_path):
+    """No checkpoints yet -> nothing to corrupt, and no crash.
+
+    Regression: the chaos harness calls ``corrupt_latest_checkpoint``
+    unconditionally at boot; on a fresh run the checkpoint dir is empty
+    (or absent) and the injector must report 'no-op', not raise.
+    """
+    assert training.corrupt_latest_checkpoint(str(tmp_path)) is None
+    assert training.corrupt_latest_checkpoint(str(tmp_path / "missing")) is None
+
+
+def test_corrupt_latest_checkpoint_skips_junk_entries(tmp_path):
+    """Non-``step_NNN`` entries (and ``step_final``) must not break the
+    latest-step scan — only numeric step dirs are candidates."""
+    (tmp_path / "tmp_write").mkdir()
+    (tmp_path / "step_final").mkdir()
+    (tmp_path / "step_final" / "manifest.json").write_text("{}")
+    (tmp_path / "notes.txt").write_text("x")
+    # junk only -> still nothing corruptible
+    assert training.corrupt_latest_checkpoint(str(tmp_path)) is None
+    s = _state()
+    ckpt.save(s, str(tmp_path), 7)
+    hit = training.corrupt_latest_checkpoint(str(tmp_path))
+    assert hit is not None and "step_00000007" in hit
+
+
 def test_fault_schedule_spec_and_fire_once():
     fs = training.FaultSchedule.from_spec("host_loss@5, corrupt_ckpt@9")
     assert fs.take(4) is None
